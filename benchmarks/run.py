@@ -1,0 +1,175 @@
+"""Benchmark harness: one section per paper table/analysis.
+
+  conv_ccr     - paper Sec. 2.1.4 / 2.2.4 / 2.3.4 numeric intuitions (Algs 1-3)
+  fc_ccr       - paper Sec. 3.1.4 / 3.2.4 numeric intuitions (Algs 4-5)
+  kernels      - wall-time microbenches of the Pallas kernels vs refs (CPU
+                 interpret mode: correctness-path timing, not TPU perf)
+  schedule_sim - closed forms vs executed-schedule word counts
+  roofline     - per-cell roofline terms from experiments/dryrun.json
+
+Prints ``name,us_per_call,derived`` CSV rows as required.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, iters=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_conv_ccr():
+    from repro.core import ccr
+    from repro.core.machine import MANTICORE
+
+    s = ccr.ConvShape(W_I=32, D_I=128, D_O=128, F=3, S=1, P=1)
+    rows = []
+    t0 = time.perf_counter()
+    a1 = ccr.alg1_traffic(s)
+    rows.append(("conv_alg1_ccr_macword", a1.ccr, "paper:8.9"))
+    for prec, want in (("sp", 141.8), ("dp", 87.8)):
+        stack = ccr.alg2_max_stack(s, MANTICORE, prec)
+        rows.append((f"conv_alg2_ccr_{prec}", ccr.alg2_traffic(s, stack).ccr,
+                     f"paper:{want};stack={stack}"))
+    for prec, want in (("sp", 541.4), ("dp", 540.6)):
+        stack = ccr.alg3_max_stack(s, MANTICORE, prec)
+        rows.append((f"conv_alg3_offchip_ccr_{prec}",
+                     ccr.alg3_ccr_offchip_as_quoted(s, stack),
+                     f"paper:{want};stack={stack}"))
+        rows.append((f"conv_alg3_eq10_ccr_{prec}",
+                     ccr.alg3_traffic(s, stack).ccr_offchip,
+                     "faithful-eq10"))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    return [(n, us, f"{v:.2f};{d}") for n, v, d in rows]
+
+
+def bench_fc_ccr():
+    from repro.core import ccr
+    from repro.core.machine import MANTICORE
+
+    rows = []
+    t0 = time.perf_counter()
+    for prec, do_max, want in (("sp", 768, 30.7), ("dp", 384, 29.5)):
+        s = ccr.FCShape(W_I=7, D_I=512, D_O=do_max, B=32)
+        cap = ccr.alg45_max_stack(s, MANTICORE, prec)
+        rows.append((f"fc_alg4_ccr_{prec}", ccr.alg4_ccr(s),
+                     f"paper:{want};do_max={cap}"))
+    s = ccr.FCShape(W_I=7, D_I=512, D_O=4096, B=32)
+    for prec, stack, want in (("sp", 768, 30.6), ("dp", 384, 29.5)):
+        rows.append((f"fc_alg5_ccr_{prec}", ccr.alg5_ccr(s, stack),
+                     f"paper:{want};stack={stack}"))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    return [(n, us, f"{v:.2f};{d}") for n, v, d in rows]
+
+
+def bench_schedule_sim():
+    from repro.core import ccr
+    from repro.core import schedule_sim as sim
+
+    s = ccr.ConvShape(W_I=32, D_I=128, D_O=128, F=3, S=1, P=1)
+    fc = ccr.FCShape(W_I=7, D_I=512, D_O=4096, B=32)
+    rows = []
+    t0 = time.perf_counter()
+    pairs = [
+        ("sim_alg1", sim.simulate_alg1(s), ccr.alg1_traffic(s)),
+        ("sim_alg2", sim.simulate_alg2(s, 24), ccr.alg2_traffic(s, 24)),
+        ("sim_alg3", sim.simulate_alg3(s, 23), ccr.alg3_traffic(s, 23)),
+        ("sim_alg4", sim.simulate_alg4(fc), ccr.alg4_traffic(fc)),
+        ("sim_alg5", sim.simulate_alg5(fc, 768), ccr.alg5_traffic(fc, 768)),
+    ]
+    us = (time.perf_counter() - t0) * 1e6 / len(pairs)
+    for name, got, want in pairs:
+        rows.append((name, us, f"match={got == want};ccr={got.ccr:.2f}"))
+    return rows
+
+
+def bench_kernels():
+    from repro.kernels.conv2d import conv2d, conv2d_ref
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    from repro.kernels.matmul import fc_matmul, fc_matmul_ref
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    x = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+    rows.append(("matmul_pallas_interp",
+                 _time(lambda: fc_matmul(x, w, block_m=64, block_n=64, block_k=64)),
+                 "alg5-kernel"))
+    rows.append(("matmul_ref_xla", _time(lambda: fc_matmul_ref(x, w)), "oracle"))
+
+    xi = jnp.asarray(rng.standard_normal((16, 16, 32)), jnp.float32)
+    f = jnp.asarray(rng.standard_normal((3, 3, 32, 32)), jnp.float32)
+    rows.append(("conv2d_pallas_interp",
+                 _time(lambda: conv2d(xi, f, padding=1, block_do=16, block_di=16)),
+                 "alg2-kernel"))
+    rows.append(("conv2d_ref_xla",
+                 _time(lambda: conv2d_ref(xi, f, padding=1)), "oracle"))
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    rows.append(("flash_attn_pallas_interp",
+                 _time(lambda: flash_attention(q, k, v, block_q=64, block_kv=64)),
+                 "blockwise"))
+    rows.append(("flash_attn_ref_xla",
+                 _time(lambda: attention_ref(q, k, v)), "oracle"))
+    return rows
+
+
+def bench_roofline():
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun.json")
+    if not os.path.exists(path):
+        return [("roofline_table", 0.0, "missing:experiments/dryrun.json (run dryrun first)")]
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, res in sorted(results.items()):
+        if not res.get("ok"):
+            rows.append((f"roofline:{key}", 0.0, f"FAILED:{str(res.get('error','?'))[:60]}"))
+            continue
+        r = res["roofline"]
+        rows.append((
+            f"roofline:{key}", res.get("compile_seconds", 0) * 1e6,
+            f"bound={r['bottleneck']};tC={r['t_compute']:.2e};tM={r['t_memory']:.2e};"
+            f"tX={r['t_collective']:.2e};frac={r['roofline_fraction']:.4f}",
+        ))
+    return rows
+
+
+SECTIONS = {
+    "conv_ccr": bench_conv_ccr,
+    "fc_ccr": bench_fc_ccr,
+    "schedule_sim": bench_schedule_sim,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in SECTIONS.items():
+        if only and name != only:
+            continue
+        for row, us, derived in fn():
+            print(f"{row},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

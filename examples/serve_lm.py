@@ -1,0 +1,68 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuation tokens against the KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 16
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.models.module import init_params
+from repro.models.registry import get_family
+from repro.runtime.serve import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    fam = get_family(cfg.family)
+    params = init_params(fam.param_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    max_seq = args.prompt_len + args.gen
+
+    prefill = jax.jit(make_prefill_step(cfg, max_seq, "float32", "float32"))
+    decode = jax.jit(make_decode_step(cfg, "float32"))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+                          jnp.int32)
+
+    t0 = time.time()
+    cache, logits = prefill(params, {"tokens": prompts})
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1], -1)
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        cache, logits = decode(params, cache, tok[:, None], args.prompt_len + i)
+        tok = jnp.argmax(logits[:, -1], -1)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.stack(out, 1))
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
+    print(f"decode:  {args.gen-1} steps x {args.batch} seqs in {t_decode*1e3:.1f} ms "
+          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: {gen[b].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,326 @@
+"""HLO-text cost analyzer with while-loop trip-count handling.
+
+XLA's built-in HloCostAnalysis (what ``compiled.cost_analysis()`` reports on
+the CPU backend) visits each while body ONCE, so lax.scan-based programs (layer
+stacks, gradient accumulation, token chunks) under-report FLOPs/bytes by the
+trip count.  This analyzer parses the optimized HLO text and aggregates
+bottom-up:
+
+  * dot/convolution FLOPs from operand/result shapes;
+  * bytes accessed under an *ideal-fusion (TPU-like) model*: only ops that
+    must touch HBM on a well-fused TPU program are charged — dot/conv
+    operands+results (weight/activation streaming), gather/scatter
+    (embeddings, MoE dispatch), dynamic-(update-)slice (KV caches), copy/
+    transpose/concatenate materializations, and collective payloads.
+    Elementwise/convert/broadcast chains are assumed fused (register/VMEM
+    resident).  CPU-backend kLoop micro-fusions would otherwise inflate
+    bytes by the fusion-chain depth; entry argument/output bytes are added
+    separately by the caller (from compiled.memory_analysis());
+  * collective result bytes per category (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute);
+  * while bodies multiplied by ``known_trip_count`` backend_config
+    annotations (scan loops carry them; unannotated loops count once and
+    are reported in ``unknown_trip_whiles``).
+
+All numbers are PER DEVICE: the post-SPMD module has shard shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*\s*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_META_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+# Ops charged HBM bytes under the ideal-fusion model (see module docstring).
+# reduce/reduce-window/dynamic-slice/gather/scatter/DUS have special rules.
+_HBM_OPS = {"dot", "convolution", "copy", "transpose", "concatenate",
+            "sort", "reverse"}
+
+
+def shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _num_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict | None = None
+    unknown_trip_whiles: int = 0
+    by_op: dict | None = None  # op -> [flops, bytes] attribution
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in COLLECTIVES}
+        if self.by_op is None:
+            self.by_op = {}
+
+    def bump(self, op: str, flops: float = 0.0, bytes: float = 0.0):
+        self.flops += flops
+        self.bytes += bytes
+        e = self.by_op.setdefault(op, [0.0, 0.0])
+        e[0] += flops
+        e[1] += bytes
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in COLLECTIVES:
+            self.coll[k] += mult * other.coll[k]
+        for op, (f, b) in other.by_op.items():
+            e = self.by_op.setdefault(op, [0.0, 0.0])
+            e[0] += mult * f
+            e[1] += mult * b
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+def _balanced(text: str, start: int) -> int:
+    """Index just past the ')' matching the '(' at ``start``."""
+    depth = 0
+    for j in range(start, len(text)):
+        if text[j] == "(":
+            depth += 1
+        elif text[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(text)
+
+
+def _split_operands(line: str, op_end: int) -> tuple[list[str], str]:
+    """Operand %names inside the first balanced (...) after the opcode."""
+    i = line.find("(", op_end)
+    if i < 0:
+        return [], ""
+    j = _balanced(line, i)
+    inner = line[i + 1 : j - 1]
+    attrs = line[j:]
+    return re.findall(r"%([\w.\-]+)", inner), attrs
+
+
+def parse_module(hlo_text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    entry_name = None
+    cur: list[Instr] | None = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = []
+            comps[m.group(2)] = cur
+            if m.group(1):
+                entry_name = m.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mn = _NAME_RE.match(line)
+        if not mn:
+            continue
+        name = mn.group(1)
+        rest_at = mn.end()
+        # Shape: either a (tuple ...) — may contain /*index=N*/ comments —
+        # or a plain dtype[dims]{layout} token.
+        if rest_at < len(line) and line[rest_at] == "(":
+            shape_end = _balanced(line, rest_at)
+        else:
+            ms = re.match(r"\S+", line[rest_at:])
+            if not ms:
+                continue
+            shape_end = rest_at + ms.end()
+        shape = line[rest_at:shape_end]
+        mo = _OPCODE_RE.match(line[shape_end:])
+        if not mo:
+            continue
+        op = mo.group(1)
+        operands, attrs = _split_operands(line, shape_end + mo.end())
+        cur.append(Instr(name, shape, op, operands, attrs))
+    comps["__entry__"] = comps.get(entry_name, [])
+    return comps
+
+
+def _dot_flops(instr: Instr, env: dict[str, str]) -> float:
+    out_elems = _num_elems(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    lhs_shape = env.get(instr.operands[0]) if instr.operands else None
+    if not m or not lhs_shape:
+        return 2.0 * out_elems  # degenerate fallback
+    dims = shape_dims(lhs_shape)
+    if not dims:
+        return 2.0 * out_elems
+    lhs_dims = dims[0][1]
+    contract = 1
+    for c in m.group(1).split(","):
+        if c:
+            ci = int(c)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, env: dict[str, str]) -> float:
+    out_elems = _num_elems(instr.shape)
+    rhs_shape = env.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    if not rhs_shape:
+        return 2.0 * out_elems
+    dims = shape_dims(rhs_shape)[0][1]
+    # dim_labels ...->...: kernel = spatial dims * input features
+    m = re.search(r"dim_labels=\w+_(\w+)->", instr.attrs)
+    kernel_elems = 1
+    if m:
+        labels = m.group(1)  # e.g. 01io
+        for ch, d in zip(labels, dims):
+            if ch != "o":
+                kernel_elems *= d
+    else:
+        kernel_elems = max(1, int(__import__("math").prod(dims)) // dims[-1])
+    return 2.0 * out_elems * kernel_elems
+
+
+def analyze(hlo_text: str) -> Cost:
+    comps = parse_module(hlo_text)
+    memo: dict[tuple, Cost] = {}
+
+    def comp_cost(name: str, in_fusion: bool = False) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()  # break cycles defensively
+        total = Cost()
+        env: dict[str, str] = {}
+        for ins in comps.get(name, []):
+            env[ins.name] = ins.shape
+            op = ins.op
+            if op in _META_OPS:
+                continue
+            if op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                mt = _TRIP_RE.search(ins.attrs)
+                trip = int(mt.group(1)) if mt else 1
+                if not mt:
+                    total.unknown_trip_whiles += 1
+                if body:
+                    total.add(comp_cost(body, in_fusion), trip)
+                if cond:
+                    total.add(comp_cost(cond, in_fusion), trip + 1)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", ins.attrs)
+                best = Cost()
+                for b in branches:
+                    if b in comps:
+                        c = comp_cost(b, in_fusion)
+                        if c.flops + c.bytes > best.flops + best.bytes:
+                            best = c
+                total.add(best)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    total.add(comp_cost(m.group(1), in_fusion))
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+                if m:
+                    # flops (+collectives) from inside; fusion-internal
+                    # copies/slices stay in registers -> no HBM bytes.
+                    total.add(comp_cost(m.group(1), in_fusion=True))
+                continue
+
+            ob = shape_bytes(ins.shape)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES:
+                total.coll[base] += ob
+                total.bump(base, bytes=ob)  # payload also moves through HBM
+                continue
+
+            b = 0.0
+            if op in ("reduce", "reduce-window"):
+                # Reductions fuse into their producer's epilogue on TPU
+                # (operand never round-trips HBM); charge the result only.
+                b = ob
+            elif op == "dynamic-slice":
+                b = 2.0 * ob  # read the slice + write it; not the whole buffer
+            elif op == "dynamic-update-slice":
+                upd = shape_bytes(env.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0
+                b = 2.0 * upd  # in-place: read update + write region
+            elif op == "gather":
+                b = 2.0 * ob  # rows actually touched, not the whole table
+            elif op == "scatter":
+                upd = shape_bytes(env.get(ins.operands[-1], "")) if ins.operands else 0
+                b = 2.0 * upd
+            elif op in _HBM_OPS:
+                b = ob + sum(shape_bytes(env.get(o, "")) for o in ins.operands)
+            if in_fusion:
+                b = 0.0  # fused ops live in registers/VMEM
+            if op == "dot":
+                total.bump(op, _dot_flops(ins, env), b)
+            elif op == "convolution":
+                total.bump(op, _conv_flops(ins, env), b)
+            elif op in ("add", "subtract", "multiply", "divide", "maximum",
+                        "minimum", "compare", "select", "exponential", "tanh",
+                        "log", "rsqrt", "sqrt", "power", "negate", "abs",
+                        "floor", "ceil", "cosine", "sine", "and", "or", "xor"):
+                total.bump(op, _num_elems(ins.shape), b)
+            elif op == "reduce":
+                # ~1 flop per input element reduced
+                total.bump(op, sum(_num_elems(env.get(o, "")) for o in ins.operands[: len(ins.operands) // 2]), b)
+            elif b:
+                total.bump(op, 0.0, b)
+        memo[key] = total
+        return total
+
+    return comp_cost("__entry__")

@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from experiments/dryrun.json.
+
+    PYTHONPATH=src python -m repro.analysis.report experiments/dryrun.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def dryrun_table(results: dict, mesh: str) -> str:
+    lines = [
+        "| arch | shape | compile s | bytes/device (args+temp) | HLO FLOPs | HBM bytes | collective bytes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if r.get("mesh") != mesh:
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | {r.get('error','')[:60]} | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_seconds']} | "
+            f"{fmt_bytes(r['bytes_per_device'])} | {rf['flops']:.3e} | "
+            f"{rf['bytes_hbm']:.3e} | {rf['bytes_coll']:.3e} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(results: dict, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_compute s | t_memory s | t_collective s | bound | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(results):
+        r = results[key]
+        if not r.get("ok") or r.get("mesh") != mesh:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute']:.3e} | "
+            f"{rf['t_memory']:.3e} | {rf['t_collective']:.3e} | "
+            f"**{rf['bottleneck']}** | {rf['model_flops']:.2e} | "
+            f"{rf['useful_ratio']:.3f} | {rf['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Dry-run (single-pod 16x16 = 256 chips)\n")
+    print(dryrun_table(results, "16x16"))
+    print("\n## Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+    print(dryrun_table(results, "2x16x16"))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(results, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

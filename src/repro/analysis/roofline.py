@@ -1,0 +1,140 @@
+"""Roofline-term extraction from compiled (dry-run) programs.
+
+  compute    = HLO_FLOPs  / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes  / (chips * 819e9 B/s HBM)
+  collective = coll_bytes / (chips * 50e9 B/s ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+``coll_bytes`` is parsed from the optimized HLO text: the summed *result*
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (result size ~ bytes received per device for AG/AR;
+a consistent, reproducible proxy).  MODEL_FLOPS uses 6*N*D (train) or
+2*N*D (serve) with N = active body parameters, so the
+MODEL_FLOPS/HLO_FLOPs ratio exposes remat/dispatch overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+# "= <shape or (tuple)> <collective-op>(" — skip async -done halves.
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-category result bytes of collective ops in (optimized) HLO."""
+    out = {k: 0 for k in _COLL}
+    for m in _OP_RE.finditer(hlo_text):
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # total HLO flops (all devices)
+    bytes_hbm: float  # total HLO bytes accessed
+    bytes_coll: float  # summed collective result bytes (all devices)
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_coll / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS/(chips*peak) over the bound time: the MFU this
+        program could at best sustain given its dominant roofline term."""
+        if not self.t_bound:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / self.t_bound
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_hbm": self.bytes_hbm,
+            "bytes_coll": self.bytes_coll, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(kind: str, n_active_params: int, tokens: int) -> float:
+    if kind == "train":
+        return 6.0 * n_active_params * tokens
+    return 2.0 * n_active_params * tokens  # prefill / decode forward
+
+
+def from_compiled(compiled, kind: str, n_active: int, tokens: int, chips: int) -> Roofline:
+    """All three terms from the post-SPMD (per-device) module via the
+    trip-count-aware analyzer in hlo_cost.py; values are scaled back to
+    all-device totals (x chips) so Roofline terms divide consistently."""
+    from repro.analysis import hlo_cost
+
+    cost = hlo_cost.analyze(compiled.as_text())
+    coll = sum(cost.coll.values())
+    io_bytes = 0.0
+    mem = compiled.memory_analysis()
+    if mem is not None:  # entry args + outputs stream HBM once
+        io_bytes = float(getattr(mem, "argument_size_in_bytes", 0)
+                         + getattr(mem, "output_size_in_bytes", 0))
+    return Roofline(
+        flops=cost.flops * chips, bytes_hbm=(cost.bytes + io_bytes) * chips,
+        bytes_coll=coll * chips, chips=chips,
+        model_flops=model_flops(kind, n_active, tokens),
+    )

@@ -1,0 +1,185 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout (one directory per step, atomic via tmp-dir + rename + COMMIT marker):
+
+    ckpt/step_0000012/
+      index.json              tree structure + per-leaf chunk table
+      <leaf>.c00.npy ...      chunks split along axis 0 (one per saver shard)
+      COMMIT                  written last; restore ignores dirs without it
+
+Chunking along axis 0 makes restore *resharding-capable*: a checkpoint
+written by N hosts restores onto M devices with any sharding — each leaf is
+reassembled lazily from its chunks (np.memmap) inside
+``jax.make_array_from_callback``, so each device only materializes its own
+slice.  This is the restart path for elastic re-meshing after node failure
+(runtime/fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _leaf_paths(tree):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for kp, leaf in paths:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp
+        )
+        out.append((name, leaf))
+    return out
+
+
+def _fname(leaf_path: str, chunk: int) -> str:
+    return f"{_SAFE.sub('_', leaf_path)}.c{chunk:02d}.npy"
+
+
+def save(ckpt_dir: str, step: int, tree, n_chunks: int = 1) -> str:
+    """Write a checkpoint; returns the final directory path."""
+    final = os.path.join(ckpt_dir, f"step_{step:07d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    index = {"step": step, "leaves": {}}
+    for path, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = jnp.dtype(arr.dtype).name
+        bits = arr.dtype.kind not in "fiub" or logical_dtype == "bfloat16"
+        if bits:  # ml_dtypes (bf16/f8) don't survive np memmap casts
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        chunks = []
+        n = max(1, min(n_chunks, arr.shape[0] if arr.ndim else 1))
+        splits = np.array_split(np.arange(arr.shape[0] if arr.ndim else 1), n)
+        off = 0
+        for ci, idx in enumerate(splits):
+            if arr.ndim:
+                part = arr[idx[0] : idx[-1] + 1] if len(idx) else arr[0:0]
+            else:
+                part = arr
+            fn = _fname(path, ci)
+            np.save(os.path.join(tmp, fn), part)
+            chunks.append({"file": fn, "offset": off, "rows": int(len(idx)) if arr.ndim else 1})
+            off += len(idx) if arr.ndim else 1
+        index["leaves"][path] = {
+            "shape": list(arr.shape),
+            "dtype": logical_dtype,
+            "bits": bits,
+            "chunks": chunks,
+        }
+
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree, n_chunks: int = 1) -> threading.Thread:
+    """Device-get on the caller thread (cheap on CPU; on TPU this is the
+    copy-out), file IO on a background thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, n_chunks))
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT")):
+            best = max(best or -1, int(m.group(1)))
+    return best
+
+
+def _read_leaf(step_dir: str, meta: dict, np_dtype) -> np.ndarray:
+    """Reassemble a leaf lazily; returns a callable slicer to avoid
+    materializing the full array when only a shard is needed."""
+    mms = []
+    for ch in meta["chunks"]:
+        mms.append((ch["offset"], np.load(os.path.join(step_dir, ch["file"]), mmap_mode="r")))
+    shape = tuple(meta["shape"])
+    bits = meta.get("bits", False)
+
+    def _cast(a: np.ndarray) -> np.ndarray:
+        if bits:
+            return np.asarray(a).view(np_dtype)
+        return np.asarray(a).astype(np_dtype, copy=False)
+
+    def read(index: tuple[slice, ...]) -> np.ndarray:
+        if not shape:  # scalar
+            return _cast(mms[0][1])
+        s0 = index[0] if index else slice(None)
+        start, stop, _ = s0.indices(shape[0])
+        parts = []
+        for off, mm in mms:
+            rows = mm.shape[0]
+            lo, hi = max(start, off), min(stop, off + rows)
+            if lo < hi:
+                parts.append(np.asarray(mm[lo - off : hi - off][(slice(None),) + tuple(index[1:])]))
+        out = np.concatenate(parts, 0) if len(parts) != 1 else parts[0]
+        return _cast(out)
+
+    return read
+
+
+def restore(ckpt_dir: str, step: int, abstract_tree, shardings=None):
+    """Restore onto the given abstract tree (ShapeDtypeStructs).  With
+    ``shardings`` (matching pytree of jax.sharding.Sharding), each device
+    reads only its slice — reshard-on-restore."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:07d}")
+    with open(os.path.join(step_dir, "index.json")) as f:
+        index = json.load(f)
+
+    leaves_meta = index["leaves"]
+    flat_abs = _leaf_paths(abstract_tree)
+    flat_shard = dict(_leaf_paths(shardings)) if shardings is not None else {}
+
+    out = {}
+    for path, aval in flat_abs:
+        meta = leaves_meta[path]
+        assert tuple(meta["shape"]) == tuple(aval.shape), (path, meta["shape"], aval.shape)
+        np_dtype = jnp.dtype(aval.dtype)
+        reader = _read_leaf(step_dir, meta, np_dtype)
+        if path in flat_shard and flat_shard[path] is not None:
+            arr = jax.make_array_from_callback(
+                tuple(aval.shape), flat_shard[path], lambda idx, r=reader: r(idx)
+            )
+        else:
+            arr = jnp.asarray(reader((slice(None),) * len(aval.shape)))
+        out[path] = arr
+
+    # Rebuild the tree structure from abstract_tree.
+    leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    ordered = [out[p] for p, _ in flat_abs]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def retain(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:07d}"), ignore_errors=True)

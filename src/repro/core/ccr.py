@@ -1,0 +1,292 @@
+"""The paper's analysis framework as code: Eqs. (1)-(14).
+
+For each of the five algorithms (conv Algs 1-3, FC Algs 4-5) this module
+gives the closed-form *compute*, *space*, and *communication* complexity and
+the resulting compute-to-communication ratio (CCR), exactly as derived in
+the paper.  ``schedule_sim.py`` cross-checks every closed form by actually
+walking the loop nests and counting DMA words.
+
+Conventions (paper Sec. 1.2.2): one MAC = 2 flops; a "word" is one element
+(4 B single precision, 8 B double precision); CCR is MAC/word.
+
+Known paper slip, reproduced deliberately: the numerical intuition in
+Sec. 2.3.4 (541.4 / 540.6 MAC/word) does not follow from the paper's own
+Eq. (10); it matches Eq. (10) with the ``D_I`` factor dropped from the
+input-slice term.  ``alg3_ccr_offchip_as_quoted`` reproduces the quoted
+numbers; ``.ccr_offchip`` on :func:`alg3_traffic` follows Eq. (10)
+faithfully.  EXPERIMENTS.md documents both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.machine import MachineModel, word_bytes
+
+# ---------------------------------------------------------------------------
+# Layer shapes (hyperparameters of Table 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvShape:
+    """Convolutional layer hyperparameters (paper Table 1)."""
+
+    W_I: int  # input width and height
+    D_I: int  # input depth
+    D_O: int  # output depth
+    F: int  # receptive field
+    S: int = 1  # stride
+    P: int = 1  # zero padding
+
+    @property
+    def W_O(self) -> int:
+        """Output width/height: W_O = (W_I + 2P - F)/S + 1 (paper Sec. 1.1)."""
+        num = self.W_I + 2 * self.P - self.F
+        if num % self.S:
+            raise ValueError(f"(W_I+2P-F)={num} not divisible by stride {self.S}")
+        return num // self.S + 1
+
+    def validate(self) -> None:
+        if self.F > self.W_I + 2 * self.P:
+            raise ValueError("receptive field larger than padded input")
+        for f in ("W_I", "D_I", "D_O", "F", "S"):
+            if getattr(self, f) <= 0:
+                raise ValueError(f"{f} must be positive")
+        if self.P < 0:
+            raise ValueError("padding must be non-negative")
+
+
+@dataclasses.dataclass(frozen=True)
+class FCShape:
+    """Fully-connected layer hyperparameters.
+
+    An FC layer is a conv layer with F = W_I, S = 1, P = 0 (paper Sec. 1.1),
+    plus a batch dimension B (paper Sec. 3).
+    """
+
+    W_I: int
+    D_I: int
+    D_O: int
+    B: int
+
+    def validate(self) -> None:
+        for f in ("W_I", "D_I", "D_O", "B"):
+            if getattr(self, f) <= 0:
+                raise ValueError(f"{f} must be positive")
+
+
+# ---------------------------------------------------------------------------
+# Traffic model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Word-granular traffic of one layer execution under one algorithm."""
+
+    macs: int  # total multiply-accumulates across all clusters
+    main_loads: int  # words loaded from main (off-chip) memory
+    main_stores: int  # words stored to main memory
+    intercluster: int = 0  # words moved cluster-to-cluster (on-chip)
+
+    @property
+    def main_words(self) -> int:
+        return self.main_loads + self.main_stores
+
+    @property
+    def ccr(self) -> float:
+        """Overall CCR in MAC/word: all memory traffic, on- or off-chip
+        (paper Sec. 2.3.4: 'the overall CCR is not affected' by Alg 3)."""
+        return self.macs / (self.main_words + self.intercluster)
+
+    @property
+    def ccr_offchip(self) -> float:
+        """CCR counting only off-chip main-memory words."""
+        return self.macs / self.main_words
+
+    def flops_per_byte(self, precision: str, offchip_only: bool = False) -> float:
+        """CCR converted to flop/B for a given precision (2 flop per MAC)."""
+        ccr = self.ccr_offchip if offchip_only else self.ccr
+        return ccr * 2.0 / word_bytes(precision)
+
+
+# ---------------------------------------------------------------------------
+# Conv layers
+# ---------------------------------------------------------------------------
+
+
+def conv_macs(s: ConvShape) -> int:
+    """Total MACs of the layer: W_I^2 * F^2 * D_I * D_O (paper Sec. 2.1.1).
+
+    NOTE the paper counts Conv() as W_I^2*F^2 MACs (it slides the filter over
+    the *input* extent); we keep that convention for fidelity.  For S=1, P
+    'same' padding this equals W_O^2*F^2.
+    """
+    return s.W_I**2 * s.F**2 * s.D_I * s.D_O
+
+
+def alg1_traffic(s: ConvShape) -> Traffic:
+    """Alg 1: parallelize output depth slices over clusters (Sec. 2.1.3)."""
+    loads = s.D_O * s.D_I * (s.W_I**2 + s.F**2)
+    stores = s.D_O * s.W_O**2
+    return Traffic(macs=conv_macs(s), main_loads=loads, main_stores=stores)
+
+
+def alg1_ccr(s: ConvShape) -> float:
+    """Eq. (2): D_I*W_I^2*F^2 / (D_I*(W_I^2+F^2) + W_O^2)."""
+    return (s.D_I * s.W_I**2 * s.F**2) / (s.D_I * (s.W_I**2 + s.F**2) + s.W_O**2)
+
+
+def alg1_ccr_approx(s: ConvShape) -> float:
+    """Eq. (6): CCR ~= F^2  (for W_O=W_I, D_I>>1, W_I^2>>F^2)."""
+    return float(s.F**2)
+
+
+def alg2_traffic(s: ConvShape, stack: int) -> Traffic:
+    """Alg 2: stacks of Delta_O output slices per cluster (Sec. 2.2.3, Eq. 7)."""
+    n_stacks = math.ceil(s.D_O / stack)
+    loads = n_stacks * s.D_I * s.W_I**2 + s.D_O * s.D_I * s.F**2
+    stores = s.D_O * s.W_O**2
+    return Traffic(macs=conv_macs(s), main_loads=loads, main_stores=stores)
+
+
+def alg3_traffic(s: ConvShape, stack: int, group: int = 16) -> Traffic:
+    """Alg 3: Alg 2 + ring reuse of input slices within an L2 quadrant
+    (Sec. 2.3.3, Eqs. 9-10).  ``group`` is the quadrant size (16 clusters).
+    """
+    n_stacks = math.ceil(s.D_O / stack)
+    input_words = n_stacks * s.D_I * s.W_I**2
+    # 15/16 of input-slice loads come from a neighbouring cluster, 1/16 from
+    # main memory (Eq. 9 / Eq. 10).
+    inter = (group - 1) * input_words // group
+    main_in = input_words - inter
+    loads = main_in + s.D_O * s.D_I * s.F**2
+    stores = s.D_O * s.W_O**2
+    return Traffic(
+        macs=conv_macs(s), main_loads=loads, main_stores=stores, intercluster=inter
+    )
+
+
+def alg3_ccr_offchip_as_quoted(s: ConvShape, stack: int, group: int = 16) -> float:
+    """The paper's *quoted* Sec. 2.3.4 numbers (541.4 / 540.6 MAC/word).
+
+    These match Eq. (10) with the D_I factor dropped from the input term —
+    an arithmetic slip in the paper's numerical intuition.  Kept so tests can
+    pin the published numbers while `alg3_traffic().ccr_offchip` stays
+    faithful to Eq. (10).
+    """
+    n_stacks = math.ceil(s.D_O / stack)
+    input_main = n_stacks * s.W_I**2 // group  # paper slip: no * D_I
+    denom = input_main + s.D_O * s.D_I * s.F**2 + s.D_O * s.W_O**2
+    return conv_macs(s) / denom
+
+
+# Space complexity (words) -------------------------------------------------
+
+
+def alg1_space_words(s: ConvShape) -> int:
+    """Sec. 2.1.2: W_O^2 + W_I^2 + F^2 words minimum."""
+    return s.W_O**2 + s.W_I**2 + s.F**2
+
+
+def alg2_space_words(s: ConvShape, stack: int) -> int:
+    """Sec. 2.2.2: Delta_O*W_O^2 + W_I^2 + F^2 words minimum."""
+    return stack * s.W_O**2 + s.W_I**2 + s.F**2
+
+
+def alg3_space_words(s: ConvShape, stack: int) -> int:
+    """Sec. 2.3.2: Alg 2 + one forwarding buffer of W_I^2 words."""
+    return alg2_space_words(s, stack) + s.W_I**2
+
+
+def alg2_max_stack(s: ConvShape, machine: MachineModel, precision: str) -> int:
+    """Largest Delta_O fitting local memory (Sec. 2.2.2).
+
+    The paper reserves 2 x 16 KiB DMA buffers for the input slice and the
+    filter parameters; the rest of the 128 KiB holds the output stack.
+    """
+    wb = word_bytes(precision)
+    budget = machine.usable_for_working_set(streams=2)
+    return budget // (wb * s.W_O**2)
+
+
+def alg3_max_stack(s: ConvShape, machine: MachineModel, precision: str) -> int:
+    """Largest Delta_O for Alg 3 (Sec. 2.3.2): additionally keep one input
+    depth slice resident so the neighbouring cluster can read it."""
+    wb = word_bytes(precision)
+    budget = machine.usable_for_working_set(streams=2) - wb * s.W_I**2
+    return budget // (wb * s.W_O**2)
+
+
+# ---------------------------------------------------------------------------
+# FC layers
+# ---------------------------------------------------------------------------
+
+
+def fc_macs(s: FCShape) -> int:
+    """Sec. 3.1.1: W_I^2 * B * D_O * D_I MACs across all clusters."""
+    return s.W_I**2 * s.B * s.D_O * s.D_I
+
+
+def alg4_traffic(s: FCShape, clusters: int = 128) -> Traffic:
+    """Alg 4: parallel input depth slices, private outputs, tree reduction
+    (Sec. 3.1.3)."""
+    loads = s.D_I * s.W_I**2 * (s.B + s.D_O)
+    stores = s.D_O * s.B
+    inter = (clusters - 1) * s.D_O * s.B  # 127 * D_O * B for 128 clusters
+    return Traffic(macs=fc_macs(s), main_loads=loads, main_stores=stores, intercluster=inter)
+
+
+def alg4_ccr(s: FCShape) -> float:
+    """Eq. (11): B*D_O/(B+D_O) — the in-parallel-region CCR."""
+    return (s.B * s.D_O) / (s.B + s.D_O)
+
+
+def alg5_traffic(s: FCShape, stack: int, clusters: int = 128) -> Traffic:
+    """Alg 5: output stacks of Delta_O + parallel input slices
+    (Sec. 3.2.3, Eqs. 12-13)."""
+    n_stacks = math.ceil(s.D_O / stack)
+    loads = n_stacks * s.D_I * s.B * s.W_I**2 + s.D_O * s.D_I * s.W_I**2
+    stores = s.D_O * s.B
+    inter = (clusters - 1) * s.D_O * s.B
+    return Traffic(macs=fc_macs(s), main_loads=loads, main_stores=stores, intercluster=inter)
+
+
+def alg5_ccr(s: FCShape, stack: int) -> float:
+    """Eq. (14): B*D_O / (ceil(D_O/Delta_O)*B + D_O)."""
+    n_stacks = math.ceil(s.D_O / stack)
+    return (s.B * s.D_O) / (n_stacks * s.B + s.D_O)
+
+
+def alg4_space_words(s: FCShape) -> int:
+    """Sec. 3.1.2: D_O*B + W_I^2*(B+1) words minimum."""
+    return s.D_O * s.B + s.W_I**2 * (s.B + 1)
+
+
+def alg5_space_words(s: FCShape, stack: int) -> int:
+    """Sec. 3.2.2: Delta_O*B + W_I^2*(B+1) words minimum."""
+    return stack * s.B + s.W_I**2 * (s.B + 1)
+
+
+def alg45_max_stack(s: FCShape, machine: MachineModel, precision: str) -> int:
+    """Largest Delta_O (Alg 5) / D_O (Alg 4) whose private output volume fits
+    after reserving 2 x 16 KiB DMA buffers (Sec. 3.1.2): 96 KiB on Manticore,
+    giving D_O <= 768 (sp) / 384 (dp) at B = 32."""
+    wb = word_bytes(precision)
+    budget = machine.usable_for_working_set(streams=2)
+    return budget // (wb * s.B)
+
+
+# ---------------------------------------------------------------------------
+# Roofline hook: is the algorithm memory-bound on a machine?
+# ---------------------------------------------------------------------------
+
+
+def bound_kind(t: Traffic, machine: MachineModel, precision: str) -> str:
+    """Classify compute- vs memory-bound: compare the layer's off-chip
+    arithmetic intensity (flop/B) against the machine balance point."""
+    intensity = t.flops_per_byte(precision, offchip_only=True)
+    balance = machine.peak_flops / machine.main_mem_bw
+    return "compute-bound" if intensity >= balance else "memory-bound"

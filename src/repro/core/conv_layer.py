@@ -1,0 +1,60 @@
+"""The paper's convolutional layer as a composable, differentiable module.
+
+``strategy`` selects the paper algorithm:
+  * "alg1"  - one output depth slice at a time (block_do = 1);
+  * "alg2"  - Delta_O output stacking, Delta_O from the capacity chooser;
+  * "alg3"  - Alg 2 blocking within each device + ring input-slice reuse
+              across devices (core/ring.py) when input channels are sharded.
+
+Forward runs the Pallas kernel (interpret mode off-TPU); backward is the
+XLA reference VJP (custom_vjp), so CNNs built from this layer train.
+Traffic accounting for any strategy comes from core/ccr.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ccr
+from repro.core.machine import TPU_V5E, MANTICORE
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.conv2d.ref import conv2d_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def conv_layer(x, f, stride=1, padding=0, strategy="alg2"):
+    """x: [B, H, W, D_I] or [H, W, D_I]; f: [F, F, D_I, D_O]."""
+    block_do = 1 if strategy == "alg1" else None  # None -> capacity chooser
+    return conv2d(x, f, stride=stride, padding=padding, block_do=block_do)
+
+
+def _fwd(x, f, stride, padding, strategy):
+    return conv_layer(x, f, stride, padding, strategy), (x, f)
+
+
+def _bwd(stride, padding, strategy, res, g):
+    x, f = res
+    _, vjp = jax.vjp(
+        lambda xx, ff: conv2d_ref(xx, ff, stride=stride, padding=padding), x, f
+    )
+    return vjp(g)
+
+
+conv_layer.defvjp(_fwd, _bwd)
+
+
+def traffic(
+    shape: ccr.ConvShape, strategy: str = "alg2", precision: str = "sp",
+    machine=MANTICORE,
+) -> ccr.Traffic:
+    """Predicted word traffic for this layer under the chosen algorithm."""
+    if strategy == "alg1":
+        return ccr.alg1_traffic(shape)
+    if strategy == "alg2":
+        return ccr.alg2_traffic(shape, max(1, ccr.alg2_max_stack(shape, machine, precision)))
+    if strategy == "alg3":
+        return ccr.alg3_traffic(shape, max(1, ccr.alg3_max_stack(shape, machine, precision)))
+    raise ValueError(strategy)

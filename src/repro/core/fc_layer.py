@@ -1,0 +1,67 @@
+"""The paper's fully-connected layer as a composable, differentiable module.
+
+Single-device: the Alg 4/5 Pallas kernel (output stacking = block_n, K-loop
+accumulator = the private partial output).  Distributed ("alg4_sharded"):
+the input-depth dimension is sharded over a mesh axis and each device's
+private partial output is combined by one psum — the paper's tree
+reduction, lowered to the ICI collective.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ccr
+from repro.core.machine import MANTICORE
+from repro.kernels.matmul.ops import fc_matmul
+from repro.kernels.matmul.ref import fc_matmul_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fc_layer(x, w):
+    """x: [..., K]; w: [K, D_O].  Forward = Pallas Alg 4/5 kernel."""
+    return fc_matmul(x, w)
+
+
+def _fwd(x, w):
+    return fc_layer(x, w), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    _, vjp = jax.vjp(fc_matmul_ref, x, w)
+    return vjp(g)
+
+
+fc_layer.defvjp(_fwd, _bwd)
+
+
+def fc_layer_sharded(x, w, mesh, axis: str = "model"):
+    """Alg 4 over a mesh axis: K (input depth) sharded, psum of private
+    partial outputs.  x: [M, K]; w: [K, N]; returns [M, N] replicated."""
+
+    def fn(xl, wl):
+        return jax.lax.psum(xl @ wl, axis)
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(None, None),
+        check_vma=False,
+    )(x, w)
+
+
+def traffic(
+    shape: ccr.FCShape, strategy: str = "alg5", precision: str = "sp",
+    machine=MANTICORE, clusters: int = 128,
+) -> ccr.Traffic:
+    if strategy == "alg4":
+        return ccr.alg4_traffic(shape, clusters)
+    if strategy == "alg5":
+        stack = max(1, ccr.alg45_max_stack(shape, machine, precision))
+        return ccr.alg5_traffic(shape, min(stack, shape.D_O), clusters)
+    raise ValueError(strategy)

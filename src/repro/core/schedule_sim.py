@@ -1,0 +1,128 @@
+"""Word-counting simulators for the paper's Algorithms 1-5.
+
+Each simulator walks the *exact* loop nest of the corresponding pseudocode
+(including the software-pipelined prefetch structure, ragged final stacks,
+and Alg 3's modulo-16 ring schedule) and tallies every DmaLoad/DmaStore and
+inter-cluster transfer in words.  Tests assert these counts equal the
+closed forms in :mod:`repro.core.ccr` — i.e. we *validate the paper's
+analysis by executing its schedules*.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.ccr import ConvShape, FCShape, Traffic, conv_macs, fc_macs
+
+
+def simulate_alg1(s: ConvShape) -> Traffic:
+    """Algorithm 1: one output depth slice per cluster task."""
+    loads = stores = macs = 0
+    for _d_o in range(s.D_O):  # parallelize over clusters
+        # Prefetch of iteration 0 + in-loop prefetch of d_i+1 together load
+        # exactly one input slice + one filter slab per d_i.
+        for _d_i in range(s.D_I):
+            loads += s.W_I**2  # DmaLoad(I[:,:,d_i])
+            loads += s.F**2  # DmaLoad(F[:,:,d_i,d_o])
+            macs += s.W_I**2 * s.F**2  # Conv()
+        stores += s.W_O**2  # DmaStore(O[:,:,d_o])
+    assert macs == conv_macs(s)
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
+def _stacks(D_O: int, stack: int):
+    for begin in range(0, D_O, stack):
+        yield begin, min(begin + stack, D_O)
+
+
+def simulate_alg2(s: ConvShape, stack: int) -> Traffic:
+    """Algorithm 2: stacks of Delta_O output depth slices per cluster task."""
+    loads = stores = macs = 0
+    for begin, end in _stacks(s.D_O, stack):  # parallelize over clusters
+        for _d_i in range(s.D_I):
+            loads += s.W_I**2  # input slice, loaded once per stack
+            for _d_o in range(begin, end):
+                loads += s.F**2  # filter slab per (d_i, d_o)
+                macs += s.W_I**2 * s.F**2
+        stores += (end - begin) * s.W_O**2
+    assert macs == conv_macs(s)
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
+def simulate_alg3(s: ConvShape, stack: int, group: int = 16) -> Traffic:
+    """Algorithm 3: Alg 2 + ring reuse of input slices inside an L2 quadrant.
+
+    Each task runs on a cluster; CID_in_L2 = CID mod ``group``.  A cluster
+    loads input slice ``d`` from main memory iff ``d % group == CID_in_L2``
+    (it is that slice's "home"), otherwise from its ring predecessor.
+    Faithful to the pseudocode including the wrap-around loop order
+    ``d_i <- CID..D_I then 0..CID``.
+    """
+    loads = stores = macs = inter = 0
+    for task, (begin, end) in enumerate(_stacks(s.D_O, stack)):
+        cid = task % group  # round-robin placement inside a quadrant
+        start = cid % s.D_I if s.D_I else 0
+        # Initial load: DmaLoad(I[:,:,CID_in_L2]) from main memory.
+        loads += s.W_I**2
+        order = list(range(start, s.D_I)) + list(range(0, start))
+        for d_i in order:
+            d_next = (d_i + 1) % s.D_I
+            if d_next != start:  # prefetch next slice
+                if d_next % group == cid:
+                    loads += s.W_I**2  # home slice: from main memory
+                else:
+                    inter += s.W_I**2  # from ring predecessor's L1
+            for _d_o in range(begin, end):
+                loads += s.F**2
+                macs += s.W_I**2 * s.F**2
+        stores += (end - begin) * s.W_O**2
+    assert macs == conv_macs(s)
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores, intercluster=inter)
+
+
+def _tree_reduce_words(n_parts: int, words_each: int) -> int:
+    """Pairwise tree reduction of ``n_parts`` private volumes: each merge
+    reads one full volume over the network (paper Sec. 3.1.3: 127*D_O*B for
+    128 clusters)."""
+    total = 0
+    live = n_parts
+    while live > 1:
+        merges = live // 2
+        total += merges * words_each
+        live -= merges
+    return total
+
+
+def simulate_alg4(s: FCShape, clusters: int = 128) -> Traffic:
+    """Algorithm 4: input depth slices parallel over clusters, private
+    outputs, tree reduction."""
+    loads = stores = macs = 0
+    for _d_i in range(s.D_I):  # parallelize over clusters
+        loads += s.W_I**2 * s.B  # DmaLoad(I[:,:,d_i,:]) - whole batch
+        for _d_o in range(s.D_O):
+            loads += s.W_I**2  # DmaLoad(F[:,:,d_i,d_o])
+            for _b in range(s.B):
+                macs += s.W_I**2  # ElemMac()
+    inter = _tree_reduce_words(clusters, s.D_O * s.B)
+    stores = s.D_O * s.B  # one cluster stores O
+    assert macs == fc_macs(s)
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores, intercluster=inter)
+
+
+def simulate_alg5(s: FCShape, stack: int, clusters: int = 128) -> Traffic:
+    """Algorithm 5: outer loop over output stacks, Alg 4 inside."""
+    loads = stores = macs = inter = 0
+    for begin, end in _stacks(s.D_O, stack):
+        for _d_i in range(s.D_I):  # parallelize over clusters
+            loads += s.W_I**2 * s.B
+            for _d_o in range(begin, end):
+                loads += s.W_I**2
+                macs += s.W_I**2 * s.B
+        inter += _tree_reduce_words(clusters, (end - begin) * s.B)
+        stores += (end - begin) * s.B
+    assert macs == fc_macs(s)
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores, intercluster=inter)
+
+
+def n_stacks(D_O: int, stack: int) -> int:
+    return math.ceil(D_O / stack)

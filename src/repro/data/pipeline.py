@@ -1,0 +1,74 @@
+"""Deterministic, shard-aware token data pipeline.
+
+Two sources:
+  * ``SyntheticSource`` - structured pseudo-text (Zipfian unigrams with a
+    Markov flavour) generated deterministically from (seed, step, shard),
+    so every host produces exactly its shard with no coordination;
+  * ``MemmapSource``   - packed uint16/uint32 token files (np.memmap),
+    strided by (host, step) for disjoint coverage; the standard format a
+    real run would use.
+
+Both yield {"tokens": [B_local, S], "labels": [B_local, S]} with labels =
+next-token shifted and the final position masked via label -1 (the loss
+ignores label < 0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    index: int  # this host's shard index
+    count: int  # number of data shards
+
+
+class SyntheticSource:
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 shard: ShardInfo = ShardInfo(0, 1), seed: int = 0):
+        assert global_batch % shard.count == 0
+        self.vocab, self.seq, self.batch = vocab, seq_len, global_batch // shard.count
+        self.shard, self.seed = shard, seed
+        # Zipf-ish unigram table (clipped to vocab).
+        probs = 1.0 / np.arange(1, min(vocab, 50000) + 1) ** 1.1
+        self._probs = probs / probs.sum()
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard.index])
+        )
+        base = rng.choice(len(self._probs), size=(self.batch, self.seq + 1),
+                          p=self._probs).astype(np.int64)
+        # Markov flavour: each token mixes in the previous one.
+        mixed = (base + np.roll(base, 1, axis=1) // 2) % self.vocab
+        tokens = mixed[:, :-1].astype(np.int32)
+        labels = mixed[:, 1:].astype(np.int32)
+        return {"tokens": tokens, "labels": labels}
+
+
+class MemmapSource:
+    def __init__(self, path: str, vocab: int, seq_len: int, global_batch: int,
+                 shard: ShardInfo = ShardInfo(0, 1), dtype=np.uint16):
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        assert global_batch % shard.count == 0
+        self.vocab, self.seq = vocab, seq_len
+        self.batch = global_batch // shard.count
+        self.shard = shard
+        self.n_windows = (len(self.data) - 1) // seq_len
+        if self.n_windows < global_batch:
+            raise ValueError("dataset too small for one global batch")
+
+    def __call__(self, step: int) -> dict:
+        g = self.batch * self.shard.count
+        start = (step * g + self.shard.index * self.batch) % self.n_windows
+        idx = (np.arange(self.batch) + start) % self.n_windows
+        rows = np.stack([self.data[i * self.seq : i * self.seq + self.seq + 1] for i in idx])
+        rows = rows.astype(np.int32) % self.vocab
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+def write_token_file(path: str, tokens: np.ndarray, dtype=np.uint16) -> None:
+    np.asarray(tokens, dtype).tofile(path)

@@ -1,0 +1,2 @@
+from repro.kernels.conv2d.ops import conv2d, choose_stack
+from repro.kernels.conv2d.ref import conv2d_ref

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the paper's convolutional layers (Algs 1/2).
+
+Faithful mapping (DESIGN.md Sec. 2):
+
+* grid = (output-channel stacks, input-channel steps) — one grid step is
+  one iteration of the paper's ``for d_i`` loop for one stack of Delta_O
+  output depth slices (``block_do``).  ``block_do = 1`` *is* Algorithm 1;
+  ``block_do = Delta_O > 1`` *is* Algorithm 2.  The input block's index map
+  ignores the stack index, so the input volume is re-streamed once per
+  stack — exactly the traffic Eq. (7) charges.
+* the output stack lives in an f32 VMEM accumulator across all d_i steps
+  (the cluster's L1-resident ``O[:, :, D_begin:D_end]``), initialized at
+  d_i = 0 and flushed to HBM once at d_i = D_I-1 (the paper's final
+  ``DmaStore``).
+* HBM->VMEM block streaming is double-buffered by the Pallas pipeline —
+  the DmaLoad/DmaWait prefetch structure of the pseudocode.
+
+The conv itself is computed as F*F shifted MXU matmuls:
+  acc[HW, bdo] += X_pad[ky:ky+H_O, kx:kx+W_O, :].reshape(HW, bdi)
+                  @ F[ky, kx]  (bdi, bdo)
+which keeps every MAC on the MXU (no im2col materialization in HBM).
+Stride 1 in-kernel (the paper's running case); strided convs lower via the
+reference path in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, f_ref, o_ref, acc_ref, *, n_di: int, F: int, H_O: int, W_O: int):
+    d_i = pl.program_id(1)
+
+    @pl.when(d_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)  # initialize O stack to zero
+
+    x = x_ref[...]  # [H_O+F-1, W_O+F-1, bdi] padded input slice block
+    bdi = x.shape[-1]
+    # Conv() as F^2 shifted matmuls on the MXU.
+    for ky in range(F):
+        for kx in range(F):
+            win = jax.lax.slice(
+                x, (ky, kx, 0), (ky + H_O, kx + W_O, bdi)
+            ).reshape(H_O * W_O, bdi)
+            acc_ref[...] += jnp.dot(
+                win, f_ref[ky, kx], preferred_element_type=jnp.float32
+            )
+
+    @pl.when(d_i == n_di - 1)
+    def _flush():  # DmaStore(O[:, :, D_begin:D_end])
+        o_ref[...] = acc_ref[...].reshape(H_O, W_O, -1).astype(o_ref.dtype)
+
+
+def conv2d_pallas(
+    x_pad: jax.Array,
+    f: jax.Array,
+    *,
+    block_do: int,
+    block_di: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Stacked direct conv, stride 1.
+
+    ``x_pad``: [H + 2P, W + 2P, D_I] spatially pre-padded input volume.
+    ``f``: [F, F, D_I, D_O].  D_I, D_O must be multiples of the blocks.
+    Returns [H_O, W_O, D_O].
+    """
+    Hp, Wp, d_in = x_pad.shape
+    F, F2, d_in2, d_out = f.shape
+    assert F == F2 and d_in == d_in2
+    assert d_in % block_di == 0 and d_out % block_do == 0
+    H_O, W_O = Hp - F + 1, Wp - F + 1
+    out_dtype = out_dtype or x_pad.dtype
+    n_di = d_in // block_di
+
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, n_di=n_di, F=F, H_O=H_O, W_O=W_O),
+        grid=(d_out // block_do, n_di),
+        in_specs=[
+            # Input depth-slice block: whole spatial extent, streamed over
+            # d_i; index map ignores the stack index (re-streamed per stack).
+            pl.BlockSpec((Hp, Wp, block_di), lambda do, di: (0, 0, di)),
+            # Filter parameters for the (d_i, d_o-stack) pair.
+            pl.BlockSpec((F, F, block_di, block_do), lambda do, di: (0, 0, di, do)),
+        ],
+        out_specs=pl.BlockSpec((H_O, W_O, block_do), lambda do, di: (0, 0, do)),
+        out_shape=jax.ShapeDtypeStruct((H_O, W_O, d_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((H_O * W_O, block_do), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_pad, f)

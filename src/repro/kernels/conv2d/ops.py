@@ -1,0 +1,97 @@
+"""Jit'd public wrapper for the stacked conv2d kernel.
+
+``block_do`` (the paper's Delta_O) defaults to the capacity chooser from
+core/ccr.py evaluated against the TPU VMEM model — the same rule that gives
+Delta_O <= 24/12 on Manticore picks the output stack here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.kernels.conv2d.conv2d import conv2d_pallas
+from repro.kernels.conv2d.ref import conv2d_ref
+
+_LANE = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def choose_stack(
+    H_O: int, W_O: int, W_Ipad: int, F: int, d_out: int,
+    in_bytes: int = 2, block_di: int = _LANE,
+    machine: MachineModel = TPU_V5E,
+) -> int:
+    """Delta_O for TPU: largest output-channel stack whose f32 accumulator
+    plus streamed input/filter blocks fit VMEM (paper Sec. 2.2.2 argument)."""
+    budget = machine.usable_for_working_set(streams=2)
+    stream = (W_Ipad**2 * block_di + F * F * block_di * _LANE) * in_bytes * 2
+    bdo = _LANE
+    while True:
+        nxt = bdo + _LANE
+        if nxt > _round_up(d_out, _LANE) or nxt > 2048:
+            break
+        if stream + H_O * W_O * nxt * 4 > budget:
+            break
+        bdo = nxt
+    return bdo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "block_do", "block_di", "out_dtype", "interpret"),
+)
+def conv2d(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_do: int | None = None,
+    block_di: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Convolutional layer forward (paper Algs 1/2) for arbitrary shapes.
+
+    ``x``: [H, W, D_I] or [B, H, W, D_I]; ``f``: [F, F, D_I, D_O].
+    Stride 1 runs the Pallas kernel; strided convs use the XLA reference
+    (the paper's running examples are all S = 1).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out_dtype = out_dtype or x.dtype
+    if stride != 1:
+        return conv2d_ref(x, f, stride=stride, padding=padding, out_dtype=out_dtype)
+
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    F = f.shape[0]
+    d_in, d_out = f.shape[2], f.shape[3]
+
+    bdi = block_di or min(_round_up(d_in, _LANE), 512)
+    H_O = x.shape[1] + 2 * padding - F + 1
+    W_O = x.shape[2] + 2 * padding - F + 1
+    bdo = block_do or choose_stack(
+        H_O, W_O, x.shape[2] + 2 * padding, F, d_out,
+        in_bytes=x.dtype.itemsize, block_di=bdi,
+    )
+    bdo = min(bdo, _round_up(d_out, _LANE))
+
+    dip, dop = _round_up(d_in, bdi), _round_up(d_out, bdo)
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, dip - d_in)))
+    fp = jnp.pad(f, ((0, 0), (0, 0), (0, dip - d_in), (0, dop - d_out)))
+
+    run = functools.partial(
+        conv2d_pallas, block_do=bdo, block_di=bdi,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    out = jax.vmap(lambda xi: run(xi, fp))(xp)[..., :d_out]
+    return out if batched else out[0]

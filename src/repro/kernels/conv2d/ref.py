@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the stacked conv2d kernel."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, f, *, stride: int = 1, padding: int = 0, out_dtype=None):
+    """Direct 2D convolution (cross-correlation, CNN convention).
+
+    ``x``: [H, W, D_I] or [B, H, W, D_I] input volume(s).
+    ``f``: [F, F, D_I, D_O] filter parameters.
+    Returns [H_O, W_O, D_O] (or batched), H_O = (H + 2P - F)//S + 1.
+    """
+    out_dtype = out_dtype or x.dtype
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    out = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        f.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(out_dtype)
+    return out[0] if squeeze else out

@@ -1,0 +1,127 @@
+"""Pallas TPU flash-attention kernel (forward) with causal/sliding-window
+masking and GQA.
+
+This is a *beyond-paper* kernel, but it is built with the paper's exact
+methodology (DESIGN.md Sec. 2): the query block with its f32 accumulator is
+the VMEM-resident "output stack" (Alg 2's Delta_O), the KV sequence streams
+through VMEM like the paper's input depth slices, and the online-softmax
+running (m, l) statistics play the role of the private partial outputs that
+Alg 4 keeps per cluster.  Pallas double-buffers the KV block streaming, the
+paper's DmaLoad/DmaWait pipeline.
+
+Training uses the differentiable chunked-attention in models/attention.py;
+this kernel is the serving/prefill hot path on the TPU target and is
+validated against ref.py in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, n_kv: int, block_q: int, block_kv: int, scale: float,
+    causal: bool, window: int | None, q_len: int, kv_len: int,
+):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qb * block_q
+    k_start = kb * block_kv
+    # Block-level skips: causal -> KV blocks entirely in the future; sliding
+    # window -> KV blocks entirely before the window. Skipped blocks do no
+    # MXU work (the paper's "only load what you compute on").
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window is not None:
+        run &= k_start + block_kv - 1 > q_start - window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0].astype(jnp.float32)  # [bkv, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [bq, bkv]
+
+        q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = (q_ids < q_len) & (k_ids < kv_len)
+        if causal:
+            mask &= k_ids <= q_ids
+        if window is not None:
+            mask &= q_ids - k_ids < window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[...]  # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked (padded) rows -> 0
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, block_q: int, block_kv: int, scale: float,
+    causal: bool, window: int | None,
+    q_len: int, kv_len: int, interpret: bool = False,
+) -> jax.Array:
+    """q: [BHq, Sq, D]; k/v: [BHkv, Skv, D]; heads pre-flattened with batch.
+    Sq % block_q == 0, Skv % block_kv == 0 (pad in ops.py)."""
+    BHq, Sq, D = q.shape
+    BHkv, Skv, _ = k.shape
+    assert BHq % BHkv == 0
+    group = BHq // BHkv
+    n_kv = Skv // block_kv
+
+    kv_index = lambda h, qb, kb: (h // group, kb, 0)
+    return pl.pallas_call(
+        functools.partial(
+            _fa_kernel, n_kv=n_kv, block_q=block_q, block_kv=block_kv,
+            scale=scale, causal=causal, window=window, q_len=q_len, kv_len=kv_len,
+        ),
+        grid=(BHq, Sq // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qb, kb: (h, qb, 0)),
+            pl.BlockSpec((1, block_kv, D), kv_index),
+            pl.BlockSpec((1, block_kv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qb, kb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

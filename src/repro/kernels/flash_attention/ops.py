@@ -1,0 +1,47 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int | None = None, scale: float | None = None,
+    block_q: int = 128, block_kv: int = 128, interpret: bool | None = None,
+) -> jax.Array:
+    """Blockwise attention. q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D].
+
+    Pads sequences to block multiples; GQA via Hkv | Hq head grouping.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else D**-0.5
+    bq = min(block_q, _round_up(Sq, 8))
+    bkv = min(block_kv, _round_up(Skv, 8))
+    Sqp, Skvp = _round_up(Sq, bq), _round_up(Skv, bkv)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0))).reshape(B * Hq, Sqp, D)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0))).reshape(B * Hkv, Skvp, D)
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0))).reshape(B * Hkv, Skvp, D)
+
+    out = flash_attention_pallas(
+        qp, kp, vp, block_q=bq, block_kv=bkv, scale=scale,
+        causal=causal, window=window, q_len=Sq, kv_len=Skv, interpret=interpret,
+    )
+    return out.reshape(B, Hq, Sqp, D)[:, :, :Sq, :]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (full / causal / sliding-window, GQA)."""
+
+import jax.numpy as jnp
+
+
+def mask_logits(s, q_ids, k_ids, *, causal: bool, window: int | None):
+    """Apply causal / sliding-window masking to logits ``s`` [..., Sq, Skv]."""
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    if causal:
+        mask &= k_ids[None, :] <= q_ids[:, None]
+    if window is not None:
+        mask &= q_ids[:, None] - k_ids[None, :] < window
+    return jnp.where(mask, s, -1e30)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None, out_dtype=None):
+    """Dense softmax attention.
+
+    ``q``: [B, Hq, Sq, D]; ``k``/``v``: [B, Hkv, Skv, D] with Hkv | Hq (GQA).
+    """
+    out_dtype = out_dtype or q.dtype
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else D**-0.5
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    q_ids = jnp.arange(Sq)
+    k_ids = jnp.arange(Skv)
+    s = mask_logits(s, q_ids, k_ids, causal=causal, window=window)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.matmul.ops import fc_matmul, choose_blocks
+from repro.kernels.matmul.ref import fc_matmul_ref

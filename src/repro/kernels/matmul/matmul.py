@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for the paper's FC layers (Algorithms 4/5).
+
+Mapping from the paper to the kernel (see DESIGN.md Sec. 2):
+
+* the FC layer is a matmul  O[M, N] = X[M, K] @ W[K, N]  with
+  M = batch B, K = W_I^2 * D_I (flattened input volume), N = D_O;
+* Alg 5's Delta_O output stacking  ->  the N-dimension block ``block_n``:
+  one grid step keeps a (block_m x block_n) output stack resident in VMEM
+  while K streams through, exactly like a cluster keeping its Delta_O
+  output slices in L1 while input slices stream through;
+* Alg 4's "parallelize input depth slices + private outputs + reduction"
+  -> the K grid dimension with an f32 VMEM accumulator (private partial
+  output), flushed once on the last K step (the "tree reduction" happens
+  in-register/VMEM instead of over the NoC when K is on one chip, and as
+  a psum over the mesh when K is sharded - see core/fc_layer.py);
+* the paper's double-buffered DmaLoad/DmaWait  ->  Pallas's implicit
+  cross-grid-step pipelining of HBM->VMEM block copies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul on the resident blocks; f32 accumulation.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked matmul; shapes must already be multiples of the blocks."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    out_dtype = out_dtype or x.dtype
+    n_k = k // block_k
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)

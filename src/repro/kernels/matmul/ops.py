@@ -1,0 +1,91 @@
+"""Jit'd public wrapper for the FC matmul kernel: padding, block choice.
+
+Block sizes are chosen by the *paper's* capacity argument (Sec. 3.1.2)
+against the TPU machine model: maximize the output stack (block_n, the
+Delta_O analogue) subject to the working set + double-buffers fitting VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.kernels.matmul.matmul import matmul_pallas
+
+_LANE = 128  # MXU/VPU lane width: all blocks are multiples of 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def choose_blocks(
+    m: int,
+    n: int,
+    k: int,
+    in_bytes: int = 2,
+    machine: MachineModel = TPU_V5E,
+) -> tuple[int, int, int]:
+    """Paper-style Delta_O chooser for matmul blocks.
+
+    Working set per grid step: x block (bm*bk), w block (bk*bn), f32
+    accumulator (bm*bn*4), double-buffered in/out streams.  We fix
+    bm, bk at MXU-friendly sizes and grow bn (the output stack) until the
+    budget is exhausted - the Alg 5 strategy verbatim.
+    """
+    bm = min(_round_up(m, _LANE), 512)
+    bk = min(_round_up(k, _LANE), 512)
+    budget = machine.usable_for_working_set(streams=2)
+    bn = _LANE
+    while True:
+        nxt = bn + _LANE
+        working = (bm * bk + bk * nxt) * in_bytes * 2 + bm * nxt * 4
+        if nxt > 2048 or nxt > _round_up(n, _LANE) or working > budget:
+            break
+        bn = nxt
+    return bm, min(bn, _round_up(n, _LANE)), bk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def fc_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """O = X @ W via the Alg 4/5 Pallas kernel; arbitrary shapes (padded).
+
+    ``x``: [..., K]; ``w``: [K, N].  Leading dims of ``x`` are flattened
+    into M (the batch dimension of the paper's FC layer).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k, n = w.shape
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    bm, bn, bk = choose_blocks(m, n, k, in_bytes=x.dtype.itemsize)
+    bm = block_m or min(bm, _round_up(m, _LANE))
+    bn = block_n or bn
+    bk = block_k or bk
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = matmul_pallas(
+        x2, wp, block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n].reshape(*lead, n)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the FC/blocked matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def fc_matmul_ref(x, w, out_dtype=None):
+    """O = X @ W with f32 accumulation.
+
+    ``x``: [M, K] activations (M = batch-like dim, K = W_I^2 * D_I).
+    ``w``: [K, N] filter parameters (N = D_O).
+    """
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)

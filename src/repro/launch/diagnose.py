@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Per-cell diagnosis for the perf loop: per-op FLOPs/bytes attribution and
+the largest collective ops with shapes.
+
+    PYTHONPATH=src python -m repro.launch.diagnose gemma3-4b prefill_32k
+"""
+
+import re
+import sys
+
+import jax
+
+
+def main() -> None:
+    arch, shape = sys.argv[1], sys.argv[2]
+    multi = "--multi-pod" in sys.argv
+    from repro.analysis import hlo_cost
+    from repro.launch.mesh import make_ctx
+    from repro.launch.specs import build_cell
+
+    ctx = make_ctx(multi_pod=multi)
+    cell = build_cell(arch, shape, ctx)
+    with ctx.mesh:
+        compiled = jax.jit(cell.step_fn, in_shardings=cell.in_shardings).lower(
+            *cell.args).compile()
+    txt = compiled.as_text()
+    c = hlo_cost.analyze(txt)
+
+    print(f"== {arch} {shape} ({'2x16x16' if multi else '16x16'}) per-device ==")
+    print(f"flops {c.flops:.3e}  bytes {c.bytes:.3e}  coll {sum(c.coll.values()):.3e}")
+    print(f"t_compute {c.flops/197e12:.2f}s  t_memory {c.bytes/819e9:.2f}s  "
+          f"t_coll {sum(c.coll.values())/50e9:.2f}s")
+    print("-- by op (top bytes) --")
+    for op, (f, b) in sorted(c.by_op.items(), key=lambda kv: -kv[1][1])[:10]:
+        print(f"  {op:22s} flops={f:.3e} bytes={b:.3e}")
+    print("-- by collective --")
+    for k, v in sorted(c.coll.items(), key=lambda kv: -kv[1]):
+        if v:
+            print(f"  {k:22s} {v:.3e}")
+    print("-- largest collective instructions (static shapes) --")
+    seen = {}
+    for m in re.finditer(
+        r"= ((?:\([^=)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*)) (all-reduce|all-gather|"
+        r"reduce-scatter|all-to-all|collective-permute)", txt):
+        b = hlo_cost.shape_bytes(m.group(1))
+        key = (m.group(2), m.group(1)[:60])
+        seen[key] = (seen.get(key, (0, 0))[0] + 1, b)
+    for (op, shp), (n, b) in sorted(seen.items(), key=lambda kv: -kv[1][1])[:12]:
+        print(f"  {op:20s} x{n:3d}  {b/1e6:9.1f}MB  {shp}")
+    mem = compiled.memory_analysis()
+    if mem:
+        print(f"-- memory: args {mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out {mem.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp {mem.temp_size_in_bytes/2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/roofline terms.
+
+MUST be run as its own process (the two lines above must execute before
+any jax device initialization):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun.json
+
+Results are cached incrementally in a JSON file keyed by
+(arch, shape, mesh); re-runs skip completed cells unless --force.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    from repro.analysis import roofline as rl
+    from repro.launch.mesh import make_ctx
+    from repro.launch.specs import build_cell
+
+    ctx = make_ctx(multi_pod=multi_pod)
+    chips = ctx.mesh.size
+    cell = build_cell(arch, shape_name, ctx)
+
+    t0 = time.time()
+    with ctx.mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_info[k] = int(v)
+
+    counts = cell.meta["counts"]
+    roof = rl.from_compiled(
+        compiled, cell.meta["kind"], counts["active"], cell.meta["tokens"], chips
+    )
+    coll = rl.collective_bytes(compiled.as_text())
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "compile_seconds": round(t1 - t0, 1),
+        "params_total": counts["total"],
+        "params_active_body": counts["active"],
+        "memory": mem_info,
+        "bytes_per_device": (mem_info.get("argument_size_in_bytes", 0)
+                             + mem_info.get("temp_size_in_bytes", 0)),
+        "collectives": coll,
+        "roofline": roof.as_dict(),
+        "ok": True,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ARCH_IDS, cells
+
+    targets: list[tuple[str, str, bool]] = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in (cells(a) if not args.shape else [args.shape]):
+            for mp in meshes:
+                targets.append((a, s, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch, shape, mp in targets:
+        key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+        if key in results and results[key].get("ok") and not args.force:
+            print(f"[skip] {key} (cached)", flush=True)
+            continue
+        print(f"[run ] {key} ...", flush=True)
+        try:
+            res = run_cell(arch, shape, mp)
+            r = res["roofline"]
+            print(
+                f"[ ok ] {key}: compile={res['compile_seconds']}s "
+                f"flops={r['flops']:.3e} hbmB={r['bytes_hbm']:.3e} "
+                f"collB={r['bytes_coll']:.3e} bound={r['bottleneck']} "
+                f"frac={r['roofline_fraction']:.3f}",
+                flush=True,
+            )
+        except Exception as e:  # a failing cell is a bug; record it
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"[FAIL] {key}: {res['error']}", flush=True)
+        results[key] = res
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"done: {n_ok}/{len(results)} cells ok -> {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

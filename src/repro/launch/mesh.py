@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+initialization, and smoke tests/benches must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.runtime.parallel import ParallelCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_ctx(mesh=None, *, multi_pod: bool = False) -> ParallelCtx:
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return ParallelCtx(mesh=mesh, dp_axes=dp, tp_axis="model")
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for 8-virtual-device tests."""
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)

@@ -1,0 +1,196 @@
+"""Cell builder: (arch x shape x mesh) -> abstract inputs + shardings +
+step function, for the dry-run and the roofline analysis.
+
+Everything here is ShapeDtypeStruct-based: no weight, cache, or batch is
+ever allocated (the assignment's "weak-type-correct, shardable, no device
+allocation" pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.registry import get_config, get_shape
+from repro.models import cnn
+from repro.models.module import abstract_params, count_params, flatten_defs, param_specs
+from repro.models.registry import get_family
+from repro.optim import adamw
+from repro.runtime import serve as serve_rt
+from repro.runtime import train as train_rt
+from repro.runtime.parallel import ParallelCtx, batch_spec, cache_specs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    step_fn: Callable
+    args: tuple  # abstract ShapeDtypeStructs
+    in_shardings: tuple
+    meta: dict[str, Any]
+
+
+def shard_extra_axis(spec: P, shape: tuple, axes: tuple, mesh_shape: dict) -> P:
+    """FSDP/ZeRO: add the data axes to the first unsharded divisible dim."""
+    n = 1
+    for a in axes:
+        n *= mesh_shape[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % n == 0 and dim >= n:
+            entries[i] = axes if len(axes) > 1 else axes[0]
+            return P(*entries)
+    return P(*entries)
+
+
+def fsdp_specs(specs, abstract, ctx: ParallelCtx):
+    mesh_shape = dict(ctx.mesh.shape)
+    return jax.tree.map(
+        lambda s, a: shard_extra_axis(s, a.shape, ctx.dp_axes, mesh_shape),
+        specs, abstract,
+    )
+
+
+def param_counts(cfg: ModelConfig, defs) -> dict:
+    """Total, embedding, and active (MoE-scaled) parameter counts."""
+    total = count_params(defs)
+    embed = 0
+    moe_ffn = 0
+    for path, d in flatten_defs(defs):
+        if path.split("/")[-1] in ("embed", "w_out"):
+            embed += math.prod(d.shape)
+        if "/moe/w_" in path:
+            moe_ffn += math.prod(d.shape)
+    n_body = total - embed
+    active = n_body
+    if cfg.n_experts:
+        active = n_body - moe_ffn + moe_ffn * cfg.moe_top_k // cfg.n_experts
+    return {"total": total, "embed": embed, "body": n_body, "active": active}
+
+
+def default_train_config(cfg: ModelConfig, global_batch: int, ctx: ParallelCtx) -> TrainConfig:
+    # Microbatch: ~8 accumulation steps, divisible by the dp extent.
+    micro = max(ctx.dp_size, global_batch // 8)
+    while global_batch % micro:
+        micro -= 1
+    big = cfg.n_layers * cfg.d_model >= 64 * 4096
+    return TrainConfig(
+        param_dtype="bfloat16" if big else "float32",
+        microbatch=micro,
+        remat="block",
+        loss_chunks=16,
+    )
+
+
+def _batch_struct(cfg: ModelConfig, kind: str, seq: int, batch: int,
+                  tcfg: TrainConfig, ctx: ParallelCtx):
+    """(abstract batch pytree, matching sharding-spec pytree)."""
+    i32 = jnp.int32
+    if cfg.family == "cnn":
+        n = batch // tcfg.microbatch if tcfg.microbatch else 1
+        m = tcfg.microbatch or batch
+        bs = batch_spec(ctx, m, 2)
+        return (
+            {"images": jax.ShapeDtypeStruct((n, m, cnn.IMG, cnn.IMG, cnn.IN_CH), jnp.float32),
+             "labels": jax.ShapeDtypeStruct((n, m), i32)},
+            {"images": P(None, bs[0], None, None, None), "labels": P(None, bs[0])},
+        )
+    if kind == "train":
+        n = batch // tcfg.microbatch if tcfg.microbatch else 1
+        m = tcfg.microbatch or batch
+        if n > 1:
+            shp, lead = (n, m, seq), (None,) + tuple(batch_spec(ctx, m, 1))
+        else:
+            shp, lead = (m, seq), tuple(batch_spec(ctx, m, 1))
+        b = {"tokens": jax.ShapeDtypeStruct(shp, i32),
+             "labels": jax.ShapeDtypeStruct(shp, i32)}
+        s = {"tokens": P(*lead, None), "labels": P(*lead, None)}
+        if cfg.family == "encdec":
+            fs = (n, m, cfg.enc_seq, cfg.d_model) if n > 1 else (m, cfg.enc_seq, cfg.d_model)
+            b["frames"] = jax.ShapeDtypeStruct(fs, jnp.bfloat16)
+            s["frames"] = P(*lead, None, None)
+        return b, s
+    # prefill
+    b = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+    s = {"tokens": batch_spec(ctx, batch, 2)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        s["frames"] = P(*tuple(batch_spec(ctx, batch, 1)), None, None)
+    return b, s
+
+
+def build_cell(arch: str, shape_name: str, ctx: ParallelCtx) -> Cell:
+    cfg = get_config(arch)
+    shp = get_shape(shape_name)
+    fam = get_family(cfg.family) if cfg.family != "cnn" else None
+    mesh = ctx.mesh
+
+    if cfg.family == "cnn":
+        defs = cnn.param_defs(cfg)
+    else:
+        defs = fam.param_defs(cfg)
+    specs = param_specs(defs)
+    counts = param_counts(cfg, defs)
+
+    ns = lambda tree: jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree)
+
+    if shp.kind == "train":
+        tcfg = default_train_config(cfg, shp.global_batch, ctx)
+        pdt = jnp.dtype(tcfg.param_dtype)
+        aparams = abstract_params(defs, pdt)
+        pspecs = fsdp_specs(specs, aparams, ctx)
+        aopt = adamw.abstract_state(aparams)
+        ospecs = adamw.AdamWState(
+            step=P(),
+            m=fsdp_specs(specs, aparams, ctx),
+            v=fsdp_specs(specs, aparams, ctx),
+        )
+        astate = train_rt.TrainState(params=aparams, opt=aopt, err=None)
+        sstate = train_rt.TrainState(params=pspecs, opt=ospecs, err=None)
+        batch, bspecs = _batch_struct(cfg, "train", shp.seq_len, shp.global_batch, tcfg, ctx)
+        step = train_rt.make_train_step(cfg, tcfg, parallel=_moe_ctx(cfg, ctx),
+                                        grad_specs=fsdp_specs(specs, aparams, ctx))
+        return Cell(arch, shape_name, cfg, step, (astate, batch),
+                    (ns(sstate), ns(bspecs)),
+                    {"counts": counts, "tcfg": tcfg, "kind": "train",
+                     "tokens": shp.global_batch * shp.seq_len})
+
+    pdt = jnp.bfloat16
+    aparams = abstract_params(defs, pdt)
+    pspecs = fsdp_specs(specs, aparams, ctx)
+
+    if shp.kind == "prefill":
+        batch, bspecs = _batch_struct(cfg, "prefill", shp.seq_len, shp.global_batch, None, ctx)
+        step = serve_rt.make_prefill_step(cfg, shp.seq_len, parallel=_moe_ctx(cfg, ctx))
+        return Cell(arch, shape_name, cfg, step, (aparams, batch),
+                    (ns(pspecs), ns(bspecs)),
+                    {"counts": counts, "kind": "prefill",
+                     "tokens": shp.global_batch * shp.seq_len})
+
+    # decode: one new token against a seq_len cache
+    acache = jax.eval_shape(
+        lambda: fam.init_cache(cfg, shp.global_batch, shp.seq_len, jnp.bfloat16)
+    )
+    cspecs = cache_specs(ctx, acache)
+    tokens = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = serve_rt.make_decode_step(cfg, parallel=_moe_ctx(cfg, ctx))
+    return Cell(arch, shape_name, cfg, step,
+                (aparams, acache, tokens, pos),
+                (ns(pspecs), ns(cspecs), ns(batch_spec(ctx, shp.global_batch, 2)), ns(P())),
+                {"counts": counts, "kind": "decode", "tokens": shp.global_batch})
+
+
+def _moe_ctx(cfg: ModelConfig, ctx: ParallelCtx):
+    # All families receive the ctx (sharding-constraint anchors + the MoE
+    # shard_map dispatch); name kept for history.
+    return ctx

@@ -1,0 +1,171 @@
+"""Attention used inside models: GQA, causal, sliding-window, KV cache.
+
+Two execution paths, one math:
+
+* ``direct`` - one materialized logits tensor; used for decode (Sq == 1)
+  and small problems.
+* ``blockwise`` - flash-style two-level scan over query/KV chunks with
+  running (m, l) statistics; O(chunk^2) live memory, differentiable, and
+  GSPMD-partitionable (pure jnp/lax).  This is the paper's Alg 2 "output
+  stack resident, inputs streamed" schedule expressed at the XLA level;
+  the Pallas kernel in kernels/flash_attention is the same schedule one
+  level down, used on the TPU hot path.
+
+``window`` may be a static int/None or a traced per-layer scalar (gemma3's
+5:1 local:global pattern runs as one scanned layer body).  A window value
+< 0 means "no window" when traced.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask(q_pos, k_pos, causal, window):
+    """[Sq, Skv] boolean visibility mask from position vectors."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        m &= jnp.where(w < 0, True, q_pos[:, None] - k_pos[None, :] < w)
+    return m
+
+
+def _direct(q, k, v, q_pos, k_pos, scale, causal, window):
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale + jnp.where(_mask(q_pos, k_pos, causal, window), 0.0, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def _blockwise(q, k, v, q_pos, k_pos, scale, causal, window, chunk_q, chunk_kv):
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    cq, ckv = min(chunk_q, Sq), min(chunk_kv, Skv)
+    assert Sq % cq == 0 and Skv % ckv == 0, (Sq, cq, Skv, ckv)
+    nq, nkv = Sq // cq, Skv // ckv
+
+    qs = q.reshape(B, H, nq, cq, D).transpose(2, 0, 1, 3, 4)
+    qp = q_pos.reshape(nq, cq)
+    ks = k.reshape(B, H, nkv, ckv, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, H, nkv, ckv, D).transpose(2, 0, 1, 3, 4)
+    kp = k_pos.reshape(nkv, ckv)
+
+    def q_step(_, qx):
+        qc, qpc = qx
+
+        # qc/qpc are loop-invariant for the KV scan: close over them rather
+        # than carrying them (a carried q chunk is copied every KV step —
+        # measured ~50 TB/device of copy traffic on qwen3-moe prefill).
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, kv):
+            acc, m, l = carry
+            kc, vc, kpc = kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc, preferred_element_type=jnp.float32)
+            s = s * scale + jnp.where(_mask(qpc, kpc, causal, window), 0.0, NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, H, cq, D), jnp.float32)
+        m0 = jnp.full((B, H, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (ks, vs, kp))
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows stay finite
+        return None, (acc / l[..., None]).astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qs, qp))
+    return out.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, D)
+
+
+def _attention_core(q, k, v, q_pos, k_pos, causal, window, scale,
+                    chunk_q, chunk_kv):
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D]."""
+    B, Sq, Hq, D = q.shape
+    Hkv, Skv = k.shape[2], k.shape[1]
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+
+    # Fold the GQA group into the query-sequence axis so KV is never
+    # repeated in memory: [B, Hkv, g*Sq, D] queries vs [B, Hkv, Skv, D] KV.
+    qh = q.transpose(0, 2, 1, 3).reshape(B, Hkv, g * Sq, D)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    qpos_g = jnp.tile(q_pos, (g,))
+
+    big = (g * Sq) * Skv > 4 * 1024 * 1024 and (g * Sq) % chunk_q == 0 and Skv % chunk_kv == 0
+    if Sq == 1 or not big:
+        out = _direct(qh, kh, vh, qpos_g, k_pos, scale, causal, window)
+    else:
+        out = _blockwise(
+            qh, kh, vh, qpos_g, k_pos, scale, causal, window, chunk_q, chunk_kv
+        )
+    out = out.reshape(B, Hkv, g, Sq, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,  # [Sq] int32 absolute positions
+    k_pos: jax.Array,  # [Skv]
+    causal: bool = True,
+    window=None,
+    scale: float | None = None,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+    parallel=None,
+) -> jax.Array:
+    """GQA attention; returns [B, Sq, Hq, D].
+
+    When Q heads don't divide the TP axis (gemma3: 8 heads on tp=16), the
+    computation runs *sequence-parallel* under shard_map: each device owns
+    a slice of the query sequence against replicated KV — no collective
+    inside the softmax loop (vs. the Dh-sharded alternative, which psums
+    every logits block).  KV replication costs one gather per layer.
+    """
+    B, Sq, Hq, D = q.shape
+    scale = scale if scale is not None else D**-0.5
+
+    use_seqp = (
+        parallel is not None
+        and Sq > 1
+        and Hq % parallel.tp_size != 0
+        and Sq % parallel.tp_size == 0
+        and (Sq // parallel.tp_size) * (Hq // k.shape[2]) % 8 == 0
+    )
+    if not use_seqp:
+        return _attention_core(q, k, v, q_pos, k_pos, causal, window, scale,
+                               chunk_q, chunk_kv)
+
+    from jax.sharding import PartitionSpec as P
+
+    tp = parallel.tp_axis
+    bax = parallel.batch_axes(B)
+    blead = bax if len(bax) > 1 else (bax[0] if bax else None)
+    wnd = jnp.asarray(-1 if window is None else window, jnp.int32)
+
+    def local_fn(q_l, k_l, v_l, qpos_l, kpos_l, wnd_l):
+        return _attention_core(q_l, k_l, v_l, qpos_l, kpos_l, causal, wnd_l,
+                               scale, chunk_q, chunk_kv)
+
+    return jax.shard_map(
+        local_fn, mesh=parallel.mesh,
+        in_specs=(P(blead, tp, None, None), P(blead, None, None, None),
+                  P(blead, None, None, None), P(tp), P(None), P()),
+        out_specs=P(blead, tp, None, None),
+        check_vma=False,
+    )(q, k, v, q_pos, k_pos, wnd)

@@ -1,0 +1,68 @@
+"""The paper's own domain: a CNN built directly from core.conv_layer and
+core.fc_layer (VGG-style conv/pool stages + two FC layers).
+
+Config reuse: ``n_layers`` = conv stages, ``d_model`` = base channel width
+(doubled per stage), ``d_ff`` = FC hidden width, ``vocab`` = classes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.conv_layer import conv_layer
+from repro.core.fc_layer import fc_layer
+from repro.models.module import ParamDef
+
+IMG = 32  # input resolution (CIFAR-like)
+IN_CH = 3
+F = 3  # receptive field of every conv filter (the paper's running F)
+
+
+def _stage_channels(cfg: ModelConfig) -> list[tuple[int, int]]:
+    chans, c_in = [], IN_CH
+    for i in range(cfg.n_layers):
+        c_out = cfg.d_model * (2**i)
+        chans.append((c_in, c_out))
+        c_in = c_out
+    return chans
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    stages = {}
+    for i, (ci, co) in enumerate(_stage_channels(cfg)):
+        stages[f"conv{i}"] = ParamDef((F, F, ci, co), (None, None, None, None), fan_in_axis=2)
+        stages[f"bias{i}"] = ParamDef((co,), (None,), init="zeros")
+    spatial = IMG // (2 ** cfg.n_layers)
+    flat = spatial * spatial * cfg.d_model * (2 ** (cfg.n_layers - 1))
+    return {
+        **stages,
+        "fc1": ParamDef((flat, cfg.d_ff), (None, "model")),
+        "fc1_b": ParamDef((cfg.d_ff,), (None,), init="zeros"),
+        "fc2": ParamDef((cfg.d_ff, cfg.vocab), ("model", None)),
+        "fc2_b": ParamDef((cfg.vocab,), (None,), init="zeros"),
+    }
+
+
+def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
+            use_kernels: bool = True, **_):
+    """images: [B, IMG, IMG, 3] -> logits [B, classes]."""
+    x = images
+    for i in range(cfg.n_layers):
+        f = params[f"conv{i}"]
+        if use_kernels:
+            x = conv_layer(x, f, 1, F // 2, "alg2")
+        else:
+            from repro.kernels.conv2d.ref import conv2d_ref
+
+            x = conv2d_ref(x, f, stride=1, padding=F // 2)
+        x = jax.nn.relu(x + params[f"bias{i}"])
+        B, H, W, C = x.shape
+        x = x.reshape(B, H // 2, 2, W // 2, 2, C).max((2, 4))  # 2x2 maxpool
+    x = x.reshape(x.shape[0], -1)
+    if use_kernels:
+        x = jax.nn.relu(fc_layer(x, params["fc1"]) + params["fc1_b"])
+        return fc_layer(x, params["fc2"]) + params["fc2_b"]
+    x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
+    return x @ params["fc2"] + params["fc2_b"]

@@ -1,0 +1,161 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings [B, T_enc, d_model]; a linear adapter maps them
+into the encoder.  Encoder: bidirectional self-attention; decoder: causal
+self-attention + cross-attention.  At prefill the cross K/V are computed
+once from the encoder output and cached; decode never re-runs the encoder.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ll
+from repro.models.attention import attention
+from repro.models.module import ParamDef
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    hs = ll.head_axis_spec(Hq, Dh)
+    khs = ll.head_axis_spec(Hkv, Dh)
+    cross = {
+        "wq": ParamDef((Ld, d, Hq, Dh), (None, None) + hs, fan_in_axis=1),
+        "wk": ParamDef((Ld, d, Hkv, Dh), (None, None) + khs, fan_in_axis=1),
+        "wv": ParamDef((Ld, d, Hkv, Dh), (None, None) + khs, fan_in_axis=1),
+        "wo": ParamDef((Ld, Hq, Dh, d), (None,) + hs + (None,), fan_in_axis=1),
+    }
+    return {
+        **ll.embed_defs(cfg),
+        "adapter": ParamDef((d, d), (None, None)),
+        "enc": {
+            "ln1": ParamDef((Le, d), (None, None), init="zeros"),
+            "ln2": ParamDef((Le, d), (None, None), init="zeros"),
+            "attn": ll.attn_defs(cfg, Le),
+            "mlp": ll.mlp_defs(cfg, Le),
+        },
+        "enc_norm": ParamDef((d,), (None,), init="zeros"),
+        "dec": {
+            "ln1": ParamDef((Ld, d), (None, None), init="zeros"),
+            "ln_x": ParamDef((Ld, d), (None, None), init="zeros"),
+            "ln2": ParamDef((Ld, d), (None, None), init="zeros"),
+            "attn": ll.attn_defs(cfg, Ld),
+            "cross": cross,
+            "mlp": ll.mlp_defs(cfg, Ld),
+        },
+    }
+
+
+def encode(cfg, params, frames, remat="none"):
+    """frames: [B, T_enc, d_model] stub embeddings -> encoder output."""
+    x = (frames @ params["adapter"].astype(frames.dtype))
+
+    def body(x, lp):
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h, _ = ll.apply_attention(lp["attn"], h, cfg, pos0=0, causal=False)
+        x = x + h
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + ll.apply_mlp(lp["mlp"], h, cfg.act), None
+
+    if remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return ll.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp_cross, memory):
+    """Precompute cross-attention K/V from encoder memory: [B,T,Hkv,Dh]."""
+    cd = memory.dtype
+    k = jnp.einsum("btd,dhk->bthk", memory, lp_cross["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", memory, lp_cross["wv"].astype(cd))
+    return k, v
+
+
+def _dec_block(x, lp, cfg, pos0, self_cache, xk, xv):
+    cd = x.dtype
+    Dh = cfg.resolved_head_dim
+    h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h, new_cache = ll.apply_attention(lp["attn"], h, cfg, pos0=pos0, cache=self_cache)
+    x = x + h
+    # Cross attention over encoder memory (no RoPE, not causal).
+    h = ll.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"].astype(cd))
+    S, T = q.shape[1], xk.shape[1]
+    out = attention(
+        q, xk, xv,
+        q_pos=pos0 + jnp.arange(S, dtype=jnp.int32),
+        k_pos=jnp.arange(T, dtype=jnp.int32),
+        causal=False, scale=Dh**-0.5,
+    )
+    x = x + jnp.einsum("bshk,hkd->bsd", out, lp["cross"]["wo"].astype(cd))
+    h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + ll.apply_mlp(lp["mlp"], h, cfg.act)
+    return x, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    Ld, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    T = cfg.enc_seq
+    return {
+        "k": jnp.zeros((Ld, batch, max_seq, Hkv, Dh), dtype),
+        "v": jnp.zeros((Ld, batch, max_seq, Hkv, Dh), dtype),
+        "xk": jnp.zeros((Ld, batch, T, Hkv, Dh), dtype),
+        "xv": jnp.zeros((Ld, batch, T, Hkv, Dh), dtype),
+    }
+
+
+def forward(
+    cfg: ModelConfig, params: dict, tokens, *, frames=None, pos0=0, cache=None,
+    remat: str = "none", compute_dtype=jnp.bfloat16, parallel=None,
+):
+    """Train: frames + tokens, no cache.  Prefill: frames + cache.  Decode:
+    cache only (cross K/V already cached)."""
+    from repro.runtime.parallel import constrain
+
+    x = ll.embed_tokens(params, tokens, cfg, compute_dtype)
+    x = constrain(x, parallel, ("dp", None, None))
+
+    if frames is not None:
+        memory = encode(cfg, params, frames.astype(compute_dtype), remat)
+        xk, xv = jax.vmap(
+            lambda lp: _cross_kv(lp, memory), in_axes=(0,)
+        )(params["dec"]["cross"])  # [Ld, B, T, Hkv, Dh]
+    else:
+        assert cache is not None, "decode needs cached cross K/V"
+        xk, xv = cache["xk"], cache["xv"]
+
+    def body(x, xs):
+        lp, xk_l, xv_l, ck, cv = xs
+        sc = (ck, cv) if cache is not None else None
+        x, new_cache = _dec_block(x, lp, cfg, pos0, sc, xk_l.astype(x.dtype), xv_l.astype(x.dtype))
+        if cache is None:
+            new_cache = (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype))
+        return x, new_cache
+
+    if remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    ck = cache["k"] if cache is not None else jnp.zeros((cfg.n_layers,))
+    cv = cache["v"] if cache is not None else jnp.zeros((cfg.n_layers,))
+    x, caches = jax.lax.scan(body, x, (params["dec"], xk, xv, ck, cv))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "k": caches[0], "v": caches[1],
+            "xk": xk.astype(cache["xk"].dtype), "xv": xv.astype(cache["xv"].dtype),
+        }
+    return x, new_cache
+
+
+def logits(cfg, params, hidden):
+    return ll.logits_from_hidden(params, hidden, cfg)
+
+
+def layer_meta(cfg):
+    return {}

@@ -1,0 +1,150 @@
+"""Mamba-2 (SSD) block: chunked state-space duality implementation.
+
+The selective-scan is computed with the SSD chunked algorithm: intra-chunk
+quadratic matmuls + inter-chunk recurrence over per-chunk states — i.e.
+MXU-friendly blocking of a recurrence, which is the paper's Alg 2 insight
+(keep a block resident, stream the sequence) applied to SSMs.  G = 1
+(single B/C group), conv1d width ``cfg.conv_width`` over the x/B/C streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ll
+from repro.models.module import ParamDef
+
+CHUNK = 128
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def block_defs(cfg: ModelConfig, L: int) -> dict:
+    d = cfg.d_model
+    d_in, H, hd, N = dims(cfg)
+    ds = "model" if d_in % 16 == 0 else None
+    conv_ch = d_in + 2 * N
+    return {
+        "ln": ParamDef((L, d), (None, None), init="zeros"),
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": ParamDef((L, d, 2 * d_in + 2 * N + H), (None, None, ds), fan_in_axis=1),
+        "conv_w": ParamDef((L, cfg.conv_width, conv_ch), (None, None, ds), scale=0.5, fan_in_axis=1),
+        "conv_b": ParamDef((L, conv_ch), (None, ds), init="zeros"),
+        "A_log": ParamDef((L, H), (None, None), init="zeros"),
+        "D": ParamDef((L, H), (None, None), init="ones"),
+        "dt_bias": ParamDef((L, H), (None, None), init="zeros"),
+        "gn": ParamDef((L, d_in), (None, ds), init="zeros"),
+        "w_out": ParamDef((L, d_in, d), (None, ds, None), fan_in_axis=1),
+    }
+
+
+def _depthwise_conv(x, w, b, state):
+    """Causal depthwise conv1d.  x: [B, S, C]; w: [W, C]; state: [B, W-1, C]
+    (trailing inputs of the previous segment).  Returns (y, new_state)."""
+    W = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # [B, S+W-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else state
+    return jax.nn.silu(y + b), new_state
+
+
+def _segsum(a):
+    """a: [..., Q] -> lower-triangular cumulative sums L[i, j] = sum_{j<t<=i} a_t."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_(j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, state):
+    """SSD forward.
+
+    x: [B, S, H, P]; dt: [B, S, H] (post-softplus); A_log: [H];
+    B, C: [B, S, N]; D: [H]; state: [Bb, H, P, N] carried across segments.
+    Returns (y [B, S, H, P], new_state).
+    """
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    a = -jnp.exp(A_log.astype(jnp.float32))[None, None, :] * dt  # [B, S, H] (<0)
+    xr = (x * dt[..., None]).reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    ar = a.reshape(Bb, nc, Q, H)
+    Br = B.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cr = C.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    # Intra-chunk (quadratic, MXU): Y_diag = (C B^T * L) @ x
+    Lmat = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))  # [B, nc, H, Q, Q]
+    G = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)  # [B, nc, Q, Q]
+    Y = jnp.einsum("bchqk,bckhp->bcqhp", G[:, :, None] * Lmat, xr)
+
+    # Per-chunk input states and decays.
+    a_cum = jnp.cumsum(ar, 2)  # [B, nc, Q, H]
+    a_tail = a_cum[:, :, -1:, :] - a_cum  # decay from t to chunk end
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", Br, jnp.exp(a_tail), xr)
+
+    # Inter-chunk recurrence over nc chunk states.
+    a_tot = a_cum[:, :, -1, :]  # [B, nc, H]
+
+    def step(s, inp):
+        st, at = inp  # [B, H, P, N], [B, H]
+        s_out = s  # state *entering* the chunk
+        s = s * jnp.exp(at)[..., None, None] + st
+        return s, s_out
+
+    state, s_in = jax.lax.scan(
+        step, state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)),
+    )
+    s_in = s_in.transpose(1, 0, 2, 3, 4)  # [B, nc, H, P, N]
+
+    # Contribution of the entering state to each position.
+    Y += jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cr, jnp.exp(a_cum), s_in)
+    Y = Y.reshape(Bb, S, H, P) + D[None, None, :, None] * x.astype(jnp.float32)
+    return Y, state
+
+
+def apply_block(p, x, cfg: ModelConfig, state):
+    """One Mamba-2 block.  x: [B, S, d]; state: {"conv": ..., "ssd": ...}."""
+    Bb, S, d = x.shape
+    d_in, H, hd, N = dims(cfg)
+    cd = x.dtype
+
+    proj = x @ p["w_in"].astype(cd)  # [B, S, 2*d_in + 2N + H]
+    z, xc, Bc, Cc, dt = jnp.split(proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], -1)
+
+    conv_in = jnp.concatenate([xc, Bc, Cc], -1)
+    conv_out, conv_state = _depthwise_conv(conv_in, p["conv_w"].astype(cd),
+                                           p["conv_b"].astype(cd), state["conv"])
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], -1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y, ssd_state = ssd_chunked(
+        xc.reshape(Bb, S, H, hd), dt, p["A_log"], Bc, Cc, p["D"], state["ssd"]
+    )
+    y = y.reshape(Bb, S, d_in).astype(cd)
+    y = y * jax.nn.silu(z)
+    # Gated RMS norm (f32).
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+    y = (yf * (1.0 + p["gn"].astype(jnp.float32))).astype(cd)
+    out = y @ p["w_out"].astype(cd)
+    return out, {"conv": conv_state, "ssd": ssd_state}
+
+
+def init_block_state(cfg: ModelConfig, L: int, batch: int, dtype=jnp.bfloat16):
+    d_in, H, hd, N = dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((L, batch, H, hd, N), jnp.float32),
+    }

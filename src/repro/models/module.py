@@ -1,0 +1,105 @@
+"""Minimal pure-JAX module system.
+
+Models are *data*, not objects: each model family provides
+
+  ``param_defs(cfg) -> nested dict of ParamDef``
+  ``apply(cfg, params, batch, ...) -> outputs``
+
+From the defs we derive, without ever allocating a weight:
+  * ``init_params``      - materialized pytree (deterministic per-path RNG)
+  * ``abstract_params``  - jax.ShapeDtypeStruct pytree (dry-run / .lower())
+  * ``param_specs``      - jax.sharding.PartitionSpec pytree (pjit shardings)
+  * ``count_params``     - closed-form parameter count
+
+Stacked layers (lax.scan over a leading L dim) are expressed simply by a
+leading dimension in the def's shape with ``None`` as its spec entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    # PartitionSpec entries: None | axis name | tuple of axis names.
+    spec: tuple = ()
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev; default 1/sqrt(fan_in)
+    dtype: Any = None  # None -> the model's param dtype
+    fan_in_axis: int = -2  # which axis is fan-in for default init scale
+
+    def partition_spec(self) -> P:
+        spec = self.spec or (None,) * len(self.shape)
+        assert len(spec) == len(self.shape), (self.shape, spec)
+        return P(*spec)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _map_defs(fn, defs: dict, path: str = ""):
+    out = {}
+    for k, v in defs.items():
+        p = f"{path}/{k}" if path else k
+        out[k] = fn(p, v) if _is_def(v) else _map_defs(fn, v, p)
+    return out
+
+
+def init_params(defs: dict, key: jax.Array, dtype=jnp.float32) -> dict:
+    """Materialize parameters; each leaf's RNG is folded from its path so
+    init is order- and structure-stable."""
+
+    def leaf(path: str, d: ParamDef):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        k = jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+        fan_in = d.shape[d.fan_in_axis] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt)
+
+    return _map_defs(leaf, defs)
+
+
+def abstract_params(defs: dict, dtype=jnp.float32) -> dict:
+    return _map_defs(
+        lambda _, d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype), defs
+    )
+
+
+def param_specs(defs: dict) -> dict:
+    return _map_defs(lambda _, d: d.partition_spec(), defs)
+
+
+def count_params(defs: dict) -> int:
+    total = 0
+
+    def leaf(_, d):
+        nonlocal total
+        total += math.prod(d.shape)
+        return None
+
+    _map_defs(leaf, defs)
+    return total
+
+
+def flatten_defs(defs: dict, path: str = ""):
+    """Yield (path, ParamDef) pairs."""
+    for k, v in defs.items():
+        p = f"{path}/{k}" if path else k
+        if _is_def(v):
+            yield p, v
+        else:
+            yield from flatten_defs(v, p)

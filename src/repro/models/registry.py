@@ -1,0 +1,21 @@
+"""Model-family registry: family name -> module implementing
+param_defs / forward / logits / init_cache / layer_meta."""
+
+from __future__ import annotations
+
+from repro.models import encdec, moe, rwkv6, transformer, zamba2
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "rwkv6": rwkv6,
+    "zamba2": zamba2,
+    "encdec": encdec,
+}
+
+
+def get_family(name: str):
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise ValueError(f"unknown model family {name!r}; have {list(FAMILIES)}") from None

@@ -1,0 +1,114 @@
+"""Dense decoder-only transformer (gemma3 / qwen3 / qwen1.5 / chameleon).
+
+Layers are stacked (leading L dim) and executed with lax.scan so the HLO is
+one layer body regardless of depth.  Per-layer heterogeneity (gemma3's 5:1
+local:global attention with different RoPE bases) is expressed as scanned
+per-layer scalars (window, theta), not as distinct HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ll
+from repro.models.module import ParamDef
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        **ll.embed_defs(cfg),
+        "layers": {
+            "ln1": ParamDef((L, d), (None, None), init="zeros"),
+            "ln2": ParamDef((L, d), (None, None), init="zeros"),
+            "attn": ll.attn_defs(cfg, L),
+            "mlp": ll.mlp_defs(cfg, L),
+        },
+    }
+
+
+def layer_meta(cfg: ModelConfig) -> dict:
+    """Per-layer (window, theta) arrays; window -1 means full attention."""
+    L = cfg.n_layers
+    idx = jnp.arange(L)
+    if cfg.global_every:
+        is_global = (idx + 1) % cfg.global_every == 0
+        window = jnp.where(is_global, -1, cfg.local_window or -1)
+        theta = jnp.where(
+            is_global, cfg.rope_theta_global or cfg.rope_theta, cfg.rope_theta
+        )
+    else:
+        window = jnp.full((L,), cfg.local_window or -1, jnp.int32)
+        theta = jnp.full((L,), cfg.rope_theta, jnp.float32)
+    return {"window": window.astype(jnp.int32), "theta": theta.astype(jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """KV cache [L, B, Smax, Hkv, Dh] per tensor."""
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,  # [B, S] int32
+    *,
+    pos0=0,
+    cache: dict | None = None,
+    remat: str = "none",
+    compute_dtype=jnp.bfloat16,
+    parallel=None,
+):
+    """Returns (hidden [B, S, d], new_cache)."""
+    from repro.runtime.parallel import constrain
+
+    x = ll.embed_tokens(params, tokens, cfg, compute_dtype)
+    x = constrain(x, parallel, ("dp", None, None))
+    meta = layer_meta(cfg)
+
+    def body(x, xs):
+        lp, window, theta, ck, cv = xs
+        h, new_cache = _block(x, lp, cfg, window, theta, pos0,
+                              (ck, cv) if cache is not None else None, parallel)
+        return h, new_cache
+
+    if remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+
+    ck = cache["k"] if cache is not None else jnp.zeros((cfg.n_layers,))
+    cv = cache["v"] if cache is not None else jnp.zeros((cfg.n_layers,))
+    x, caches = jax.lax.scan(
+        body, x, (params["layers"], meta["window"], meta["theta"], ck, cv)
+    )
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": caches[0], "v": caches[1]}
+    return x, new_cache
+
+
+def _block(x, lp, cfg, window, theta, pos0, cache, parallel=None):
+    h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h, new_cache = ll.apply_attention(
+        lp["attn"], h, cfg, pos0=pos0, window=window, theta=theta, cache=cache,
+        parallel=parallel,
+    )
+    x = x + h
+    h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + ll.apply_mlp(lp["mlp"], h, cfg.act, parallel)
+    if cache is None:
+        new_cache = (jnp.zeros((), x.dtype), jnp.zeros((), x.dtype))
+    return x, new_cache
+
+
+def logits(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    return ll.logits_from_hidden(params, hidden, cfg)

@@ -1,0 +1,122 @@
+"""Zamba2: Mamba-2 backbone with a *shared* attention+MLP block applied
+every ``cfg.shared_attn_every`` layers (params reused at every application,
+per the Zamba2 design: one transformer block amortized over the depth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ll
+from repro.models import mamba2
+from repro.models.module import ParamDef
+
+
+def _segments(cfg: ModelConfig) -> list[int]:
+    """Mamba-layer run lengths between shared-attn applications."""
+    every = cfg.shared_attn_every or cfg.n_layers
+    segs, left = [], cfg.n_layers
+    while left > 0:
+        segs.append(min(every, left))
+        left -= every
+    return segs
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return sum(1 for s in _segments(cfg) if s == (cfg.shared_attn_every or cfg.n_layers))
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        **ll.embed_defs(cfg),
+        "mamba": mamba2.block_defs(cfg, cfg.n_layers),
+        "shared": {  # single shared transformer block (unstacked)
+            "ln1": ParamDef((d,), (None,), init="zeros"),
+            "ln2": ParamDef((d,), (None,), init="zeros"),
+            "attn": ll.attn_defs(cfg, 0, layers_prefix=False),
+            "mlp": {k: ParamDef(v.shape[1:], v.spec[1:], fan_in_axis=0)
+                    for k, v in ll.mlp_defs(cfg, 1).items()},
+        },
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    n_app = n_shared_applications(cfg)
+    Dh = cfg.resolved_head_dim
+    return {
+        "mamba": mamba2.init_block_state(cfg, cfg.n_layers, batch, dtype),
+        "k": jnp.zeros((n_app, batch, max_seq, cfg.n_kv_heads, Dh), dtype),
+        "v": jnp.zeros((n_app, batch, max_seq, cfg.n_kv_heads, Dh), dtype),
+    }
+
+
+def _shared_block(p, x, cfg, pos0, cache, parallel=None):
+    h = ll.rms_norm(x, p["ln1"], cfg.norm_eps)
+    h, new_cache = ll.apply_attention(p["attn"], h, cfg, pos0=pos0, cache=cache,
+                                      parallel=parallel)
+    x = x + h
+    h = ll.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + ll.apply_mlp(p["mlp"], h, cfg.act, parallel)
+    return x, new_cache
+
+
+def forward(
+    cfg: ModelConfig, params: dict, tokens, *, pos0=0, cache=None,
+    remat: str = "none", compute_dtype=jnp.bfloat16, parallel=None,
+):
+    from repro.runtime.parallel import constrain
+
+    B, S = tokens.shape
+    x = ll.embed_tokens(params, tokens, cfg, compute_dtype)
+    x = constrain(x, parallel, ("dp", None, None))
+    state = cache["mamba"] if cache is not None else mamba2.init_block_state(
+        cfg, cfg.n_layers, B, compute_dtype
+    )
+
+    def seg_body(x, xs):
+        lp, st = xs
+        h = ll.rms_norm(x, lp["ln"], cfg.norm_eps)
+        h, st = mamba2.apply_block(lp, h, cfg, st)
+        return x + h, st
+
+    if remat == "block":
+        seg_body = jax.checkpoint(seg_body, prevent_cse=False)
+
+    slice_tree = lambda t, i0, i1: jax.tree.map(lambda a: a[i0:i1], t)
+    new_mamba, new_k, new_v = [], [], []
+    off = app = 0
+    for seg in _segments(cfg):
+        xs = (slice_tree(params["mamba"], off, off + seg),
+              slice_tree(state, off, off + seg))
+        x, st = jax.lax.scan(seg_body, x, xs)
+        new_mamba.append(st)
+        off += seg
+        if seg == (cfg.shared_attn_every or cfg.n_layers):
+            kv = None
+            if cache is not None:
+                kv = (cache["k"][app], cache["v"][app])
+            x, kv = _shared_block(params["shared"], x, cfg, pos0, kv, parallel)
+            if cache is not None:
+                new_k.append(kv[0])
+                new_v.append(kv[1])
+            app += 1
+
+    new_cache = None
+    mstate = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba)
+    if cache is not None:
+        new_cache = {
+            "mamba": mstate,
+            "k": jnp.stack(new_k, 0),
+            "v": jnp.stack(new_v, 0),
+        }
+    return x, new_cache
+
+
+def logits(cfg, params, hidden):
+    return ll.logits_from_hidden(params, hidden, cfg)
+
+
+def layer_meta(cfg):
+    return {}

@@ -1,0 +1,98 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic re-mesh.
+
+On real multi-host TPU the coordinator sees worker liveness through the
+heartbeat files (one per host on shared storage) and drives the restart
+protocol below; here the same machinery runs single-process and is
+exercised by failure-injection tests.
+
+Restart protocol (train.py launcher):
+  1. every worker writes ``hb_<host>.json`` (step, walltime) each step;
+  2. the monitor flags a host stale after ``timeout`` seconds;
+  3. surviving hosts abort the step, a new mesh is built from the
+     remaining host count (``shrink_mesh``: the data axis shrinks, model
+     axis is preserved — TP groups must stay intact);
+  4. the last committed checkpoint restores with the *new* shardings
+     (checkpoint/checkpoint.py reshard-on-restore), and training resumes.
+
+Straggler mitigation: per-step wall-clock watchdog against a rolling
+median; sustained stragglers are reported so the launcher can evict the
+host (step skipping is never silent).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    host: str
+    dir: str
+
+    def beat(self, step: int) -> None:
+        path = os.path.join(self.dir, f"hb_{self.host}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": time.time()}, f)
+        os.replace(tmp, path)
+
+
+class Monitor:
+    def __init__(self, dir: str, timeout: float = 60.0):
+        self.dir, self.timeout = dir, timeout
+
+    def stale_hosts(self, now: float | None = None) -> list[str]:
+        now = now if now is not None else time.time()
+        stale = []
+        for fn in sorted(os.listdir(self.dir)):
+            if not fn.startswith("hb_"):
+                continue
+            with open(os.path.join(self.dir, fn)) as f:
+                hb = json.load(f)
+            if now - hb["time"] > self.timeout:
+                stale.append(fn[3:-5])
+        return stale
+
+    def live_hosts(self, now: float | None = None) -> list[str]:
+        now = now if now is not None else time.time()
+        live = []
+        for fn in sorted(os.listdir(self.dir)):
+            if fn.startswith("hb_"):
+                with open(os.path.join(self.dir, fn)) as f:
+                    hb = json.load(f)
+                if now - hb["time"] <= self.timeout:
+                    live.append(fn[3:-5])
+        return live
+
+
+class StragglerWatchdog:
+    """Rolling-median step-time watchdog."""
+
+    def __init__(self, factor: float = 2.0, window: int = 32):
+        self.factor, self.window = factor, window
+        self.times: list[float] = []
+
+    def observe(self, step_seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.times.append(step_seconds)
+        self.times = self.times[-self.window :]
+        if len(self.times) < 8:
+            return False
+        med = sorted(self.times)[len(self.times) // 2]
+        return step_seconds > self.factor * med
+
+
+def shrink_mesh_shape(n_devices: int, model: int = 16, pod: int | None = None):
+    """Largest (data, model) [or (pod, data, model)] mesh from survivors;
+    the model (TP) extent is preserved, data shrinks."""
+    if n_devices % model:
+        raise ValueError(f"survivors ({n_devices}) not divisible by model={model}")
+    rest = n_devices // model
+    if pod:
+        if rest % pod:
+            pod = 1
+        return (pod, rest // pod, model)
+    return (rest, model)

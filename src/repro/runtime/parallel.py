@@ -1,0 +1,147 @@
+"""Parallelism context + divisibility-aware sharding policy.
+
+The production mesh is fixed by the assignment: ``(data=16, model=16)``
+single-pod and ``(pod=2, data=16, model=16)`` multi-pod.  Within that
+constraint the policy adapts per architecture/shape:
+
+  * batch dims shard over as many of (pod, data) as divide the batch;
+  * the TP axis ('model') lands on the first divisible candidate dim
+    (kv-heads, then head_dim, then sequence for KV caches);
+  * when batch can't use the data axes (long_500k, batch=1), the KV/state
+    sequence or head dims take them instead so no axis idles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    def batch_axes(self, batch: int) -> tuple[str, ...]:
+        """Largest prefix-product of dp axes dividing ``batch``.
+        dp_axes ordered outermost-first (('pod','data'))."""
+        axes: tuple[str, ...] = ()
+        n = 1
+        for a in self.dp_axes:
+            if batch % (n * self.mesh.shape[a]) == 0:
+                axes += (a,)
+                n *= self.mesh.shape[a]
+        return axes
+
+    def spare_dp_axes(self, batch: int) -> tuple[str, ...]:
+        used = self.batch_axes(batch)
+        return tuple(a for a in self.dp_axes if a not in used)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def first_divisible(size_by_candidate: list[tuple[int, int]], axis_size: int) -> int:
+    """Index of the first (dim_index, dim_size) whose size divides; -1 if none."""
+    for i, (_, n) in enumerate(size_by_candidate):
+        if n % axis_size == 0 and n >= axis_size:
+            return i
+    return -1
+
+
+def kv_cache_spec(ctx: ParallelCtx, cache_shape: tuple, batch_dim: int = 1,
+                  seq_dim: int = 2, head_dim: int = 3, dh_dim: int = 4) -> P:
+    """Spec for a [L, B, S, H, Dh]-like cache tensor."""
+    entries: list = [None] * len(cache_shape)
+    B = cache_shape[batch_dim]
+    baxes = ctx.batch_axes(B)
+    if baxes:
+        entries[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+    # TP axis: kv heads > head_dim > sequence.
+    tp = ctx.tp_size
+    cands = [(head_dim, cache_shape[head_dim]), (dh_dim, cache_shape[dh_dim]),
+             (seq_dim, cache_shape[seq_dim])]
+    pick = first_divisible(cands, tp)
+    if pick >= 0:
+        entries[cands[pick][0]] = ctx.tp_axis
+    # Idle dp axes (batch too small): spread the sequence.
+    spare = ctx.spare_dp_axes(B)
+    if spare and entries[seq_dim] is None:
+        n = 1
+        for a in spare:
+            n *= ctx.mesh.shape[a]
+        if cache_shape[seq_dim] % n == 0:
+            entries[seq_dim] = spare if len(spare) > 1 else spare[0]
+    return P(*entries)
+
+
+def state_spec(ctx: ParallelCtx, shape: tuple, batch_dim: int = 1) -> P:
+    """Spec for recurrent state tensors [L, B, ...]: batch over dp, first
+    divisible trailing dim over model."""
+    entries: list = [None] * len(shape)
+    baxes = ctx.batch_axes(shape[batch_dim])
+    if baxes:
+        entries[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+    cands = [(i, shape[i]) for i in range(batch_dim + 1, len(shape))]
+    pick = first_divisible(cands, ctx.tp_size)
+    if pick >= 0:
+        entries[cands[pick][0]] = ctx.tp_axis
+    return P(*entries)
+
+
+def cache_specs(ctx: ParallelCtx, cache_tree) -> dict:
+    """Specs for a family's cache pytree by shape pattern."""
+
+    def one(leaf):
+        shp = leaf.shape
+        if len(shp) == 5:  # [L/A, B, S, H, Dh] KV cache or [L,B,H,hd,N] state
+            # Heuristic: KV caches have S (dim 2) much larger than H (dim 3).
+            if shp[2] >= shp[3]:
+                return kv_cache_spec(ctx, shp)
+            return state_spec(ctx, shp)
+        return state_spec(ctx, shp)
+
+    return jax.tree.map(one, cache_tree)
+
+
+def batch_spec(ctx: ParallelCtx, batch: int, ndim: int = 2) -> P:
+    baxes = ctx.batch_axes(batch)
+    lead = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def constrain(x, ctx: ParallelCtx | None, entries: tuple):
+    """with_sharding_constraint that no-ops without a ctx (smoke tests).
+
+    ``entries`` may contain the sentinel string "dp": it resolves to the
+    dp axes that divide that dim's size (or None).  Anchoring activations
+    at layer boundaries keeps GSPMD from silently replicating the batch
+    through reshape/transpose/scan chains (observed on the CPU backend).
+    """
+    if ctx is None:
+        return x
+    resolved = []
+    for i, e in enumerate(entries):
+        if e == "dp":
+            ax = ctx.batch_axes(x.shape[i])
+            resolved.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+        elif e == "tp?":
+            resolved.append(ctx.tp_axis if x.shape[i] % ctx.tp_size == 0 else None)
+        else:
+            resolved.append(e)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,63 @@
+"""Serving step builders: prefill (KV-cache fill + last-token logits) and
+decode (one token against a long cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_family
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int, compute_dtype="bfloat16",
+                      cache_dtype="bfloat16", parallel=None):
+    fam = get_family(cfg.family)
+    dt = jnp.dtype(compute_dtype)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        cache = fam.init_cache(cfg, B, max_seq, jnp.dtype(cache_dtype))
+        extra = {"frames": batch["frames"].astype(dt)} if "frames" in batch else {}
+        h, cache = fam.forward(
+            cfg, params, tokens, pos0=0, cache=cache, compute_dtype=dt,
+            parallel=parallel, **extra,
+        )
+        logits = fam.logits(cfg, params, h[:, -1:, :])
+        return cache, logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, compute_dtype="bfloat16", parallel=None):
+    """decode(params, cache, tokens [B,1], pos scalar) -> (cache, logits)."""
+    fam = get_family(cfg.family)
+    dt = jnp.dtype(compute_dtype)
+
+    def decode(params, cache, tokens, pos):
+        h, cache = fam.forward(
+            cfg, params, tokens, pos0=pos, cache=cache, compute_dtype=dt,
+            parallel=parallel,
+        )
+        logits = fam.logits(cfg, params, h)
+        return cache, logits
+
+    return decode
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, steps: int, max_seq: int,
+                    compute_dtype="float32"):
+    """Reference loop for tests/examples: prefill then greedy decode."""
+    fam = get_family(cfg.family)
+    prefill = make_prefill_step(cfg, max_seq, compute_dtype, compute_dtype)
+    decode = jax.jit(make_decode_step(cfg, compute_dtype))
+    cache, logits = prefill(params, {"tokens": prompt})
+    B, S = prompt.shape
+    toks = [jnp.argmax(logits[:, -1], -1)]
+    pos = S
+    for _ in range(steps - 1):
+        cache, logits = decode(params, cache, toks[-1][:, None], pos)
+        toks.append(jnp.argmax(logits[:, -1], -1))
+        pos += 1
+    return jnp.stack(toks, 1)

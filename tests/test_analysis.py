@@ -1,0 +1,96 @@
+"""Analyzer correctness: trip-count handling, FLOPs exactness, collective
+parsing, roofline classification."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost
+from repro.analysis.roofline import Roofline, collective_bytes, model_flops
+
+
+def _hlo(fn, *avals):
+    return jax.jit(fn).lower(*avals).compile().as_text()
+
+
+class TestHloCost:
+    def test_matmul_flops_exact(self):
+        M, K, N = 128, 256, 512
+        txt = _hlo(lambda a, b: a @ b,
+                   jax.ShapeDtypeStruct((M, K), jnp.float32),
+                   jax.ShapeDtypeStruct((K, N), jnp.float32))
+        c = hlo_cost.analyze(txt)
+        assert c.flops == pytest.approx(2 * M * K * N, rel=0.01)
+
+    def test_scan_trip_count_multiplies(self):
+        M, n = 64, 12
+
+        def f(a, bs):
+            return jax.lax.scan(lambda x, b: (x @ b, ()), a, bs)[0]
+
+        txt = _hlo(f, jax.ShapeDtypeStruct((M, M), jnp.float32),
+                   jax.ShapeDtypeStruct((n, M, M), jnp.float32))
+        c = hlo_cost.analyze(txt)
+        assert c.flops == pytest.approx(n * 2 * M**3, rel=0.02)
+        assert c.unknown_trip_whiles == 0
+
+    def test_nested_scan_trip_counts(self):
+        M, n, m = 32, 5, 7
+
+        def inner(x, bs):
+            return jax.lax.scan(lambda y, b: (y @ b, ()), x, bs)[0]
+
+        def f(a, bs):
+            return jax.lax.scan(lambda x, _: (inner(x, bs), ()), a,
+                                jnp.arange(n, dtype=jnp.float32))[0]
+
+        txt = _hlo(f, jax.ShapeDtypeStruct((M, M), jnp.float32),
+                   jax.ShapeDtypeStruct((m, M, M), jnp.float32))
+        c = hlo_cost.analyze(txt)
+        assert c.flops == pytest.approx(n * m * 2 * M**3, rel=0.05)
+
+    def test_tuple_shapes_with_index_comments_parse(self):
+        """Instructions whose tuple shapes contain /*index=N*/ comments must
+        not be dropped (the original 30000x FLOPs undercount bug)."""
+        comps = hlo_cost.parse_module(
+            "%c (p: (s32[], f32[8])) -> s32[] {\n"
+            "  %w.1 = (s32[], f32[8,8]{1,0}, f32[8]{0}, f32[8]{0}, f32[8]{0}, "
+            "/*index=5*/f32[8]{0}) while(%t), condition=%c1, body=%b1\n"
+            "}\n"
+        )
+        assert any(i.op == "while" for i in comps["c"])
+
+    def test_shape_bytes(self):
+        assert hlo_cost.shape_bytes("f32[4,8]{1,0}") == 128
+        assert hlo_cost.shape_bytes("bf16[10]{0}") == 20
+        assert hlo_cost.shape_bytes("(f32[2]{0}, s8[4]{0})") == 12
+
+    def test_collective_regex(self):
+        txt = ("  %ag = f32[64,32]{1,0} all-gather(%x), dimensions={0}\n"
+               "  %ar = bf16[128]{0} all-reduce-start(%y)\n"
+               "  %cp = f32[16]{0} collective-permute(%z)\n")
+        out = collective_bytes(txt)
+        assert out["all-gather"] == 64 * 32 * 4
+        assert out["all-reduce"] == 128 * 2
+        assert out["collective-permute"] == 64
+
+
+class TestRoofline:
+    def test_bottleneck_classification(self):
+        r = Roofline(flops=197e12 * 256, bytes_hbm=1e9, bytes_coll=1e9,
+                     chips=256, model_flops=197e12 * 256)
+        assert r.bottleneck == "compute"
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.roofline_fraction == pytest.approx(1.0)
+
+    def test_memory_bound(self):
+        r = Roofline(flops=1e12, bytes_hbm=819e9 * 256 * 5, bytes_coll=0,
+                     chips=256, model_flops=1e12)
+        assert r.bottleneck == "memory"
+        assert r.t_bound == pytest.approx(5.0)
+
+    def test_model_flops_conventions(self):
+        assert model_flops("train", 1e9, 1e6) == 6e15
+        assert model_flops("prefill", 1e9, 1e6) == 2e15
+        assert model_flops("decode", 1e9, 128) == pytest.approx(2.56e11)

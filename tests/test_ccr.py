@@ -1,0 +1,218 @@
+"""Paper-faithfulness tests: every numeric claim in the paper, pinned.
+
+Sections referenced: 2.1.2, 2.1.4, 2.2.2, 2.2.4, 2.3.2, 2.3.4, 3.1.2,
+3.1.4, 3.2.2, 3.2.4.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ccr
+from repro.core.machine import MANTICORE
+from repro.core import schedule_sim as sim
+
+# The paper's running conv example: W_I = W_O = 32, F = 3, D_I = D_O = 128.
+CONV = ccr.ConvShape(W_I=32, D_I=128, D_O=128, F=3, S=1, P=1)
+# The paper's running FC example: W_I = 7, D_O = 4096, B = 32.
+FC = ccr.FCShape(W_I=7, D_I=512, D_O=4096, B=32)
+
+
+class TestPaperConvClaims:
+    def test_output_width(self):
+        assert CONV.W_O == 32  # S=1, P=1, F=3 -> same size
+
+    def test_alg1_ccr_8p9(self):
+        """Sec. 2.1.4: CCR ca. 8.9 MAC/word; 4.4 spflop/B; 2.2 dpflop/B."""
+        t = ccr.alg1_traffic(CONV)
+        assert t.ccr == pytest.approx(8.9, abs=0.05)
+        assert t.ccr == pytest.approx(ccr.alg1_ccr(CONV))
+        assert t.flops_per_byte("sp") == pytest.approx(4.4, abs=0.05)
+        assert t.flops_per_byte("dp") == pytest.approx(2.2, abs=0.05)
+
+    def test_alg1_ccr_approx_F_squared(self):
+        """Eq. (6): CCR ~= F^2 for typical shapes."""
+        assert ccr.alg1_ccr_approx(CONV) == 9.0
+        assert ccr.alg1_ccr(CONV) == pytest.approx(9.0, rel=0.02)
+
+    def test_alg1_space(self):
+        """Sec. 2.1.2: 2057 words; <8.1 KiB sp, <16.1 KiB dp."""
+        words = ccr.alg1_space_words(CONV)
+        assert words == 2057
+        assert words * 4 / 1024 < 8.1
+        assert words * 8 / 1024 < 16.1
+
+    def test_alg2_max_stack(self):
+        """Sec. 2.2.2: Delta_O <= 24 (sp), <= 12 (dp) for W_O = 32."""
+        assert ccr.alg2_max_stack(CONV, MANTICORE, "sp") == 24
+        assert ccr.alg2_max_stack(CONV, MANTICORE, "dp") == 12
+
+    def test_alg2_ccr(self):
+        """Sec. 2.2.4: 141.8 MAC/word (70.9 spflop/B) sp; 87.8 (21.9) dp."""
+        t_sp = ccr.alg2_traffic(CONV, stack=24)
+        assert t_sp.ccr == pytest.approx(141.8, abs=0.05)
+        assert t_sp.flops_per_byte("sp") == pytest.approx(70.9, abs=0.05)
+        t_dp = ccr.alg2_traffic(CONV, stack=12)
+        assert t_dp.ccr == pytest.approx(87.8, abs=0.05)
+        assert t_dp.flops_per_byte("dp") == pytest.approx(21.9, abs=0.05)
+
+    def test_alg2_becomes_compute_bound_on_manticore(self):
+        """Sec. 2.2.4: stacking flips Alg 1's memory-bound into compute-bound."""
+        assert ccr.bound_kind(ccr.alg1_traffic(CONV), MANTICORE, "sp") == "memory-bound"
+        t = ccr.alg2_traffic(CONV, stack=24)
+        assert ccr.bound_kind(t, MANTICORE, "sp") == "compute-bound"
+
+    def test_alg3_max_stack(self):
+        """Sec. 2.3.2: Delta_O <= 23 (sp), <= 11 (dp)."""
+        assert ccr.alg3_max_stack(CONV, MANTICORE, "sp") == 23
+        assert ccr.alg3_max_stack(CONV, MANTICORE, "dp") == 11
+
+    def test_alg3_quoted_ccr(self):
+        """Sec. 2.3.4 quoted numbers: 541.4 MAC/word (270.7 spflop/B) sp,
+        540.6 (135.2) dp — reproduced via the reconstructed formula."""
+        q_sp = ccr.alg3_ccr_offchip_as_quoted(CONV, stack=23)
+        assert q_sp == pytest.approx(541.4, abs=0.05)
+        assert q_sp * 2 / 4 == pytest.approx(270.7, abs=0.05)
+        q_dp = ccr.alg3_ccr_offchip_as_quoted(CONV, stack=11)
+        assert q_dp == pytest.approx(540.6, abs=0.05)
+        assert q_dp * 2 / 8 == pytest.approx(135.2, abs=0.05)
+
+    def test_alg3_eq10_faithful(self):
+        """Eq. (10) evaluated faithfully (documents the paper's slip):
+        the off-chip CCR is 460.8 (sp) / 400.7 (dp), not 541.4/540.6."""
+        t_sp = ccr.alg3_traffic(CONV, stack=23)
+        assert t_sp.ccr_offchip == pytest.approx(460.8, abs=0.05)
+        t_dp = ccr.alg3_traffic(CONV, stack=11)
+        assert t_dp.ccr_offchip == pytest.approx(400.67, abs=0.05)
+
+    def test_alg3_overall_ccr_unchanged(self):
+        """Sec. 2.3.4: the *overall* CCR equals Alg 2's (same total words)."""
+        a2 = ccr.alg2_traffic(CONV, stack=23)
+        a3 = ccr.alg3_traffic(CONV, stack=23)
+        assert a3.ccr == pytest.approx(a2.ccr)
+
+    def test_alg2_no_extra_macs(self):
+        """Sec. 2.2.1: Alg 2 adds no MACs vs Alg 1."""
+        assert ccr.alg2_traffic(CONV, 24).macs == ccr.alg1_traffic(CONV).macs
+
+
+class TestPaperFCClaims:
+    def test_alg4_space(self):
+        """Sec. 3.1.2: 132689 words; ~519 KiB sp; ~1037 KiB dp."""
+        words = ccr.alg4_space_words(FC)
+        assert words == 132689
+        assert words * 4 / 1024 == pytest.approx(519, abs=1)
+        assert words * 8 / 1024 == pytest.approx(1037, abs=1)
+
+    def test_alg4_max_do(self):
+        """Sec. 3.1.2: D_O <= 768 (sp), <= 384 (dp) at B = 32, W_I = 7."""
+        assert ccr.alg45_max_stack(FC, MANTICORE, "sp") == 768
+        assert ccr.alg45_max_stack(FC, MANTICORE, "dp") == 384
+
+    def test_alg4_ccr(self):
+        """Sec. 3.1.4: CCR 30.7 (15.4 spflop/B) sp; 29.5 (7.4 dpflop/B) dp."""
+        sp = ccr.alg4_ccr(ccr.FCShape(W_I=7, D_I=512, D_O=768, B=32))
+        assert sp == pytest.approx(30.7, abs=0.05)
+        assert sp * 2 / 4 == pytest.approx(15.4, abs=0.05)
+        dp = ccr.alg4_ccr(ccr.FCShape(W_I=7, D_I=512, D_O=384, B=32))
+        assert dp == pytest.approx(29.5, abs=0.05)
+        assert dp * 2 / 8 == pytest.approx(7.4, abs=0.05)
+
+    def test_alg5_ccr(self):
+        """Sec. 3.2.4: CCR 30.6 (sp, Delta=768) / 29.5 (dp, Delta=384)
+        at D_O = 4096."""
+        assert ccr.alg5_ccr(FC, stack=768) == pytest.approx(30.6, abs=0.05)
+        assert ccr.alg5_ccr(FC, stack=384) == pytest.approx(29.5, abs=0.05)
+
+    def test_alg4_tree_reduction_words(self):
+        """Sec. 3.1.3: 127 * D_O * B words over 128 clusters."""
+        t = ccr.alg4_traffic(FC, clusters=128)
+        assert t.intercluster == 127 * FC.D_O * FC.B
+
+    def test_alg5_no_extra_macs(self):
+        assert ccr.alg5_traffic(FC, 768).macs == ccr.alg4_traffic(FC).macs
+
+
+# ---------------------------------------------------------------------------
+# Closed forms == executed schedules (hypothesis-randomized)
+# ---------------------------------------------------------------------------
+
+conv_shapes = st.builds(
+    ccr.ConvShape,
+    W_I=st.integers(4, 40),
+    D_I=st.integers(1, 96),
+    D_O=st.integers(1, 96),
+    F=st.sampled_from([1, 3, 5, 7]),
+    S=st.just(1),
+    P=st.integers(0, 3),
+).filter(lambda s: s.F <= s.W_I + 2 * s.P)
+
+fc_shapes = st.builds(
+    ccr.FCShape,
+    W_I=st.integers(1, 12),
+    D_I=st.integers(1, 48),
+    D_O=st.integers(1, 300),
+    B=st.integers(1, 48),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_shapes)
+def test_sim_matches_alg1(s):
+    t_sim, t_eq = sim.simulate_alg1(s), ccr.alg1_traffic(s)
+    assert t_sim == t_eq
+    assert t_sim.ccr == pytest.approx(ccr.alg1_ccr(s))
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_shapes, st.integers(1, 32))
+def test_sim_matches_alg2(s, stack):
+    assert sim.simulate_alg2(s, stack) == ccr.alg2_traffic(s, stack)
+
+
+@settings(max_examples=40, deadline=None)
+@given(conv_shapes.filter(lambda s: s.D_I % 16 == 0), st.integers(1, 32))
+def test_sim_matches_alg3(s, stack):
+    """Eq. (9)/(10) assume each quadrant cycles whole slices; exact when
+    16 | D_I (paper's typical shapes)."""
+    assert sim.simulate_alg3(s, stack) == ccr.alg3_traffic(s, stack)
+
+
+@settings(max_examples=40, deadline=None)
+@given(fc_shapes)
+def test_sim_matches_alg4(s):
+    t = sim.simulate_alg4(s)
+    assert t == ccr.alg4_traffic(s)
+    # Eq. (11) describes the in-parallel-region CCR: MACs / parallel loads.
+    assert t.macs / t.main_loads == pytest.approx(ccr.alg4_ccr(s))
+
+
+@settings(max_examples=40, deadline=None)
+@given(fc_shapes, st.integers(1, 512))
+def test_sim_matches_alg5(s, stack):
+    t = sim.simulate_alg5(s, stack)
+    assert t == ccr.alg5_traffic(s, stack)
+    assert t.macs / t.main_loads == pytest.approx(ccr.alg5_ccr(s, stack))
+
+
+@settings(max_examples=30, deadline=None)
+@given(conv_shapes, st.integers(1, 31))
+def test_stacking_monotone_improves_ccr(s, stack):
+    """Property: a larger stack never lowers the CCR (the paper's core
+    insight: Delta_O reuse is monotone)."""
+    assert ccr.alg2_traffic(s, stack + 1).ccr >= ccr.alg2_traffic(s, stack).ccr - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(conv_shapes, st.integers(1, 32))
+def test_space_bounds_are_respected(s, stack):
+    """Property: the Delta_O chooser's pick always fits the budget, and
+    +1 never does (maximality)."""
+    for prec, wb in (("sp", 4), ("dp", 8)):
+        cap = ccr.alg2_max_stack(s, MANTICORE, prec)
+        budget = MANTICORE.usable_for_working_set(2)
+        if cap >= 1:
+            assert cap * s.W_O**2 * wb <= budget
+        assert (cap + 1) * s.W_O**2 * wb > budget

@@ -1,0 +1,164 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.conv2d import conv2d, conv2d_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.matmul import choose_blocks, fc_matmul, fc_matmul_ref
+
+TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-4), jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+def _rand(rng, shape, dtype):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "m,k,n", [(8, 8, 8), (37, 70, 90), (128, 256, 128), (1, 300, 17), (130, 129, 257)]
+    )
+    def test_matches_ref(self, m, k, n, dtype):
+        rng = np.random.default_rng(m * 1000 + k * 10 + n)
+        x, w = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+        got = fc_matmul(x, w, block_m=32, block_n=32, block_k=32)
+        want = fc_matmul_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+        )
+
+    def test_leading_dims_flattened(self):
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (2, 3, 40), jnp.float32)
+        w = _rand(rng, (40, 9), jnp.float32)
+        got = fc_matmul(x, w, block_m=8, block_n=8, block_k=8)
+        assert got.shape == (2, 3, 9)
+        np.testing.assert_allclose(got, fc_matmul_ref(x, w), rtol=2e-4, atol=2e-4)
+
+    def test_block_chooser_respects_vmem(self):
+        from repro.core.machine import TPU_V5E
+
+        bm, bn, bk = choose_blocks(4096, 16384, 8192, in_bytes=2)
+        working = (bm * bk + bk * bn) * 2 * 2 + bm * bn * 4
+        assert working <= TPU_V5E.usable_for_working_set(2)
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 50), st.integers(1, 50), st.integers(1, 50))
+    def test_property_random_shapes(self, m, k, n):
+        rng = np.random.default_rng(m + 51 * k + 2601 * n)
+        x, w = _rand(rng, (m, k), np.float32), _rand(rng, (k, n), np.float32)
+        np.testing.assert_allclose(
+            fc_matmul(x, w, block_m=16, block_n=16, block_k=16),
+            fc_matmul_ref(x, w), rtol=2e-4, atol=2e-4,
+        )
+
+
+class TestConv2dKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "H,di,do,F,P",
+        [(8, 4, 4, 3, 1), (12, 7, 5, 3, 1), (16, 8, 16, 5, 2), (9, 3, 2, 1, 0), (7, 2, 3, 7, 3)],
+    )
+    def test_matches_ref(self, H, di, do, F, P, dtype):
+        rng = np.random.default_rng(H + di + do + F)
+        x = _rand(rng, (H, H, di), dtype)
+        f = _rand(rng, (F, F, di, do), dtype)
+        got = conv2d(x, f, padding=P, block_do=2, block_di=2)
+        want = conv2d_ref(x, f, padding=P)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+        )
+
+    def test_batched(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, (3, 10, 10, 6), np.float32)
+        f = _rand(rng, (3, 3, 6, 8), np.float32)
+        got = conv2d(x, f, padding=1, block_do=4, block_di=3)
+        np.testing.assert_allclose(got, conv2d_ref(x, f, padding=1), rtol=2e-4, atol=2e-4)
+
+    def test_alg1_is_block_do_1(self):
+        """block_do=1 is Algorithm 1 (one output slice at a time): identical
+        numerics, worse traffic — the schedule knob is purely a perf choice."""
+        rng = np.random.default_rng(2)
+        x = _rand(rng, (8, 8, 4), np.float32)
+        f = _rand(rng, (3, 3, 4, 6), np.float32)
+        a1 = conv2d(x, f, padding=1, block_do=1, block_di=1)
+        a2 = conv2d(x, f, padding=1, block_do=3, block_di=2)
+        np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-5)
+
+    def test_strided_falls_back(self):
+        rng = np.random.default_rng(3)
+        x = _rand(rng, (9, 9, 4), np.float32)
+        f = _rand(rng, (3, 3, 4, 5), np.float32)
+        got = conv2d(x, f, stride=2, padding=1)
+        want = conv2d_ref(x, f, stride=2, padding=1)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.integers(4, 14), st.integers(1, 8), st.integers(1, 8),
+        st.sampled_from([1, 3, 5]), st.integers(0, 2),
+    )
+    def test_property_random_shapes(self, H, di, do, F, P):
+        if F > H + 2 * P:
+            return
+        rng = np.random.default_rng(H * 100 + di * 10 + do + F + P)
+        x = _rand(rng, (H, H, di), np.float32)
+        f = _rand(rng, (F, F, di, do), np.float32)
+        np.testing.assert_allclose(
+            conv2d(x, f, padding=P, block_do=2, block_di=2),
+            conv2d_ref(x, f, padding=P), rtol=2e-4, atol=2e-4,
+        )
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 16), (True, 4)])
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    def test_matches_ref(self, causal, window, hq, hkv, dtype):
+        rng = np.random.default_rng(hq * 10 + hkv)
+        q = _rand(rng, (2, hq, 48, 32), dtype)
+        k = _rand(rng, (2, hkv, 48, 32), dtype)
+        v = _rand(rng, (2, hkv, 48, 32), dtype)
+        got = flash_attention(q, k, v, causal=causal, window=window, block_q=16, block_kv=16)
+        want = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **(dict(rtol=2e-3, atol=2e-3) if dtype == jnp.float32 else TOLS[dtype]),
+        )
+
+    def test_ragged_seq_lengths(self):
+        rng = np.random.default_rng(9)
+        q = _rand(rng, (1, 2, 33, 16), np.float32)
+        k = _rand(rng, (1, 2, 47, 16), np.float32)
+        v = _rand(rng, (1, 2, 47, 16), np.float32)
+        got = flash_attention(q, k, v, causal=False, block_q=16, block_kv=16)
+        want = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_finite_on_fully_masked_rows(self):
+        """Sliding-window + padding can fully mask padded rows; output must
+        stay finite (guarded l==0 division)."""
+        rng = np.random.default_rng(10)
+        q = _rand(rng, (1, 1, 5, 8), np.float32)
+        k = _rand(rng, (1, 1, 5, 8), np.float32)
+        v = _rand(rng, (1, 1, 5, 8), np.float32)
+        out = flash_attention(q, k, v, causal=True, window=2, block_q=8, block_kv=8)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_block_size_invariance(self):
+        rng = np.random.default_rng(11)
+        q = _rand(rng, (1, 2, 64, 16), np.float32)
+        k = _rand(rng, (1, 2, 64, 16), np.float32)
+        v = _rand(rng, (1, 2, 64, 16), np.float32)
+        a = flash_attention(q, k, v, block_q=16, block_kv=16)
+        b = flash_attention(q, k, v, block_q=64, block_kv=32)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

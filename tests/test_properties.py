@@ -1,0 +1,149 @@
+"""System-invariant property tests (hypothesis)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.attention import attention
+from repro.models.layers import rms_norm, rope
+from repro.models.module import ParamDef, abstract_params, count_params, init_params, param_specs
+
+
+class TestAttentionInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 3), st.integers(2, 5), st.integers(0, 1000))
+    def test_blockwise_equals_ref(self, B, nchunks, seed):
+        """Chunked online-softmax == dense softmax for any chunking."""
+        S, H, D = nchunks * 8, 2, 8
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        got = attention(q, k, v, q_pos=pos, k_pos=pos, causal=True,
+                        chunk_q=8, chunk_kv=8)
+        want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True)
+        np.testing.assert_allclose(got.transpose(0, 2, 1, 3), want,
+                                   rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 500))
+    def test_causal_prefix_invariance(self, seed):
+        """Causal attention of a prefix == the prefix of the full result
+        (the property that makes KV-cache decode correct)."""
+        B, S, H, D = 1, 24, 2, 8
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        full = attention(q, k, v, q_pos=pos, k_pos=pos, causal=True)
+        half = attention(q[:, :12], k[:, :12], v[:, :12],
+                         q_pos=pos[:12], k_pos=pos[:12], causal=True)
+        np.testing.assert_allclose(half, full[:, :12], rtol=1e-4, atol=1e-4)
+
+    def test_window_one_attends_self_only(self):
+        """window=1 means each token sees only itself: output == V row."""
+        B, S, H, D = 1, 8, 1, 4
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        out = attention(q, k, v, q_pos=pos, k_pos=pos, causal=True, window=1)
+        np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)
+
+
+class TestRope:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 300))
+    def test_preserves_norm(self, seed):
+        """RoPE is a rotation: vector norms are preserved."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+        y = rope(x, jnp.arange(8, dtype=jnp.int32), 1e4)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1),
+            rtol=1e-5, atol=1e-5)
+
+    def test_relative_position_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+
+        def dot_at(m, n):
+            qm = rope(q, jnp.array([m], jnp.int32), 1e4)
+            kn = rope(k, jnp.array([n], jnp.int32), 1e4)
+            return float(jnp.sum(qm * kn))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(102, 100), rel=1e-4)
+        assert dot_at(7, 0) == pytest.approx(dot_at(57, 50), rel=1e-4)
+
+
+class TestModuleSystem:
+    def test_init_is_path_stable(self):
+        """Adding an unrelated param doesn't change other params' values."""
+        defs1 = {"a": ParamDef((4, 4)), "b": {"c": ParamDef((2, 2))}}
+        defs2 = {"a": ParamDef((4, 4)), "b": {"c": ParamDef((2, 2))},
+                 "z": ParamDef((3,), init="zeros")}
+        key = jax.random.PRNGKey(0)
+        p1 = init_params(defs1, key)
+        p2 = init_params(defs2, key)
+        np.testing.assert_array_equal(p1["a"], p2["a"])
+        np.testing.assert_array_equal(p1["b"]["c"], p2["b"]["c"])
+
+    def test_abstract_matches_concrete(self):
+        defs = {"w": ParamDef((8, 16), (None, "model")), "b": ParamDef((16,), init="zeros")}
+        concrete = init_params(defs, jax.random.PRNGKey(0), jnp.bfloat16)
+        abstract = abstract_params(defs, jnp.bfloat16)
+        for c, a in zip(jax.tree.leaves(concrete), jax.tree.leaves(abstract)):
+            assert c.shape == a.shape and c.dtype == a.dtype
+        assert count_params(defs) == 8 * 16 + 16
+        from jax.sharding import PartitionSpec as P
+
+        assert param_specs(defs)["w"] == P(None, "model")
+
+    def test_rms_norm_scale_invariance_direction(self):
+        """rms_norm(a*x) == rms_norm(x) for a > 0 (scale invariance)."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+        w = jnp.zeros(8)
+        np.testing.assert_allclose(rms_norm(3.0 * x, w), rms_norm(x, w),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestSsdChunkInvariance:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 100))
+    def test_mamba2_chunk_size_invariance(self, seed):
+        """SSD output must not depend on the chunk size (chunked == scan)."""
+        import repro.models.mamba2 as m2
+
+        rng = np.random.default_rng(seed)
+        B, S, H, Pd, N = 1, 16, 2, 4, 4
+        x = jnp.asarray(rng.standard_normal((B, S, H, Pd)) * 0.5, jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.1, 0.9, (B, S, H)), jnp.float32)
+        A = jnp.asarray(rng.uniform(-0.5, 0.5, (H,)), jnp.float32)
+        Bc = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+        Cc = jnp.asarray(rng.standard_normal((B, S, N)) * 0.5, jnp.float32)
+        D = jnp.ones((H,), jnp.float32)
+        s0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+        old = m2.CHUNK
+        try:
+            m2.CHUNK = 4
+            y4, f4 = m2.ssd_chunked(x, dt, A, Bc, Cc, D, s0)
+            m2.CHUNK = 16
+            y16, f16 = m2.ssd_chunked(x, dt, A, Bc, Cc, D, s0)
+        finally:
+            m2.CHUNK = old
+        np.testing.assert_allclose(y4, y16, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(f4, f16, rtol=2e-4, atol=2e-4)

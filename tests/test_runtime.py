@@ -1,0 +1,160 @@
+"""Runtime units: optimizer, schedules, data pipeline, compression,
+checkpoint retention, fault-tolerance machinery."""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import MemmapSource, ShardInfo, SyntheticSource, write_token_file
+from repro.optim import adamw
+from repro.optim.compression import compress_decompress, compress_tree, init_error_buffers
+from repro.runtime.fault_tolerance import (
+    Heartbeat, Monitor, StragglerWatchdog, shrink_mesh_shape,
+)
+
+
+class TestAdamW:
+    def test_minimizes_quadratic(self):
+        tcfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=100,
+                           weight_decay=0.0, grad_clip=0.0)
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = adamw.init(params)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = adamw.apply_updates(params, grads, state, tcfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.2
+
+    def test_grad_clip_bounds_update(self):
+        tcfg = TrainConfig(learning_rate=1.0, warmup_steps=0, grad_clip=1.0,
+                           weight_decay=0.0)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(params)
+        _, _, metrics = adamw.apply_updates(params, {"w": jnp.full(4, 1e6)}, state, tcfg)
+        assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+    def test_schedule_warmup_and_decay(self):
+        tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+        lr0 = float(adamw.lr_schedule(tcfg, jnp.int32(1)))
+        lr_w = float(adamw.lr_schedule(tcfg, jnp.int32(10)))
+        lr_end = float(adamw.lr_schedule(tcfg, jnp.int32(100)))
+        assert lr0 == pytest.approx(0.1, rel=1e-3)
+        assert lr_w == pytest.approx(1.0, rel=1e-2)
+        assert lr_end == pytest.approx(0.1, rel=1e-2)
+
+    def test_zero1_specs_shard_divisible_dim(self):
+        from jax.sharding import PartitionSpec as P
+
+        specs = {"w": P(None, "model")}
+        abstract = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+        st_specs = adamw.zero1_specs(specs, abstract, ("data",), {"data": 16, "model": 16})
+        assert st_specs.m["w"] == P("data", "model")
+
+
+class TestDataPipeline:
+    def test_synthetic_deterministic_and_sharded(self):
+        a = SyntheticSource(1000, 32, 8, ShardInfo(0, 2), seed=1)
+        b = SyntheticSource(1000, 32, 8, ShardInfo(1, 2), seed=1)
+        x0, x0b = a(5), a(5)
+        np.testing.assert_array_equal(x0["tokens"], x0b["tokens"])  # deterministic
+        assert x0["tokens"].shape == (4, 32)  # 8 global / 2 shards
+        assert not np.array_equal(x0["tokens"], b(5)["tokens"])  # disjoint shards
+        np.testing.assert_array_equal(x0["tokens"][:, 1:], x0["labels"][:, :-1])
+
+    def test_memmap_source(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "tokens.bin")
+            write_token_file(path, np.arange(10000) % 777)
+            src = MemmapSource(path, vocab=777, seq_len=64, global_batch=4)
+            b0, b1 = src(0), src(1)
+            assert b0["tokens"].shape == (4, 64)
+            assert not np.array_equal(b0["tokens"], b1["tokens"])
+            assert b0["tokens"].max() < 777
+
+
+class TestCompression:
+    def test_error_feedback_reduces_bias(self):
+        """With error feedback, the *accumulated* quantized sum tracks the
+        true sum much better than independent quantization."""
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.standard_normal(512) * 1e-3)
+        err = jnp.zeros(512)
+        acc = jnp.zeros(512)
+        for _ in range(50):
+            deq, err = compress_decompress(g, err)
+            acc = acc + deq
+        drift = float(jnp.abs(acc - 50 * g).max() / jnp.abs(50 * g).max())
+        assert drift < 0.05, drift
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_property_error_bounded_by_one_quantum(self, seed):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.standard_normal(64))
+        deq, err = compress_decompress(g, jnp.zeros(64))
+        scale = float(jnp.max(jnp.abs(g))) / 127.0
+        assert float(jnp.abs(err).max()) <= scale * 0.5 + 1e-6
+
+    def test_tree_roundtrip_shapes(self):
+        tree = {"a": jnp.ones((4, 4)), "b": {"c": jnp.zeros(7)}}
+        errs = init_error_buffers(tree)
+        deq, errs2 = compress_tree(tree, errs)
+        assert jax.tree.structure(deq) == jax.tree.structure(tree)
+        assert jax.tree.structure(errs2) == jax.tree.structure(tree)
+
+
+class TestCheckpoint:
+    def test_retention_and_latest(self):
+        with tempfile.TemporaryDirectory() as d:
+            for s in (1, 5, 9):
+                ckpt.save(d, s, {"x": jnp.ones(3)})
+            assert ckpt.latest_step(d) == 9
+            ckpt.retain(d, keep=2)
+            assert ckpt.latest_step(d) == 9
+            assert not os.path.exists(os.path.join(d, "step_0000001"))
+
+    def test_uncommitted_checkpoint_ignored(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 3, {"x": jnp.ones(3)})
+            os.makedirs(os.path.join(d, "step_0000009"))  # no COMMIT file
+            assert ckpt.latest_step(d) == 3
+
+    def test_async_save(self):
+        with tempfile.TemporaryDirectory() as d:
+            t = ckpt.save_async(d, 2, {"x": jnp.arange(5)})
+            t.join()
+            out = ckpt.restore(d, 2, {"x": jax.ShapeDtypeStruct((5,), jnp.int32)})
+            np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(5))
+
+
+class TestFaultTolerance:
+    def test_heartbeat_and_stale_detection(self):
+        with tempfile.TemporaryDirectory() as d:
+            hb = Heartbeat("hostA", d)
+            hb.beat(0)
+            mon = Monitor(d, timeout=60)
+            assert mon.stale_hosts() == []
+            assert mon.live_hosts() == ["hostA"]
+            assert mon.stale_hosts(now=time.time() + 120) == ["hostA"]
+
+    def test_straggler_watchdog(self):
+        w = StragglerWatchdog(factor=2.0)
+        for _ in range(10):
+            assert not w.observe(1.0)
+        assert w.observe(5.0)
+        assert not w.observe(1.1)
+
+    def test_shrink_mesh_preserves_tp(self):
+        assert shrink_mesh_shape(240, model=16) == (15, 16)
+        assert shrink_mesh_shape(480, model=16, pod=2) == (2, 15, 16)
+        assert shrink_mesh_shape(496, model=16, pod=2) == (1, 31, 16)
+        with pytest.raises(ValueError):
+            shrink_mesh_shape(250, model=16)
