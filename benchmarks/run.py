@@ -4,6 +4,9 @@
   fc_ccr       - paper Sec. 3.1.4 / 3.2.4 numeric intuitions (Algs 4-5)
   kernels      - wall-time microbenches of the Pallas kernels vs refs (CPU
                  interpret mode: correctness-path timing, not TPU perf)
+  conv_fused   - batched-grid + fused-epilogue conv pipeline vs the seed
+                 vmap-per-image + XLA-epilogue path (parity + wall time;
+                 BENCH_conv.json holds the committed baseline)
   schedule_sim - closed forms vs executed-schedule word counts
   roofline     - per-cell roofline terms from experiments/dryrun.json
 
@@ -132,6 +135,60 @@ def bench_kernels():
     return rows
 
 
+def bench_conv_fused(write_baseline: bool = False):
+    """Fused, batched-grid conv pipeline vs the seed-style path.
+
+    seed path  : jax.vmap of a per-image kernel call, then bias + ReLU +
+                 2x2 max-pool as separate XLA ops (HBM round-trip).
+    fused path : one pallas_call, grid = (B, h_strips, do_stacks, di_steps),
+                 epilogue fused into the kernel flush.
+    CPU interpret-mode timing — relative ordering, not TPU perf.
+    """
+    from repro.kernels.conv2d import conv2d, conv2d_fused_ref
+
+    B, H, DI, DO, F, P = 8, 12, 8, 16, 3, 1
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((B, H, H, DI)), jnp.float32)
+    f = jnp.asarray(rng.standard_normal((F, F, DI, DO)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((DO,)), jnp.float32)
+    blocks = dict(block_do=8, block_di=8)
+
+    def xla_epilogue(y):
+        y = jax.nn.relu(y + b)
+        Bn, Hn, Wn, C = y.shape
+        return y.reshape(Bn, Hn // 2, 2, Wn // 2, 2, C).max((2, 4))
+
+    def seed_vmap():  # the pre-strip call path: per-image kernel + XLA tail
+        y = jax.vmap(lambda xi: conv2d(xi, f, padding=P, block_h=H, **blocks))(x)
+        return xla_epilogue(y)
+
+    def batched_unfused():  # batched grid, epilogue still in XLA
+        return xla_epilogue(conv2d(x, f, padding=P, block_h=H, **blocks))
+
+    def fused_batched():  # the full tentpole path
+        return conv2d(x, f, padding=P, bias=b, relu=True, pool=2,
+                      block_h=4, **blocks)
+
+    want = conv2d_fused_ref(x, f, b, padding=P, relu=True, pool=2)
+    err = float(jnp.abs(fused_batched() - want).max() / jnp.abs(want).max())
+
+    rows = []
+    t_seed = _time(seed_vmap)
+    t_unfused = _time(batched_unfused)
+    t_fused = _time(fused_batched)
+    rows.append(("conv_seed_vmap_xla_epilogue", t_seed, f"B={B};per-image+XLA-tail"))
+    rows.append(("conv_batched_grid_unfused", t_unfused,
+                 f"speedup_vs_seed={t_seed / t_unfused:.2f}x"))
+    rows.append(("conv_batched_grid_fused", t_fused,
+                 f"speedup_vs_seed={t_seed / t_fused:.2f}x;maxerr={err:.2e}"))
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_conv.json")
+    if write_baseline or not os.path.exists(path):
+        with open(path, "w") as fh:
+            json.dump({n: {"us_per_call": us, "derived": d} for n, us, d in rows},
+                      fh, indent=2)
+    return rows
+
+
 def bench_roofline():
     path = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun.json")
     if not os.path.exists(path):
@@ -157,6 +214,7 @@ SECTIONS = {
     "fc_ccr": bench_fc_ccr,
     "schedule_sim": bench_schedule_sim,
     "kernels": bench_kernels,
+    "conv_fused": bench_conv_fused,
     "roofline": bench_roofline,
 }
 

@@ -152,6 +152,38 @@ def alg2_traffic(s: ConvShape, stack: int) -> Traffic:
     return Traffic(macs=conv_macs(s), main_loads=loads, main_stores=stores)
 
 
+def _strip_rows(s: ConvShape, h_block: int):
+    """Real (non-padding) input rows each halo'd strip streams, plus the
+    strip's real output rows.  Strip ``h`` covers output rows
+    ``[h*h_block, h*h_block + h_block)``; its halo'd input window is rows
+    ``[h*h_block*S - P, h*h_block*S - P + (h_block-1)*S + F)`` of the
+    unpadded image — zero-padding rows cost no traffic (paper convention:
+    Eq. (7) charges W_I^2 input words, not (W_I+2P)^2)."""
+    h_in = (h_block - 1) * s.S + s.F
+    H_O = s.W_O  # square images throughout the paper
+    for h0 in range(0, H_O, h_block):
+        lo = h0 * s.S - s.P
+        rows_in = min(lo + h_in, s.W_I) - max(lo, 0)
+        yield max(0, rows_in), min(h_block, H_O - h0)
+
+
+def alg2_strip_traffic(s: ConvShape, stack: int, h_block: int) -> Traffic:
+    """Strip-tiled Alg 2 (the Pallas kernel's schedule): the output stack is
+    held as an ``h_block x W_O`` strip, so each of the ``ceil(H_O/h_block)``
+    strips re-streams its halo'd input rows once per stack.  Degenerates to
+    Eq. (7) exactly at ``h_block = H_O`` (one strip, halo covers the image).
+    """
+    n_stacks = math.ceil(s.D_O / stack)
+    n_strips = math.ceil(s.W_O / h_block)
+    input_words = sum(r_in * s.W_I for r_in, _ in _strip_rows(s, h_block))
+    # Each strip is a full Alg 2 pass over its rows: input rows once per
+    # stack, filter slabs once per (strip, d_i, d_o) — the kernel's grid
+    # order re-streams filters per strip, so the model charges it.
+    loads = n_stacks * s.D_I * input_words + n_strips * s.D_O * s.D_I * s.F**2
+    stores = s.D_O * s.W_O**2
+    return Traffic(macs=conv_macs(s), main_loads=loads, main_stores=stores)
+
+
 def alg3_traffic(s: ConvShape, stack: int, group: int = 16) -> Traffic:
     """Alg 3: Alg 2 + ring reuse of input slices within an L2 quadrant
     (Sec. 2.3.3, Eqs. 9-10).  ``group`` is the quadrant size (16 clusters).
@@ -201,6 +233,14 @@ def alg3_space_words(s: ConvShape, stack: int) -> int:
     return alg2_space_words(s, stack) + s.W_I**2
 
 
+def alg2_strip_space_words(s: ConvShape, stack: int, h_block: int) -> int:
+    """Strip-tiled working set: Delta_O strips of h_block*W_O output words
+    plus one halo'd input strip of ((h_block-1)S+F) x (W_I+2P) and F^2
+    filter words — the accumulator no longer scales with the full plane."""
+    h_in = (h_block - 1) * s.S + s.F
+    return stack * h_block * s.W_O + h_in * (s.W_I + 2 * s.P) + s.F**2
+
+
 def alg2_max_stack(s: ConvShape, machine: MachineModel, precision: str) -> int:
     """Largest Delta_O fitting local memory (Sec. 2.2.2).
 
@@ -210,6 +250,18 @@ def alg2_max_stack(s: ConvShape, machine: MachineModel, precision: str) -> int:
     wb = word_bytes(precision)
     budget = machine.usable_for_working_set(streams=2)
     return budget // (wb * s.W_O**2)
+
+
+def alg2_strip_max_stack(
+    s: ConvShape, machine: MachineModel, precision: str, h_block: int
+) -> int:
+    """Largest Delta_O fitting local memory under strip tiling: the strip
+    accumulator costs h_block*W_O words per output slice instead of W_O^2,
+    so shrinking the strip grows the stack the capacity rule can pick —
+    the two-dimensional (h_block, Delta_O) trade-off the kernel schedules."""
+    wb = word_bytes(precision)
+    budget = machine.usable_for_working_set(streams=2)
+    return budget // (wb * h_block * s.W_O)
 
 
 def alg3_max_stack(s: ConvShape, machine: MachineModel, precision: str) -> int:

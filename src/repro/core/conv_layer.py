@@ -3,11 +3,16 @@
 ``strategy`` selects the paper algorithm:
   * "alg1"  - one output depth slice at a time (block_do = 1);
   * "alg2"  - Delta_O output stacking, Delta_O from the capacity chooser;
+  * "strip" - Alg 2 + spatial strip tiling: the accumulator holds an
+              h_block x W_O strip, trading strip height against Delta_O
+              (the schedule the Pallas kernel actually runs);
   * "alg3"  - Alg 2 blocking within each device + ring input-slice reuse
               across devices (core/ring.py) when input channels are sharded.
 
-Forward runs the Pallas kernel (interpret mode off-TPU); backward is the
-XLA reference VJP (custom_vjp), so CNNs built from this layer train.
+Forward runs the batched strip-tiled Pallas kernel (interpret mode
+off-TPU); :func:`conv_block` additionally fuses the layer epilogue (bias +
+ReLU + optional 2x2 max-pool) into the kernel's flush step.  Backward is
+the XLA reference VJP (custom_vjp), so CNNs built from these layers train.
 Traffic accounting for any strategy comes from core/ccr.py.
 """
 
@@ -21,7 +26,7 @@ import jax.numpy as jnp
 from repro.core import ccr
 from repro.core.machine import TPU_V5E, MANTICORE
 from repro.kernels.conv2d.ops import conv2d
-from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
@@ -46,15 +51,58 @@ def _bwd(stride, padding, strategy, res, g):
 conv_layer.defvjp(_fwd, _bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip"):
+    """Fused conv + bias + ReLU (+ optional ``pool x pool`` max-pool).
+
+    The whole epilogue runs in the Pallas kernel's flush step on the
+    VMEM-resident output strip — the activation never round-trips HBM
+    between the conv and the pool.  ``x``: [B, H, W, D_I] or [H, W, D_I];
+    ``f``: [F, F, D_I, D_O]; ``b``: [D_O].
+    """
+    block_do = 1 if strategy == "alg1" else None
+    block_h = None if strategy in ("strip", "alg1") else -1  # -1 -> full plane
+    if block_h == -1:
+        F = f.shape[0]
+        H = x.shape[-3]
+        block_h = max(1, (H + 2 * padding - F) // stride + 1)
+    return conv2d(
+        x, f, bias=b, stride=stride, padding=padding,
+        relu=True, pool=pool, block_do=block_do, block_h=block_h,
+    )
+
+
+def _block_fwd(x, f, b, stride, padding, pool, strategy):
+    return conv_block(x, f, b, stride, padding, pool, strategy), (x, f, b)
+
+
+def _block_bwd(stride, padding, pool, strategy, res, g):
+    x, f, b = res
+    _, vjp = jax.vjp(
+        lambda xx, ff, bb: conv2d_fused_ref(
+            xx, ff, bb, stride=stride, padding=padding, relu=True, pool=pool
+        ),
+        x, f, b,
+    )
+    return vjp(g)
+
+
+conv_block.defvjp(_block_fwd, _block_bwd)
+
+
 def traffic(
     shape: ccr.ConvShape, strategy: str = "alg2", precision: str = "sp",
-    machine=MANTICORE,
+    machine=MANTICORE, h_block: int | None = None,
 ) -> ccr.Traffic:
     """Predicted word traffic for this layer under the chosen algorithm."""
     if strategy == "alg1":
         return ccr.alg1_traffic(shape)
     if strategy == "alg2":
         return ccr.alg2_traffic(shape, max(1, ccr.alg2_max_stack(shape, machine, precision)))
+    if strategy == "strip":
+        hb = h_block or max(1, shape.W_O // 2)
+        stack = max(1, ccr.alg2_strip_max_stack(shape, machine, precision, hb))
+        return ccr.alg2_strip_traffic(shape, stack, hb)
     if strategy == "alg3":
         return ccr.alg3_traffic(shape, max(1, ccr.alg3_max_stack(shape, machine, precision)))
     raise ValueError(strategy)

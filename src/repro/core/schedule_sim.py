@@ -49,6 +49,31 @@ def simulate_alg2(s: ConvShape, stack: int) -> Traffic:
     return Traffic(macs=macs, main_loads=loads, main_stores=stores)
 
 
+def simulate_alg2_strip(s: ConvShape, stack: int, h_block: int) -> Traffic:
+    """Strip-tiled Algorithm 2 (the Pallas kernel's schedule, DESIGN.md
+    Sec. 2): the outer loops walk (strip, stack), the inner loop is the
+    paper's ``for d_i``; each strip streams only its halo'd input rows
+    (zero-padding rows are free) and re-streams filter slabs, and the
+    flush stores the strip of the output stack exactly once."""
+    H_O = s.W_O  # square images throughout the paper
+    h_in = (h_block - 1) * s.S + s.F
+    loads = stores = macs = 0
+    for h0 in range(0, H_O, h_block):  # spatial strips
+        lo = h0 * s.S - s.P  # first halo'd input row (unpadded coords)
+        rows_in = max(0, min(lo + h_in, s.W_I) - max(lo, 0))
+        rows_out = min(h_block, H_O - h0)
+        for begin, end in _stacks(s.D_O, stack):  # parallelize over clusters
+            for _d_i in range(s.D_I):
+                loads += rows_in * s.W_I  # halo'd input strip, once per stack
+                for _d_o in range(begin, end):
+                    loads += s.F**2  # filter slab per (strip, d_i, d_o)
+                    macs += rows_out * s.W_I * s.F**2
+            stores += (end - begin) * rows_out * s.W_O
+    if s.W_O == s.W_I:  # paper convention counts MACs over the input extent
+        assert macs == conv_macs(s)
+    return Traffic(macs=conv_macs(s), main_loads=loads, main_stores=stores)
+
+
 def simulate_alg3(s: ConvShape, stack: int, group: int = 16) -> Traffic:
     """Algorithm 3: Alg 2 + ring reuse of input slices inside an L2 quadrant.
 

@@ -1,2 +1,2 @@
-from repro.kernels.conv2d.ops import conv2d, choose_stack
-from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.conv2d.ops import choose_schedule, choose_stack, conv2d
+from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref

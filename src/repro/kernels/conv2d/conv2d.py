@@ -1,26 +1,37 @@
 """Pallas TPU kernel for the paper's convolutional layers (Algs 1/2).
 
-Faithful mapping (DESIGN.md Sec. 2):
+Faithful mapping, extended with batching + spatial strip tiling
+(DESIGN.md Sec. 2):
 
-* grid = (output-channel stacks, input-channel steps) — one grid step is
-  one iteration of the paper's ``for d_i`` loop for one stack of Delta_O
-  output depth slices (``block_do``).  ``block_do = 1`` *is* Algorithm 1;
-  ``block_do = Delta_O > 1`` *is* Algorithm 2.  The input block's index map
-  ignores the stack index, so the input volume is re-streamed once per
-  stack — exactly the traffic Eq. (7) charges.
-* the output stack lives in an f32 VMEM accumulator across all d_i steps
-  (the cluster's L1-resident ``O[:, :, D_begin:D_end]``), initialized at
-  d_i = 0 and flushed to HBM once at d_i = D_I-1 (the paper's final
-  ``DmaStore``).
+* grid = (B, h_strips, output-channel stacks, input-channel steps) — the
+  innermost grid step is one iteration of the paper's ``for d_i`` loop for
+  one stack of Delta_O output depth slices (``block_do``) over one spatial
+  strip of one image.  ``block_do = 1`` *is* Algorithm 1; ``block_do =
+  Delta_O > 1`` *is* Algorithm 2.  The whole batch is served by a single
+  ``pallas_call`` — batch is a parallel grid axis, not a vmap of per-image
+  launches.
+* spatial strip tiling: the f32 VMEM accumulator holds an ``block_h x W_O``
+  strip of the output stack, not the full ``H_O x W_O`` plane, so VMEM no
+  longer bounds the image size and the capacity chooser can trade strip
+  height against Delta_O.  Input blocks are halo-overlapped (``pl.unblocked``
+  index maps at element granularity): strip ``h`` reads padded input rows
+  ``[h*block_h*S, h*block_h*S + (block_h-1)*S + F)``.
+* the strip accumulator lives in VMEM across all d_i steps (the cluster's
+  L1-resident ``O[y0:y1, :, D_begin:D_end]``), initialized at d_i = 0 and
+  flushed to HBM once at d_i = D_I-1 (the paper's final ``DmaStore``).
+* the flush step carries the *fused epilogue*: bias add, ReLU, and an
+  optional 2x2 max-pool all happen on the VMEM-resident strip before the
+  single store, so the activation never round-trips HBM between the conv
+  and its pointwise/pooling tail.
 * HBM->VMEM block streaming is double-buffered by the Pallas pipeline —
   the DmaLoad/DmaWait prefetch structure of the pseudocode.
 
-The conv itself is computed as F*F shifted MXU matmuls:
-  acc[HW, bdo] += X_pad[ky:ky+H_O, kx:kx+W_O, :].reshape(HW, bdi)
-                  @ F[ky, kx]  (bdi, bdo)
+The conv itself is computed as F*F shifted MXU matmuls (any stride S,
+in-kernel — no reference fallback for S = 2):
+  acc[hb*W_O, bdo] += X_pad[ky : ky+(hb-1)S+1 : S,
+                            kx : kx+(W_O-1)S+1 : S, :].reshape(hb*W_O, bdi)
+                      @ F[ky, kx]  (bdi, bdo)
 which keeps every MAC on the MXU (no im2col materialization in HBM).
-Stride 1 in-kernel (the paper's running case); strided convs lower via the
-reference path in ops.py.
 """
 
 from __future__ import annotations
@@ -32,29 +43,127 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
 
-def _conv_kernel(x_ref, f_ref, o_ref, acc_ref, *, n_di: int, F: int, H_O: int, W_O: int):
-    d_i = pl.program_id(1)
+
+def _conv_kernel(
+    x_ref, f_ref, b_ref, o_ref, acc_ref, *,
+    n_di: int, F: int, S: int, block_h: int, W_O: int,
+    relu: bool, pool: int,
+):
+    d_i = pl.program_id(3)
 
     @pl.when(d_i == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)  # initialize O stack to zero
+        acc_ref[...] = jnp.zeros_like(acc_ref)  # initialize O strip to zero
 
-    x = x_ref[...]  # [H_O+F-1, W_O+F-1, bdi] padded input slice block
+    x = x_ref[0]  # [(block_h-1)*S+F, W_in, bdi] halo'd input strip block
     bdi = x.shape[-1]
-    # Conv() as F^2 shifted matmuls on the MXU.
+    # Conv() as F^2 shifted (strided) matmuls on the MXU.
     for ky in range(F):
         for kx in range(F):
             win = jax.lax.slice(
-                x, (ky, kx, 0), (ky + H_O, kx + W_O, bdi)
-            ).reshape(H_O * W_O, bdi)
+                x,
+                (ky, kx, 0),
+                (ky + (block_h - 1) * S + 1, kx + (W_O - 1) * S + 1, bdi),
+                (S, S, 1),
+            ).reshape(block_h * W_O, bdi)
             acc_ref[...] += jnp.dot(
                 win, f_ref[ky, kx], preferred_element_type=jnp.float32
             )
 
     @pl.when(d_i == n_di - 1)
-    def _flush():  # DmaStore(O[:, :, D_begin:D_end])
-        o_ref[...] = acc_ref[...].reshape(H_O, W_O, -1).astype(o_ref.dtype)
+    def _flush():  # fused epilogue + DmaStore(O[y0:y1, :, D_begin:D_end])
+        out = acc_ref[...].reshape(block_h, W_O, -1)
+        out = out + b_ref[0][None, None, :]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        if pool > 1:
+            out = out.reshape(
+                block_h // pool, pool, W_O // pool, pool, out.shape[-1]
+            ).max(axis=(1, 3))
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def conv2d_fused_pallas(
+    x_pad: jax.Array,
+    f: jax.Array,
+    bias: jax.Array,
+    *,
+    stride: int,
+    block_h: int,
+    block_do: int,
+    block_di: int,
+    H_O: int,
+    W_O: int,
+    relu: bool = False,
+    pool: int = 1,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched, strip-tiled stacked direct conv with fused epilogue.
+
+    ``x_pad``: [B, H_in, W_in, D_I] spatially pre-padded input volumes with
+      H_in >= (n_h*block_h - 1)*stride + F and W_in >= (W_O - 1)*stride + F
+      where n_h = ceil(H_O / block_h).
+    ``f``: [F, F, D_I, D_O]; ``bias``: [1, D_O] (zeros when unused).
+    D_I, D_O must be multiples of the channel blocks; ``pool`` of 1 or 2
+    (2 requires block_h and W_O even).
+    Returns [B, n_h*block_h // pool, W_O // pool, D_O] — rows beyond H_O
+    (strip padding) are garbage and must be sliced off by the caller.
+    """
+    B, H_in, W_in, d_in = x_pad.shape
+    F, F2, d_in2, d_out = f.shape
+    assert F == F2 and d_in == d_in2
+    assert d_in % block_di == 0 and d_out % block_do == 0
+    if pool > 1:
+        assert block_h % pool == 0 and W_O % pool == 0, (
+            f"fused {pool}x{pool} pool needs block_h ({block_h}) and "
+            f"W_O ({W_O}) divisible by it"
+        )
+    n_h = -(-H_O // block_h)
+    assert H_in >= (n_h * block_h - 1) * stride + F
+    assert W_in >= (W_O - 1) * stride + F
+    out_dtype = out_dtype or x_pad.dtype
+    n_di = d_in // block_di
+    h_halo = (block_h - 1) * stride + F  # input rows per halo'd strip
+
+    kernel = functools.partial(
+        _conv_kernel,
+        n_di=n_di, F=F, S=stride, block_h=block_h, W_O=W_O,
+        relu=relu, pool=pool,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_h, d_out // block_do, n_di),
+        in_specs=[
+            # Halo-overlapped input strip block: element-granular (unblocked)
+            # index map; streamed over d_i; ignores the stack index do, so
+            # the strip's input rows are re-streamed once per output stack —
+            # exactly the traffic Eq. (7) charges, per strip.
+            pl.BlockSpec(
+                (1, h_halo, W_in, block_di),
+                lambda b, h, do, di: (b, h * block_h * stride, 0, di * block_di),
+                indexing_mode=pl.unblocked,
+            ),
+            # Filter parameters for the (d_i, d_o-stack) pair.
+            pl.BlockSpec((F, F, block_di, block_do), lambda b, h, do, di: (0, 0, di, do)),
+            # Bias slice for the d_o stack (fused into the flush).
+            pl.BlockSpec((1, block_do), lambda b, h, do, di: (0, do)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_h // pool, W_O // pool, block_do),
+            lambda b, h, do, di: (b, h, 0, do),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (B, n_h * block_h // pool, W_O // pool, d_out), out_dtype
+        ),
+        scratch_shapes=[pltpu.VMEM((block_h * W_O, block_do), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_pad, f, bias)
 
 
 def conv2d_pallas(
@@ -66,35 +175,20 @@ def conv2d_pallas(
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Stacked direct conv, stride 1.
+    """Back-compat single-image entry point (stride 1, no epilogue).
 
-    ``x_pad``: [H + 2P, W + 2P, D_I] spatially pre-padded input volume.
-    ``f``: [F, F, D_I, D_O].  D_I, D_O must be multiples of the blocks.
-    Returns [H_O, W_O, D_O].
+    ``x_pad``: [H + 2P, W + 2P, D_I]; ``f``: [F, F, D_I, D_O].
+    Returns [H_O, W_O, D_O].  Kept for callers of the pre-strip API; new
+    code should use :func:`conv2d_fused_pallas` (batched, strip-tiled).
     """
     Hp, Wp, d_in = x_pad.shape
-    F, F2, d_in2, d_out = f.shape
-    assert F == F2 and d_in == d_in2
-    assert d_in % block_di == 0 and d_out % block_do == 0
+    F = f.shape[0]
     H_O, W_O = Hp - F + 1, Wp - F + 1
-    out_dtype = out_dtype or x_pad.dtype
-    n_di = d_in // block_di
-
-    return pl.pallas_call(
-        functools.partial(_conv_kernel, n_di=n_di, F=F, H_O=H_O, W_O=W_O),
-        grid=(d_out // block_do, n_di),
-        in_specs=[
-            # Input depth-slice block: whole spatial extent, streamed over
-            # d_i; index map ignores the stack index (re-streamed per stack).
-            pl.BlockSpec((Hp, Wp, block_di), lambda do, di: (0, 0, di)),
-            # Filter parameters for the (d_i, d_o-stack) pair.
-            pl.BlockSpec((F, F, block_di, block_do), lambda do, di: (0, 0, di, do)),
-        ],
-        out_specs=pl.BlockSpec((H_O, W_O, block_do), lambda do, di: (0, 0, do)),
-        out_shape=jax.ShapeDtypeStruct((H_O, W_O, d_out), out_dtype),
-        scratch_shapes=[pltpu.VMEM((H_O * W_O, block_do), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(x_pad, f)
+    bias = jnp.zeros((1, f.shape[3]), jnp.float32)
+    out = conv2d_fused_pallas(
+        x_pad[None], f, bias,
+        stride=1, block_h=H_O, block_do=block_do, block_di=block_di,
+        H_O=H_O, W_O=W_O, relu=False, pool=1,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[0, :H_O]

@@ -1,8 +1,12 @@
-"""Jit'd public wrapper for the stacked conv2d kernel.
+"""Jit'd public wrapper for the batched, strip-tiled stacked conv2d kernel.
 
-``block_do`` (the paper's Delta_O) defaults to the capacity chooser from
-core/ccr.py evaluated against the TPU VMEM model — the same rule that gives
-Delta_O <= 24/12 on Manticore picks the output stack here.
+``block_do`` (the paper's Delta_O) and ``block_h`` (the spatial strip
+height) default to the capacity chooser: the same VMEM budget rule that
+gives Delta_O <= 24/12 on Manticore (core/ccr.py) now also trades strip
+height against output-channel stacking — a taller strip means less halo
+re-streaming, a wider stack means fewer passes over the input volume
+(Eq. 7), and the chooser picks the pair minimizing modeled main-memory
+words among those whose working set fits VMEM.
 """
 
 from __future__ import annotations
@@ -13,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.machine import TPU_V5E, MachineModel
-from repro.kernels.conv2d.conv2d import conv2d_pallas
-from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.conv2d.conv2d import conv2d_fused_pallas, conv2d_pallas  # noqa: F401
+from repro.kernels.conv2d.ref import conv2d_ref, maxpool_ref  # noqa: F401
 
 _LANE = 128
 
@@ -23,13 +27,82 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _fits(
+    hb: int, bdo: int, W_O: int, W_in: int, F: int, S: int,
+    in_bytes: int, block_di: int, budget: int,
+) -> bool:
+    """Does the strip working set fit VMEM?  f32 accumulator strip plus the
+    double-buffered input-strip and filter streams (paper Sec. 2.2.2)."""
+    h_halo = (hb - 1) * S + F
+    stream = (h_halo * W_in * block_di + F * F * block_di * bdo) * in_bytes * 2
+    return stream + hb * W_O * bdo * 4 <= budget
+
+
+def _schedule_words(
+    hb: int, bdo: int, H_O: int, W_O: int, W_in: int, F: int, S: int,
+    d_in: int, d_out: int, pool: int,
+) -> int:
+    """Modeled main-memory words of the strip-tiled schedule (the device-
+    level analogue of ccr.alg2_strip_traffic): every output stack re-streams
+    each strip's halo'd input rows once, filters stream once per
+    (stack, d_i), outputs store once."""
+    n_h = -(-H_O // hb)
+    n_stacks = -(-d_out // bdo)
+    h_halo = (hb - 1) * S + F
+    loads = n_stacks * n_h * h_halo * W_in * d_in + d_out * d_in * F * F
+    stores = (H_O // pool) * (W_O // pool) * d_out
+    return loads + stores
+
+
+def choose_schedule(
+    H_O: int, W_O: int, F: int, S: int, d_in: int, d_out: int,
+    in_bytes: int = 2, block_di: int = _LANE, pool: int = 1,
+    machine: MachineModel = TPU_V5E,
+) -> tuple[int, int]:
+    """Pick (block_h, block_do): the (strip height, Delta_O) pair whose
+    working set fits VMEM and whose modeled traffic is smallest.
+
+    Candidate strips are H_O and its power-of-two fractions (rounded up to
+    the pool granularity); for each, the largest lane-aligned output stack
+    that still fits is considered.  Ties break toward taller strips (less
+    halo re-streaming) — the paper's Delta_O argument, now two-dimensional.
+    """
+    budget = machine.usable_for_working_set(streams=2)
+    W_in = (W_O - 1) * S + F
+    dop = _round_up(d_out, _LANE)
+    cands = []
+    k = 1
+    while True:
+        hb = _round_up(-(-H_O // k), pool)
+        if not cands or hb < cands[-1]:
+            cands.append(hb)
+        if hb <= pool or k >= 64:
+            break
+        k *= 2
+    best = None
+    for hb in cands:
+        bdo = min(dop, 2048)
+        while bdo > _LANE and not _fits(
+            hb, bdo, W_O, W_in, F, S, in_bytes, block_di, budget
+        ):
+            bdo -= _LANE
+        if not _fits(hb, bdo, W_O, W_in, F, S, in_bytes, block_di, budget):
+            continue
+        words = _schedule_words(hb, bdo, H_O, W_O, W_in, F, S, d_in, d_out, pool)
+        if best is None or words < best[0]:
+            best = (words, hb, bdo)
+    if best is None:  # nothing fits the model; smallest legal tile anyway
+        return _round_up(min(8, H_O), pool), _LANE
+    return best[1], best[2]
+
+
 def choose_stack(
     H_O: int, W_O: int, W_Ipad: int, F: int, d_out: int,
     in_bytes: int = 2, block_di: int = _LANE,
     machine: MachineModel = TPU_V5E,
 ) -> int:
-    """Delta_O for TPU: largest output-channel stack whose f32 accumulator
-    plus streamed input/filter blocks fit VMEM (paper Sec. 2.2.2 argument)."""
+    """Legacy Delta_O-only chooser (full-plane strip): largest output stack
+    whose f32 accumulator plus streamed blocks fit VMEM (Sec. 2.2.2)."""
     budget = machine.usable_for_working_set(streams=2)
     stream = (W_Ipad**2 * block_di + F * F * block_di * _LANE) * in_bytes * 2
     bdo = _LANE
@@ -45,53 +118,100 @@ def choose_stack(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "padding", "block_do", "block_di", "out_dtype", "interpret"),
+    static_argnames=(
+        "stride", "padding", "relu", "pool",
+        "block_do", "block_di", "block_h", "out_dtype", "interpret",
+    ),
 )
+def _conv2d_impl(
+    x, f, bias, *, stride, padding, relu, pool,
+    block_do, block_di, block_h, out_dtype, interpret,
+):
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    B, H, W, d_in = x.shape
+    F = f.shape[0]
+    d_out = f.shape[3]
+    S = stride
+    H_O = (H + 2 * padding - F) // S + 1
+    W_O = (W + 2 * padding - F) // S + 1
+    assert H_O > 0 and W_O > 0, "receptive field larger than padded input"
+
+    # Pool fuses into the kernel flush only when the output plane tiles
+    # evenly; otherwise the kernel still fuses bias+ReLU and the (rare)
+    # ragged pool runs as a tail op.
+    fused_pool = pool if (pool > 1 and H_O % pool == 0 and W_O % pool == 0) else 1
+
+    bdi = block_di or min(_round_up(d_in, _LANE), 512)
+    if block_h is None or block_do is None:
+        hb_auto, bdo_auto = choose_schedule(
+            H_O, W_O, F, S, d_in, d_out,
+            in_bytes=x.dtype.itemsize, block_di=bdi, pool=fused_pool,
+        )
+        hb = block_h or hb_auto
+        bdo = block_do or bdo_auto
+    else:
+        hb, bdo = block_h, block_do
+    hb = _round_up(min(hb, _round_up(H_O, fused_pool)), fused_pool)
+    bdo = min(bdo, _round_up(d_out, _LANE))
+
+    n_h = -(-H_O // hb)
+    rows_needed = (n_h * hb - 1) * S + F
+    pad_bottom = padding + max(0, rows_needed - (H + 2 * padding))
+    dip, dop = _round_up(d_in, bdi), _round_up(d_out, bdo)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (padding, pad_bottom), (padding, padding), (0, dip - d_in)),
+    )
+    fp = jnp.pad(f, ((0, 0), (0, 0), (0, dip - d_in), (0, dop - d_out)))
+    bp = jnp.pad(bias.astype(jnp.float32), (0, dop - d_out))[None]
+
+    out = conv2d_fused_pallas(
+        xp, fp, bp,
+        stride=S, block_h=hb, block_do=bdo, block_di=bdi,
+        H_O=H_O, W_O=W_O, relu=relu, pool=fused_pool,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    out = out[:, : H_O // fused_pool, :, :d_out]
+    if pool > 1 and fused_pool == 1:  # ragged tail pool (odd H_O/W_O)
+        out = maxpool_ref(out, pool)
+    return out if batched else out[0]
+
+
 def conv2d(
     x: jax.Array,
     f: jax.Array,
     *,
     stride: int = 1,
     padding: int = 0,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    pool: int | None = None,
     block_do: int | None = None,
     block_di: int | None = None,
+    block_h: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Convolutional layer forward (paper Algs 1/2) for arbitrary shapes.
 
-    ``x``: [H, W, D_I] or [B, H, W, D_I]; ``f``: [F, F, D_I, D_O].
-    Stride 1 runs the Pallas kernel; strided convs use the XLA reference
-    (the paper's running examples are all S = 1).
+    ``x``: [H, W, D_I] or [B, H, W, D_I]; ``f``: [F, F, D_I, D_O].  One
+    batched ``pallas_call`` serves the whole batch (grid axis, not vmap);
+    any stride runs in-kernel.  ``bias`` ([D_O]), ``relu`` and ``pool``
+    (2 = fused 2x2 max-pool) execute in the kernel's flush step on the
+    VMEM-resident output strip — no HBM round-trip between the conv and
+    its epilogue.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     out_dtype = out_dtype or x.dtype
-    if stride != 1:
-        return conv2d_ref(x, f, stride=stride, padding=padding, out_dtype=out_dtype)
-
-    batched = x.ndim == 4
-    if not batched:
-        x = x[None]
-    F = f.shape[0]
-    d_in, d_out = f.shape[2], f.shape[3]
-
-    bdi = block_di or min(_round_up(d_in, _LANE), 512)
-    H_O = x.shape[1] + 2 * padding - F + 1
-    W_O = x.shape[2] + 2 * padding - F + 1
-    bdo = block_do or choose_stack(
-        H_O, W_O, x.shape[2] + 2 * padding, F, d_out,
-        in_bytes=x.dtype.itemsize, block_di=bdi,
-    )
-    bdo = min(bdo, _round_up(d_out, _LANE))
-
-    dip, dop = _round_up(d_in, bdi), _round_up(d_out, bdo)
-    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, dip - d_in)))
-    fp = jnp.pad(f, ((0, 0), (0, 0), (0, dip - d_in), (0, dop - d_out)))
-
-    run = functools.partial(
-        conv2d_pallas, block_do=bdo, block_di=bdi,
+    d_out = f.shape[3]
+    if bias is None:
+        bias = jnp.zeros((d_out,), jnp.float32)
+    return _conv2d_impl(
+        x, f, bias,
+        stride=stride, padding=padding, relu=relu, pool=int(pool or 1),
+        block_do=block_do, block_di=block_di, block_h=block_h,
         out_dtype=out_dtype, interpret=interpret,
     )
-    out = jax.vmap(lambda xi: run(xi, fp))(xp)[..., :d_out]
-    return out if batched else out[0]

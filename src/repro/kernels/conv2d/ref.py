@@ -23,3 +23,28 @@ def conv2d_ref(x, f, *, stride: int = 1, padding: int = 0, out_dtype=None):
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     ).astype(out_dtype)
     return out[0] if squeeze else out
+
+
+def maxpool_ref(x, pool: int = 2):
+    """Non-overlapping ``pool x pool`` max-pool (floor semantics) over the
+    spatial dims of [..., H, W, C]."""
+    *lead, H, W, C = x.shape
+    Hc, Wc = H - H % pool, W - W % pool
+    x = x[..., :Hc, :Wc, :]
+    return x.reshape(*lead, Hc // pool, pool, Wc // pool, pool, C).max((-4, -2))
+
+
+def conv2d_fused_ref(
+    x, f, bias=None, *, stride: int = 1, padding: int = 0,
+    relu: bool = False, pool: int = 1, out_dtype=None,
+):
+    """Oracle for the fused conv + bias + ReLU + max-pool epilogue path."""
+    out_dtype = out_dtype or x.dtype
+    y = conv2d_ref(x, f, stride=stride, padding=padding, out_dtype=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if pool > 1:
+        y = maxpool_ref(y, pool)
+    return y.astype(out_dtype)

@@ -1,0 +1,21 @@
+"""Version-compatibility shims for Pallas TPU across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back again across versions); every kernel in this package routes through
+:func:`tpu_compiler_params` so they run on whichever this install provides.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(
+    pltpu, "TPUCompilerParams", getattr(pltpu, "CompilerParams", None)
+)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build compiler params for ``pl.pallas_call`` (None if unavailable)."""
+    if TPUCompilerParams is None:  # pragma: no cover - ancient jax
+        return None
+    return TPUCompilerParams(**kwargs)

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.conv_layer import conv_layer
+from repro.core.conv_layer import conv_block
 from repro.core.fc_layer import fc_layer
 from repro.models.module import ParamDef
 
@@ -50,16 +50,17 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
     """images: [B, IMG, IMG, 3] -> logits [B, classes]."""
     x = images
     for i in range(cfg.n_layers):
-        f = params[f"conv{i}"]
+        f, b = params[f"conv{i}"], params[f"bias{i}"]
         if use_kernels:
-            x = conv_layer(x, f, 1, F // 2, "alg2")
+            # One batched kernel launch per stage: conv + bias + ReLU + 2x2
+            # max-pool all fused in the flush — no HBM round-trip between
+            # the conv and its epilogue.
+            x = conv_block(x, f, b, 1, F // 2, 2, "strip")
         else:
-            from repro.kernels.conv2d.ref import conv2d_ref
+            from repro.kernels.conv2d.ref import conv2d_fused_ref
 
-            x = conv2d_ref(x, f, stride=1, padding=F // 2)
-        x = jax.nn.relu(x + params[f"bias{i}"])
-        B, H, W, C = x.shape
-        x = x.reshape(B, H // 2, 2, W // 2, 2, C).max((2, 4))  # 2x2 maxpool
+            x = conv2d_fused_ref(x, f, b, stride=1, padding=F // 2,
+                                 relu=True, pool=2)
     x = x.reshape(x.shape[0], -1)
     if use_kernels:
         x = jax.nn.relu(fc_layer(x, params["fc1"]) + params["fc1_b"])

@@ -1,0 +1,36 @@
+"""Optional-hypothesis shim (see requirements-dev.txt).
+
+``from _hyp import given, settings, st`` gives the real hypothesis API when
+it is installed.  When it is not, ``@given(...)`` marks the test as skipped
+at collection time instead of blowing up the whole module import — so the
+non-property tests in a file keep running on minimal environments.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy builder
+        returns an inert placeholder, so module-level strategy definitions
+        still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")

@@ -7,8 +7,7 @@ Sections referenced: 2.1.2, 2.1.4, 2.2.2, 2.2.4, 2.3.2, 2.3.4, 3.1.2,
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import ccr
 from repro.core.machine import MANTICORE

@@ -1,0 +1,203 @@
+"""Batched, strip-tiled conv2d pipeline with fused epilogue (DESIGN.md
+Sec. 2): kernel parity vs the XLA oracle across batching / odd channels /
+padding / stride / ragged strips, gradient checks for the fused
+``conv_block`` custom_vjp, and the strip-tiled traffic model cross-checked
+against the executed-schedule simulator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ccr
+from repro.core import schedule_sim as sim
+from repro.core.conv_layer import conv_block, conv_layer, traffic
+from repro.core.machine import MANTICORE
+from repro.kernels.conv2d import (
+    choose_schedule, conv2d, conv2d_fused_ref, conv2d_ref,
+)
+
+TOLS = {jnp.float32: dict(rtol=1e-5, atol=1e-5), jnp.bfloat16: dict(rtol=1e-2, atol=1e-2)}
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _close(got, want, dtype=jnp.float32):
+    assert got.shape == want.shape, (got.shape, want.shape)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+    )
+
+
+class TestBatchedStripKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B", [1, 3, 8])
+    def test_batched_single_call_parity(self, B, dtype):
+        """One pallas_call serves the whole batch (batch is a grid axis)."""
+        rng = np.random.default_rng(B)
+        x = _rand(rng, (B, 10, 10, 6), dtype)
+        f = _rand(rng, (3, 3, 6, 8), dtype)
+        got = conv2d(x, f, padding=1, block_do=4, block_di=3, block_h=4)
+        _close(got, conv2d_ref(x, f, padding=1), dtype)
+
+    @pytest.mark.parametrize(
+        "H,di,do,F,P,S,hb",
+        [
+            (11, 7, 5, 3, 1, 1, 4),   # odd channels, strip !| H_O
+            (13, 3, 9, 5, 2, 1, 5),   # F=5, strip !| H_O
+            (9, 2, 3, 3, 1, 2, 2),    # stride 2 in-kernel, strips
+            (12, 4, 4, 3, 0, 3, 2),   # stride 3, no padding
+            (8, 5, 7, 1, 0, 1, 8),    # pointwise conv, single strip
+        ],
+    )
+    def test_shape_matrix(self, H, di, do, F, P, S, hb):
+        rng = np.random.default_rng(H * 100 + di * 10 + do + F + P + S)
+        x = _rand(rng, (2, H, H, di))
+        f = _rand(rng, (F, F, di, do))
+        got = conv2d(x, f, stride=S, padding=P, block_do=2, block_di=2, block_h=hb)
+        _close(got, conv2d_ref(x, f, stride=S, padding=P))
+
+    def test_chooser_defaults_parity(self):
+        """With no blocks given, choose_schedule picks (block_h, Delta_O)."""
+        rng = np.random.default_rng(7)
+        x = _rand(rng, (2, 16, 16, 8))
+        f = _rand(rng, (5, 5, 8, 16))
+        _close(conv2d(x, f, padding=2), conv2d_ref(x, f, padding=2))
+
+    def test_unbatched_matches_batched(self):
+        rng = np.random.default_rng(8)
+        x = _rand(rng, (10, 10, 4))
+        f = _rand(rng, (3, 3, 4, 6))
+        a = conv2d(x, f, padding=1, block_do=3, block_di=2, block_h=5)
+        b = conv2d(x[None], f, padding=1, block_do=3, block_di=2, block_h=5)[0]
+        _close(a, b)
+
+
+class TestFusedEpilogue:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_bias_relu_pool_fused(self, dtype):
+        rng = np.random.default_rng(20)
+        x = _rand(rng, (4, 12, 12, 6), dtype)
+        f = _rand(rng, (3, 3, 6, 8), dtype)
+        b = _rand(rng, (8,), np.float32)
+        got = conv2d(x, f, padding=1, bias=b, relu=True, pool=2,
+                     block_do=4, block_di=3, block_h=4)
+        _close(got, conv2d_fused_ref(x, f, b, padding=1, relu=True, pool=2), dtype)
+
+    def test_odd_plane_pool_tail(self):
+        """Odd H_O/W_O can't tile the fused 2x2 pool; bias+ReLU stay fused
+        and the ragged pool runs as a tail op with floor semantics."""
+        rng = np.random.default_rng(21)
+        x = _rand(rng, (2, 9, 9, 4))
+        f = _rand(rng, (3, 3, 4, 6))
+        b = _rand(rng, (6,), np.float32)
+        got = conv2d(x, f, padding=1, bias=b, relu=True, pool=2,
+                     block_do=3, block_di=2)
+        _close(got, conv2d_fused_ref(x, f, b, padding=1, relu=True, pool=2))
+
+    def test_strided_fused(self):
+        rng = np.random.default_rng(22)
+        x = _rand(rng, (2, 17, 17, 4))
+        f = _rand(rng, (3, 3, 4, 6))
+        b = _rand(rng, (6,), np.float32)
+        got = conv2d(x, f, stride=2, padding=1, bias=b, relu=True, pool=2,
+                     block_do=3, block_di=2, block_h=4)
+        _close(got, conv2d_fused_ref(x, f, b, stride=2, padding=1, relu=True, pool=2))
+
+
+class TestConvBlockVjp:
+    def test_conv_block_forward(self):
+        rng = np.random.default_rng(30)
+        x = _rand(rng, (2, 8, 8, 4))
+        f = _rand(rng, (3, 3, 4, 6))
+        b = _rand(rng, (6,), np.float32)
+        got = conv_block(x, f, b, 1, 1, 2, "strip")
+        _close(got, conv2d_fused_ref(x, f, b, padding=1, relu=True, pool=2))
+
+    def test_conv_block_grads_match_xla(self):
+        """custom_vjp of the fused block == autodiff of the pure-XLA ref."""
+        rng = np.random.default_rng(31)
+        x = _rand(rng, (2, 8, 8, 4))
+        f = _rand(rng, (3, 3, 4, 6))
+        b = _rand(rng, (6,), np.float32)
+
+        def loss_kern(x, f, b):
+            return jnp.sum(conv_block(x, f, b, 1, 1, 2, "strip") ** 2)
+
+        def loss_ref(x, f, b):
+            return jnp.sum(
+                conv2d_fused_ref(x, f, b, padding=1, relu=True, pool=2) ** 2
+            )
+
+        gk = jax.grad(loss_kern, argnums=(0, 1, 2))(x, f, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, f, b)
+        for a, c in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-4, atol=1e-4)
+            assert jnp.isfinite(a).all()
+
+    def test_conv_layer_still_differentiable(self):
+        rng = np.random.default_rng(32)
+        x = _rand(rng, (7, 7, 3))
+        f = _rand(rng, (3, 3, 3, 4))
+        g = jax.grad(lambda xx: jnp.sum(conv_layer(xx, f, 1, 1, "alg2")))(x)
+        gr = jax.grad(lambda xx: jnp.sum(conv2d_ref(xx, f, padding=1)))(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+class TestStripTrafficModel:
+    S = ccr.ConvShape(W_I=32, D_I=128, D_O=128, F=3, S=1, P=1)
+
+    @pytest.mark.parametrize("hb", [32, 16, 8, 5, 3, 1])
+    @pytest.mark.parametrize("stack", [24, 7, 128])
+    def test_closed_form_equals_simulator(self, hb, stack):
+        assert ccr.alg2_strip_traffic(self.S, stack, hb) == sim.simulate_alg2_strip(
+            self.S, stack, hb
+        )
+
+    def test_degenerates_to_eq7_at_full_plane(self):
+        """h_block = H_O is exactly Alg 2 / Eq. (7)."""
+        for stack in (1, 12, 24, 128):
+            assert ccr.alg2_strip_traffic(self.S, stack, 32) == ccr.alg2_traffic(
+                self.S, stack
+            )
+
+    def test_strided_shape_simulates(self):
+        s = ccr.ConvShape(W_I=33, D_I=16, D_O=32, F=3, S=2, P=1)
+        for hb in (17, 8, 4, 3):
+            assert ccr.alg2_strip_traffic(s, 8, hb) == sim.simulate_alg2_strip(s, 8, hb)
+
+    def test_capacity_tradeoff(self):
+        """Shrinking the strip grows the Delta_O the capacity rule allows
+        (Sec. 2.2.2 argument, now two-dimensional), and the strip working
+        set is never above the full-plane one."""
+        full = ccr.alg2_strip_max_stack(self.S, MANTICORE, "sp", 32)
+        half = ccr.alg2_strip_max_stack(self.S, MANTICORE, "sp", 16)
+        eighth = ccr.alg2_strip_max_stack(self.S, MANTICORE, "sp", 4)
+        assert full == ccr.alg2_max_stack(self.S, MANTICORE, "sp")
+        assert full < half < eighth
+        assert (
+            ccr.alg2_strip_space_words(self.S, 24, 8)
+            < ccr.alg2_space_words(self.S, 24)
+        )
+
+    def test_traffic_strategy_hook(self):
+        t = traffic(self.S, "strip", "sp", h_block=16)
+        assert t.main_words > 0 and t.macs == ccr.conv_macs(self.S)
+
+    def test_choose_schedule_fits_and_trades(self):
+        """The TPU chooser returns a working set that fits VMEM and prefers
+        full-plane strips when they fit."""
+        from repro.kernels.conv2d.ops import _fits
+        from repro.core.machine import TPU_V5E
+
+        hb, bdo = choose_schedule(32, 32, 3, 1, 128, 256, in_bytes=4, block_di=128)
+        assert hb % 1 == 0 and bdo % 128 == 0
+        assert _fits(hb, bdo, 32, 34, 3, 1, 4, 128,
+                     TPU_V5E.usable_for_working_set(2))
+        # a plane too large for VMEM at any stack forces a partial strip
+        hb2, _ = choose_schedule(4096, 4096, 3, 1, 128, 256, in_bytes=4,
+                                 block_di=512)
+        assert hb2 < 4096

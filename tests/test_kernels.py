@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels.conv2d import conv2d, conv2d_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
@@ -94,13 +93,27 @@ class TestConv2dKernel:
         a2 = conv2d(x, f, padding=1, block_do=3, block_di=2)
         np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-5)
 
-    def test_strided_falls_back(self):
+    @pytest.mark.parametrize("stride", [2, 3])
+    def test_strided_runs_in_kernel(self, stride):
+        """Strided convs run the Pallas kernel (shifted strided matmuls),
+        no reference fallback."""
         rng = np.random.default_rng(3)
         x = _rand(rng, (9, 9, 4), np.float32)
         f = _rand(rng, (3, 3, 4, 5), np.float32)
-        got = conv2d(x, f, stride=2, padding=1)
-        want = conv2d_ref(x, f, stride=2, padding=1)
+        got = conv2d(x, f, stride=stride, padding=1, block_do=5, block_di=4)
+        want = conv2d_ref(x, f, stride=stride, padding=1)
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_strip_height_invariance(self):
+        """Any strip height gives identical numerics — block_h is purely a
+        capacity/perf knob, including heights that don't divide H_O."""
+        rng = np.random.default_rng(4)
+        x = _rand(rng, (2, 11, 11, 5), np.float32)
+        f = _rand(rng, (3, 3, 5, 4), np.float32)
+        full = conv2d(x, f, padding=1, block_do=4, block_di=5, block_h=11)
+        for hb in (1, 3, 4, 16):
+            got = conv2d(x, f, padding=1, block_do=4, block_di=5, block_h=hb)
+            np.testing.assert_allclose(got, full, rtol=1e-6, atol=1e-6)
 
     @settings(max_examples=8, deadline=None)
     @given(
