@@ -15,6 +15,7 @@ from repro.core.conv_layer import conv_layer, traffic as conv_traffic
 from repro.core.fc_layer import fc_layer
 from repro.core.machine import MANTICORE, TPU_V5E
 from repro.kernels.conv2d import conv2d_ref
+from repro.plan import ConvPlanner, get_op, to_roofline
 
 # --- 1. The paper's analysis: CCR of the running example ------------------
 shape = ccr.ConvShape(W_I=32, D_I=128, D_O=128, F=3, S=1, P=1)
@@ -24,11 +25,22 @@ for strat in ("alg1", "alg2", "alg3"):
     print(f"  {strat}: CCR={t.ccr:6.1f} MAC/word  off-chip={t.ccr_offchip:6.1f}"
           f"  -> {ccr.bound_kind(t, MANTICORE, 'sp')} on Manticore")
 
-# --- 2. The same capacity rule picks TPU kernel blocks --------------------
-from repro.kernels.conv2d.ops import choose_stack
-
-bdo = choose_stack(H_O=32, W_O=32, W_Ipad=34, F=3, d_out=1024, in_bytes=2)
-print(f"TPU Delta_O (output-channel block) from VMEM capacity rule: {bdo}")
+# --- 2. One capacity rule, two machines: repro.plan ------------------------
+# The same ConvPlanner reproduces the paper's Manticore Delta_O (24 at sp,
+# core/ccr.py parity) and picks Pallas blocks against TPU VMEM.
+man = ConvPlanner(MANTICORE).plan(
+    H_O=32, W_O=32, F=3, S=1, d_in=128, d_out=128,
+    in_bytes=4, padding=1, H_I=32, W_I=32, block_h=32,  # full-plane Alg 2
+)
+tpu = ConvPlanner(TPU_V5E).plan(
+    H_O=32, W_O=32, F=3, S=1, d_in=128, d_out=1024, in_bytes=2,
+)
+print(f"Manticore Delta_O from the capacity rule: {man.block('block_do')}"
+      f"  (modeled words match Eq. 7: "
+      f"{man.modeled_words == ccr.alg2_traffic(shape, 24).main_words})")
+print(f"TPU schedule: blocks={dict(tpu.blocks)} grid={tpu.grid}"
+      f"  modeled_words={tpu.modeled_words}  fits_vmem={tpu.fits(TPU_V5E)}")
+print(f"  roofline t_memory at 819 GB/s: {to_roofline(tpu).t_memory:.2e} s")
 
 # --- 3. Run the layers (Pallas kernels, interpret mode on CPU) ------------
 rng = np.random.default_rng(0)
@@ -38,6 +50,14 @@ y = conv_layer(x, f, 1, 1, "alg2")
 np.testing.assert_allclose(np.asarray(y), np.asarray(conv2d_ref(x, f, padding=1)),
                            rtol=2e-4, atol=2e-4)
 print("conv_layer (Alg 2 kernel) matches reference:", y.shape)
+
+# An explicit Schedule round-trips through any kernel: plan once, pass it
+# back in (the planner is the default, never a requirement).
+conv2d_op = get_op("conv2d")
+sched = conv2d_op.plan(x, f, jnp.zeros((12,), jnp.float32), padding=1)
+y2 = conv_layer(x, f, 1, 1, "strip", sched)
+np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-6, atol=1e-6)
+print("explicit Schedule round-trips:", dict(sched.blocks))
 
 xf = jnp.asarray(rng.standard_normal((4, 49 * 8)), jnp.float32)
 wf = jnp.asarray(rng.standard_normal((49 * 8, 64)), jnp.float32)

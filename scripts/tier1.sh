@@ -1,6 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
-# Usage: scripts/tier1.sh [extra pytest args...]
+# Usage: scripts/tier1.sh [--bench-smoke] [extra pytest args...]
+#   --bench-smoke  additionally run one tiny planner+kernel case per
+#                  registered op in interpret mode (benchmarks/run.py smoke)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+
+BENCH_SMOKE=0
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+  BENCH_SMOKE=1
+  shift
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+if [[ "$BENCH_SMOKE" == 1 ]]; then
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py smoke
+fi

@@ -2,92 +2,128 @@
 
 ``strategy`` selects the paper algorithm:
   * "alg1"  - one output depth slice at a time (block_do = 1);
-  * "alg2"  - Delta_O output stacking, Delta_O from the capacity chooser;
-  * "strip" - Alg 2 + spatial strip tiling: the accumulator holds an
-              h_block x W_O strip, trading strip height against Delta_O
-              (the schedule the Pallas kernel actually runs);
+  * "alg2"  - Delta_O output stacking at the full-plane strip, Delta_O from
+              the capacity planner;
+  * "strip" - Alg 2 + spatial strip tiling: the planner trades strip height
+              against Delta_O (the schedule the Pallas kernel actually runs);
   * "alg3"  - Alg 2 blocking within each device + ring input-slice reuse
               across devices (core/ring.py) when input channels are sharded.
 
-Forward runs the batched strip-tiled Pallas kernel (interpret mode
-off-TPU); :func:`conv_block` additionally fuses the layer epilogue (bias +
-ReLU + optional 2x2 max-pool) into the kernel's flush step.  Backward is
-the XLA reference VJP (custom_vjp), so CNNs built from these layers train.
-Traffic accounting for any strategy comes from core/ccr.py.
+Blocking flows through the ``repro.plan`` layer: each strategy is a
+different constraint handed to :class:`repro.plan.ConvPlanner`, and an
+explicit :class:`repro.plan.Schedule` (``schedule=``) overrides the
+planner entirely.  Forward runs the batched strip-tiled Pallas kernel
+(interpret mode off-TPU); :func:`conv_block` additionally fuses the layer
+epilogue (bias + ReLU + optional 2x2 max-pool) into the kernel's flush
+step.  Backward is the XLA reference VJP (``repro.plan.with_reference_vjp``),
+so CNNs built from these layers train.  Traffic accounting for any
+strategy comes from core/ccr.py.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
 from repro.core import ccr
-from repro.core.machine import TPU_V5E, MANTICORE
+from repro.core.machine import MANTICORE
 from repro.kernels.conv2d.ops import conv2d
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref
+from repro.plan import Schedule, with_reference_vjp
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def conv_layer(x, f, stride=1, padding=0, strategy="alg2"):
-    """x: [B, H, W, D_I] or [H, W, D_I]; f: [F, F, D_I, D_O]."""
-    block_do = 1 if strategy == "alg1" else None  # None -> capacity chooser
-    return conv2d(x, f, stride=stride, padding=padding, block_do=block_do)
+def _strategy_blocks(strategy, x, f, stride, padding):
+    """Map a paper strategy onto planner constraints (block_do, block_h)."""
+    from repro.kernels.conv2d.ops import conv_out_extent
+
+    block_do = 1 if strategy == "alg1" else None  # None -> capacity planner
+    block_h = None if strategy in ("strip", "alg1") else -1  # -1 -> full plane
+    if block_h == -1:
+        block_h = max(1, conv_out_extent(x.shape[-3], padding, f.shape[0], stride))
+    return block_do, block_h
 
 
-def _fwd(x, f, stride, padding, strategy):
-    return conv_layer(x, f, stride, padding, strategy), (x, f)
-
-
-def _bwd(stride, padding, strategy, res, g):
-    x, f = res
-    _, vjp = jax.vjp(
-        lambda xx, ff: conv2d_ref(xx, ff, stride=stride, padding=padding), x, f
+def _conv_layer_kernel(x, f, stride, padding, strategy, schedule):
+    block_do, block_h = _strategy_blocks(strategy, x, f, stride, padding)
+    return conv2d(
+        x, f, stride=stride, padding=padding, schedule=schedule,
+        block_do=block_do, block_h=block_h,
     )
-    return vjp(g)
 
 
-conv_layer.defvjp(_fwd, _bwd)
+def _conv_layer_ref(x, f, stride, padding, strategy, schedule):
+    del strategy, schedule  # schedule knobs never change numerics
+    return conv2d_ref(x, f, stride=stride, padding=padding)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip"):
+_conv_layer_vjp = with_reference_vjp(
+    _conv_layer_kernel, _conv_layer_ref, nondiff_argnums=(2, 3, 4, 5)
+)
+
+
+def conv_layer(x, f, stride=1, padding=0, strategy="alg2",
+               schedule: Schedule | None = None):
+    """x: [B, H, W, D_I] or [H, W, D_I]; f: [F, F, D_I, D_O]."""
+    return _conv_layer_vjp(x, f, stride, padding, strategy, schedule)
+
+
+def _conv_block_kernel(x, f, b, stride, padding, pool, strategy, schedule):
+    block_do, block_h = _strategy_blocks(strategy, x, f, stride, padding)
+    return conv2d(
+        x, f, bias=b, stride=stride, padding=padding,
+        relu=True, pool=pool, schedule=schedule,
+        block_do=block_do, block_h=block_h,
+    )
+
+
+def _conv_block_ref(x, f, b, stride, padding, pool, strategy, schedule):
+    del strategy, schedule
+    return conv2d_fused_ref(
+        x, f, b, stride=stride, padding=padding, relu=True, pool=pool
+    )
+
+
+_conv_block_vjp = with_reference_vjp(
+    _conv_block_kernel, _conv_block_ref, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+
+
+def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip",
+               schedule: Schedule | None = None):
     """Fused conv + bias + ReLU (+ optional ``pool x pool`` max-pool).
 
     The whole epilogue runs in the Pallas kernel's flush step on the
     VMEM-resident output strip — the activation never round-trips HBM
     between the conv and the pool.  ``x``: [B, H, W, D_I] or [H, W, D_I];
-    ``f``: [F, F, D_I, D_O]; ``b``: [D_O].
+    ``f``: [F, F, D_I, D_O]; ``b``: [D_O].  An explicit ``schedule``
+    overrides the strategy's planner constraints.
     """
+    return _conv_block_vjp(x, f, b, stride, padding, pool, strategy, schedule)
+
+
+def plan(
+    x_shape, f_shape, *, stride=1, padding=0, pool=1, in_bytes=4,
+    machine=None, strategy="strip",
+) -> Schedule:
+    """Plan this layer without running it: the Schedule the kernel would
+    use for operands of these shapes (report `.modeled_words` next to
+    measured time, or pass it back in via ``schedule=``)."""
+    from repro.core.machine import TPU_V5E
+    from repro.kernels.conv2d.ops import _fused_pool, conv_out_extent
+    from repro.plan import ConvPlanner
+
+    machine = machine or TPU_V5E
+    batched = len(x_shape) == 4
+    B = x_shape[0] if batched else 1
+    H, W, d_in = x_shape[-3], x_shape[-2], x_shape[-1]
+    F, d_out = f_shape[0], f_shape[3]
+    H_O = conv_out_extent(H, padding, F, stride)
+    W_O = conv_out_extent(W, padding, F, stride)
+    fused = _fused_pool(H_O, W_O, pool)
     block_do = 1 if strategy == "alg1" else None
-    block_h = None if strategy in ("strip", "alg1") else -1  # -1 -> full plane
-    if block_h == -1:
-        F = f.shape[0]
-        H = x.shape[-3]
-        block_h = max(1, (H + 2 * padding - F) // stride + 1)
-    return conv2d(
-        x, f, bias=b, stride=stride, padding=padding,
-        relu=True, pool=pool, block_do=block_do, block_h=block_h,
+    block_h = H_O if strategy in ("alg2", "alg3") else None
+    return ConvPlanner(machine).plan(
+        H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
+        in_bytes=in_bytes, pool=fused, batch=B, padding=padding,
+        H_I=H, W_I=W, block_do=block_do, block_h=block_h,
     )
-
-
-def _block_fwd(x, f, b, stride, padding, pool, strategy):
-    return conv_block(x, f, b, stride, padding, pool, strategy), (x, f, b)
-
-
-def _block_bwd(stride, padding, pool, strategy, res, g):
-    x, f, b = res
-    _, vjp = jax.vjp(
-        lambda xx, ff, bb: conv2d_fused_ref(
-            xx, ff, bb, stride=stride, padding=padding, relu=True, pool=pool
-        ),
-        x, f, b,
-    )
-    return vjp(g)
-
-
-conv_block.defvjp(_block_fwd, _block_bwd)
 
 
 def traffic(

@@ -9,35 +9,45 @@ reduction, lowered to the ICI collective.
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ccr
 from repro.core.machine import MANTICORE
 from repro.kernels.matmul.ops import fc_matmul
 from repro.kernels.matmul.ref import fc_matmul_ref
+from repro.plan import Schedule, with_reference_vjp
+from repro.core.shard_compat import shard_map
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
-def fc_layer(x, w):
-    """x: [..., K]; w: [K, D_O].  Forward = Pallas Alg 4/5 kernel."""
-    return fc_matmul(x, w)
+def _fc_kernel(x, w, schedule):
+    return fc_matmul(x, w, schedule=schedule)
 
 
-def _fwd(x, w):
-    return fc_layer(x, w), (x, w)
+def _fc_ref(x, w, schedule):
+    del schedule  # blocking never changes numerics
+    return fc_matmul_ref(x, w)
 
 
-def _bwd(res, g):
-    x, w = res
-    _, vjp = jax.vjp(fc_matmul_ref, x, w)
-    return vjp(g)
+_fc_layer_vjp = with_reference_vjp(_fc_kernel, _fc_ref, nondiff_argnums=(2,))
 
 
-fc_layer.defvjp(_fwd, _bwd)
+def fc_layer(x, w, schedule: Schedule | None = None):
+    """x: [..., K]; w: [K, D_O].  Forward = Pallas Alg 4/5 kernel; the
+    MatmulPlanner picks blocks unless an explicit ``schedule`` is given."""
+    return _fc_layer_vjp(x, w, schedule)
+
+
+def plan(x_shape, w_shape, *, in_bytes=4, machine=None) -> Schedule:
+    """Plan this layer without running it (see conv_layer.plan)."""
+    from repro.core.machine import TPU_V5E
+    from repro.plan import MatmulPlanner
+
+    m = 1
+    for d in x_shape[:-1]:
+        m *= d
+    k, n = w_shape
+    return MatmulPlanner(machine or TPU_V5E).plan(m=m, n=n, k=k, in_bytes=in_bytes)
 
 
 def fc_layer_sharded(x, w, mesh, axis: str = "model"):
@@ -47,7 +57,7 @@ def fc_layer_sharded(x, w, mesh, axis: str = "model"):
     def fn(xl, wl):
         return jax.lax.psum(xl @ wl, axis)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(None, axis), P(axis, None)),
         out_specs=P(None, None),

@@ -35,6 +35,15 @@ class MachineModel:
     link_bw: float
     # Number of compute units in one "chip" (Manticore chiplet: 128 clusters).
     units: int = 1
+    # Block-size granularity the compute unit wants (TPU MXU/VPU lane width:
+    # 128; Manticore clusters have no alignment constraint: 1).  Planners in
+    # repro.plan emit blocks in multiples of this.
+    lane: int = 1
+    # Whether streamed input blocks are double-buffered *inside* the local
+    # memory budget (Pallas holds whole blocks in VMEM: True) or flow through
+    # the fixed reserved DMA buffers (Manticore's 16 KiB stream buffers,
+    # paper Sec. 2.1.2: False — only the working set is charged).
+    charge_stream_blocks: bool = True
 
     def dma_reserve(self, streams: int) -> int:
         """Bytes reserved for ``streams`` double-buffered DMA streams."""
@@ -56,6 +65,8 @@ MANTICORE = MachineModel(
     main_mem_bw=64 * 1e9,  # one 512-bit HBM2E port @ 1 GHz
     link_bw=64 * 1e9,  # 512-bit cluster DMA port @ 1 GHz
     units=128,
+    lane=1,
+    charge_stream_blocks=False,  # streams ride the reserved 16 KiB buffers
 )
 
 # TPU v5e (the adaptation target; constants fixed by the assignment):
@@ -71,6 +82,8 @@ TPU_V5E = MachineModel(
     main_mem_bw=819e9,
     link_bw=50e9,
     units=1,
+    lane=128,
+    charge_stream_blocks=True,  # Pallas double-buffers whole blocks in VMEM
 )
 
 WORD_BYTES = {"sp": 4, "dp": 8, "bf16": 2, "f32": 4, "f64": 8}

@@ -24,13 +24,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.core.shard_compat import axis_size, shard_map
 
 
 def ring_matmul_local(x_shard, w_cols, axis: str):
     """Inside shard_map.  x_shard: [M, K/P] (this device's input slice);
     w_cols: [K, N/P] (full-K weight columns for this device's output
     stack).  Returns [M, N/P]."""
-    p = jax.lax.axis_size(axis)
+    p = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     k_loc = x_shard.shape[1]
     n_loc = w_cols.shape[1]
@@ -53,7 +54,7 @@ def ring_matmul(x, w, mesh, axis: str = "model"):
     """O = X @ W with X K-sharded and W N-sharded over ``axis``.
     x: [M, K]; w: [K, N]; out: [M, N] N-sharded."""
     fn = functools.partial(ring_matmul_local, axis=axis)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(None, axis), P(None, axis)),
         out_specs=P(None, axis),

@@ -1,0 +1,54 @@
+"""Version-compatibility shims for ``jax.sharding`` across jax releases
+(same pattern as ``kernels/pallas_compat.py``).
+
+Newer jax exposes ``jax.sharding.AxisType`` and the ``axis_types=`` kwarg
+on ``jax.make_mesh``; jax 0.4.x has neither (every mesh axis is implicitly
+Auto there, which is exactly what this repo requests).  Route all mesh
+construction through :func:`make_auto_mesh` so both vintages work.
+"""
+
+from __future__ import annotations
+
+import jax
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+# jax.shard_map landed as a top-level API after 0.4.x; before that it lives
+# in jax.experimental.shard_map, and its replication-check kwarg is spelled
+# check_rep instead of check_vma.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - exercised on jax 0.4.x only
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` (with
+    ``check_vma`` -> ``check_rep``) on 0.4.x."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` where it exists; the classic ``psum(1, axis)``
+    idiom (which constant-folds to a Python int) on 0.4.x."""
+    f = getattr(jax.lax, "axis_size", None)
+    if f is not None:
+        return f(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def auto_axis_types(n_axes: int) -> dict:
+    """``axis_types`` kwargs for ``n_axes`` Auto mesh axes ({} when this
+    jax predates AxisType — Auto is its only behavior)."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_auto_mesh(shape, axes):
+    """``jax.make_mesh`` with every axis in Auto sharding mode."""
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))

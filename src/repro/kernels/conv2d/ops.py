@@ -1,12 +1,13 @@
-"""Jit'd public wrapper for the batched, strip-tiled stacked conv2d kernel.
+"""Public wrapper for the batched, strip-tiled stacked conv2d kernel — a
+thin registration against the ``repro.plan`` scheduling layer.
 
-``block_do`` (the paper's Delta_O) and ``block_h`` (the spatial strip
-height) default to the capacity chooser: the same VMEM budget rule that
-gives Delta_O <= 24/12 on Manticore (core/ccr.py) now also trades strip
-height against output-channel stacking — a taller strip means less halo
-re-streaming, a wider stack means fewer passes over the input volume
-(Eq. 7), and the chooser picks the pair minimizing modeled main-memory
-words among those whose working set fits VMEM.
+Blocking comes from :class:`repro.plan.ConvPlanner` (the same capacity rule
+that gives Delta_O <= 24/12 on Manticore in core/ccr.py): pass nothing and
+the planner trades strip height against output-channel stacking by modeled
+main-memory words; pass ``block_*`` to pin individual blocks; or pass a
+full explicit :class:`repro.plan.Schedule` to override the planner
+entirely (``schedule=``).  ``choose_schedule``/``choose_stack`` survive
+only as deprecated shims over the planner for old callers.
 """
 
 from __future__ import annotations
@@ -18,114 +19,54 @@ import jax.numpy as jnp
 
 from repro.core.machine import TPU_V5E, MachineModel
 from repro.kernels.conv2d.conv2d import conv2d_fused_pallas, conv2d_pallas  # noqa: F401
-from repro.kernels.conv2d.ref import conv2d_ref, maxpool_ref  # noqa: F401
+from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref  # noqa: F401
+from repro.plan import ConvPlanner, Schedule, pad_dim, pallas_op
+from repro.plan.planners import round_up as _round_up
 
 _LANE = 128
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+def conv_out_extent(extent: int, padding: int, F: int, stride: int) -> int:
+    """Output rows/cols of one spatial axis: (E + 2P - F)//S + 1 (Sec. 1.1).
+    The single source of this formula for wrapper, planner and layers."""
+    return (extent + 2 * padding - F) // stride + 1
 
 
-def _fits(
-    hb: int, bdo: int, W_O: int, W_in: int, F: int, S: int,
-    in_bytes: int, block_di: int, budget: int,
-) -> bool:
-    """Does the strip working set fit VMEM?  f32 accumulator strip plus the
-    double-buffered input-strip and filter streams (paper Sec. 2.2.2)."""
-    h_halo = (hb - 1) * S + F
-    stream = (h_halo * W_in * block_di + F * F * block_di * bdo) * in_bytes * 2
-    return stream + hb * W_O * bdo * 4 <= budget
+def _fused_pool(H_O: int, W_O: int, pool: int) -> int:
+    """Pool fuses into the kernel flush only when the output plane tiles
+    evenly; otherwise bias+ReLU stay fused and the (rare) ragged pool runs
+    as a tail op."""
+    return pool if (pool > 1 and H_O % pool == 0 and W_O % pool == 0) else 1
 
 
-def _schedule_words(
-    hb: int, bdo: int, H_O: int, W_O: int, W_in: int, F: int, S: int,
-    d_in: int, d_out: int, pool: int,
-) -> int:
-    """Modeled main-memory words of the strip-tiled schedule (the device-
-    level analogue of ccr.alg2_strip_traffic): every output stack re-streams
-    each strip's halo'd input rows once, filters stream once per
-    (stack, d_i), outputs store once."""
-    n_h = -(-H_O // hb)
-    n_stacks = -(-d_out // bdo)
-    h_halo = (hb - 1) * S + F
-    loads = n_stacks * n_h * h_halo * W_in * d_in + d_out * d_in * F * F
-    stores = (H_O // pool) * (W_O // pool) * d_out
-    return loads + stores
-
-
-def choose_schedule(
-    H_O: int, W_O: int, F: int, S: int, d_in: int, d_out: int,
-    in_bytes: int = 2, block_di: int = _LANE, pool: int = 1,
-    machine: MachineModel = TPU_V5E,
-) -> tuple[int, int]:
-    """Pick (block_h, block_do): the (strip height, Delta_O) pair whose
-    working set fits VMEM and whose modeled traffic is smallest.
-
-    Candidate strips are H_O and its power-of-two fractions (rounded up to
-    the pool granularity); for each, the largest lane-aligned output stack
-    that still fits is considered.  Ties break toward taller strips (less
-    halo re-streaming) — the paper's Delta_O argument, now two-dimensional.
-    """
-    budget = machine.usable_for_working_set(streams=2)
-    W_in = (W_O - 1) * S + F
-    dop = _round_up(d_out, _LANE)
-    cands = []
-    k = 1
-    while True:
-        hb = _round_up(-(-H_O // k), pool)
-        if not cands or hb < cands[-1]:
-            cands.append(hb)
-        if hb <= pool or k >= 64:
-            break
-        k *= 2
-    best = None
-    for hb in cands:
-        bdo = min(dop, 2048)
-        while bdo > _LANE and not _fits(
-            hb, bdo, W_O, W_in, F, S, in_bytes, block_di, budget
-        ):
-            bdo -= _LANE
-        if not _fits(hb, bdo, W_O, W_in, F, S, in_bytes, block_di, budget):
-            continue
-        words = _schedule_words(hb, bdo, H_O, W_O, W_in, F, S, d_in, d_out, pool)
-        if best is None or words < best[0]:
-            best = (words, hb, bdo)
-    if best is None:  # nothing fits the model; smallest legal tile anyway
-        return _round_up(min(8, H_O), pool), _LANE
-    return best[1], best[2]
-
-
-def choose_stack(
-    H_O: int, W_O: int, W_Ipad: int, F: int, d_out: int,
-    in_bytes: int = 2, block_di: int = _LANE,
-    machine: MachineModel = TPU_V5E,
-) -> int:
-    """Legacy Delta_O-only chooser (full-plane strip): largest output stack
-    whose f32 accumulator plus streamed blocks fit VMEM (Sec. 2.2.2)."""
-    budget = machine.usable_for_working_set(streams=2)
-    stream = (W_Ipad**2 * block_di + F * F * block_di * _LANE) * in_bytes * 2
-    bdo = _LANE
-    while True:
-        nxt = bdo + _LANE
-        if nxt > _round_up(d_out, _LANE) or nxt > 2048:
-            break
-        if stream + H_O * W_O * nxt * 4 > budget:
-            break
-        bdo = nxt
-    return bdo
+def _shape_args(
+    x, f, bias=None, *, stride=1, padding=0, relu=False, pool=1,
+    block_do=None, block_di=None, block_h=None,
+):
+    """Planner shapes from concrete operands (the op registry contract)."""
+    batched = x.ndim == 4
+    B = x.shape[0] if batched else 1
+    H, W, d_in = x.shape[-3], x.shape[-2], x.shape[-1]
+    F, d_out = f.shape[0], f.shape[3]
+    H_O = conv_out_extent(H, padding, F, stride)
+    W_O = conv_out_extent(W, padding, F, stride)
+    return dict(
+        H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
+        in_bytes=x.dtype.itemsize, block_di=block_di,
+        pool=_fused_pool(H_O, W_O, pool), batch=B,
+        padding=padding, H_I=H, W_I=W,
+        block_h=block_h, block_do=block_do,
+    )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "stride", "padding", "relu", "pool",
-        "block_do", "block_di", "block_h", "out_dtype", "interpret",
+        "stride", "padding", "relu", "pool", "schedule", "out_dtype", "interpret",
     ),
 )
 def _conv2d_impl(
-    x, f, bias, *, stride, padding, relu, pool,
-    block_do, block_di, block_h, out_dtype, interpret,
+    x, f, bias, *, stride, padding, relu, pool, schedule, out_dtype, interpret,
 ):
     batched = x.ndim == 4
     if not batched:
@@ -134,38 +75,28 @@ def _conv2d_impl(
     F = f.shape[0]
     d_out = f.shape[3]
     S = stride
-    H_O = (H + 2 * padding - F) // S + 1
-    W_O = (W + 2 * padding - F) // S + 1
+    H_O = conv_out_extent(H, padding, F, S)
+    W_O = conv_out_extent(W, padding, F, S)
     assert H_O > 0 and W_O > 0, "receptive field larger than padded input"
+    fused_pool = _fused_pool(H_O, W_O, pool)
 
-    # Pool fuses into the kernel flush only when the output plane tiles
-    # evenly; otherwise the kernel still fuses bias+ReLU and the (rare)
-    # ragged pool runs as a tail op.
-    fused_pool = pool if (pool > 1 and H_O % pool == 0 and W_O % pool == 0) else 1
-
-    bdi = block_di or min(_round_up(d_in, _LANE), 512)
-    if block_h is None or block_do is None:
-        hb_auto, bdo_auto = choose_schedule(
-            H_O, W_O, F, S, d_in, d_out,
-            in_bytes=x.dtype.itemsize, block_di=bdi, pool=fused_pool,
-        )
-        hb = block_h or hb_auto
-        bdo = block_do or bdo_auto
-    else:
-        hb, bdo = block_h, block_do
-    hb = _round_up(min(hb, _round_up(H_O, fused_pool)), fused_pool)
-    bdo = min(bdo, _round_up(d_out, _LANE))
+    # Blocking comes from the Schedule; default missing blocks and clamp
+    # defensively so a hand-built (possibly partial) schedule still runs
+    # (fidelity of the plan is the planner's job, legality is ours).
+    bdi = schedule.block("block_di", min(_round_up(d_in, _LANE), 512))
+    hb = _round_up(
+        min(schedule.block("block_h", H_O), _round_up(H_O, fused_pool)), fused_pool
+    )
+    bdo = min(schedule.block("block_do", _LANE), _round_up(d_out, _LANE))
 
     n_h = -(-H_O // hb)
     rows_needed = (n_h * hb - 1) * S + F
     pad_bottom = padding + max(0, rows_needed - (H + 2 * padding))
     dip, dop = _round_up(d_in, bdi), _round_up(d_out, bdo)
-    xp = jnp.pad(
-        x,
-        ((0, 0), (padding, pad_bottom), (padding, padding), (0, dip - d_in)),
-    )
-    fp = jnp.pad(f, ((0, 0), (0, 0), (0, dip - d_in), (0, dop - d_out)))
-    bp = jnp.pad(bias.astype(jnp.float32), (0, dop - d_out))[None]
+    xp = jnp.pad(x, ((0, 0), (padding, pad_bottom), (padding, padding), (0, 0)))
+    xp = pad_dim(xp, 3, dip)
+    fp = pad_dim(pad_dim(f, 2, dip), 3, dop)
+    bp = pad_dim(bias.astype(jnp.float32), 0, dop)[None]
 
     out = conv2d_fused_pallas(
         xp, fp, bp,
@@ -179,6 +110,27 @@ def _conv2d_impl(
     return out if batched else out[0]
 
 
+def _impl(
+    x, f, bias, *, schedule, out_dtype, interpret,
+    stride=1, padding=0, relu=False, pool=1,
+    block_do=None, block_di=None, block_h=None,  # consumed by the planner
+):
+    del block_do, block_di, block_h
+    return _conv2d_impl(
+        x, f, bias, stride=stride, padding=padding, relu=relu, pool=int(pool),
+        schedule=schedule, out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+conv2d_op = pallas_op(
+    "conv2d",
+    planner=ConvPlanner,
+    shape_args=_shape_args,
+    impl=_impl,
+    reference=conv2d_fused_ref,
+)
+
+
 def conv2d(
     x: jax.Array,
     f: jax.Array,
@@ -188,11 +140,13 @@ def conv2d(
     bias: jax.Array | None = None,
     relu: bool = False,
     pool: int | None = None,
+    schedule: Schedule | None = None,
     block_do: int | None = None,
     block_di: int | None = None,
     block_h: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
 ) -> jax.Array:
     """Convolutional layer forward (paper Algs 1/2) for arbitrary shapes.
 
@@ -201,17 +155,49 @@ def conv2d(
     any stride runs in-kernel.  ``bias`` ([D_O]), ``relu`` and ``pool``
     (2 = fused 2x2 max-pool) execute in the kernel's flush step on the
     VMEM-resident output strip — no HBM round-trip between the conv and
-    its epilogue.
+    its epilogue.  Blocking: ``schedule`` > ``block_*`` pins > planner.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    out_dtype = out_dtype or x.dtype
     d_out = f.shape[3]
     if bias is None:
         bias = jnp.zeros((d_out,), jnp.float32)
-    return _conv2d_impl(
+    return conv2d_op(
         x, f, bias,
+        schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or x.dtype,
         stride=stride, padding=padding, relu=relu, pool=int(pool or 1),
         block_do=block_do, block_di=block_di, block_h=block_h,
-        out_dtype=out_dtype, interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (pre-plan API); kernels obtain blocking via repro.plan.
+# ---------------------------------------------------------------------------
+
+
+def choose_schedule(
+    H_O: int, W_O: int, F: int, S: int, d_in: int, d_out: int,
+    in_bytes: int = 2, block_di: int = _LANE, pool: int = 1,
+    machine: MachineModel = TPU_V5E,
+) -> tuple[int, int]:
+    """Deprecated: use ``repro.plan.ConvPlanner``.  Returns the planner's
+    (block_h, block_do) for the given shapes."""
+    s = ConvPlanner(machine).plan(
+        H_O=H_O, W_O=W_O, F=F, S=S, d_in=d_in, d_out=d_out,
+        in_bytes=in_bytes, block_di=block_di, pool=pool,
+    )
+    return s.block("block_h"), s.block("block_do")
+
+
+def choose_stack(
+    H_O: int, W_O: int, W_Ipad: int, F: int, d_out: int,
+    in_bytes: int = 2, block_di: int = _LANE,
+    machine: MachineModel = TPU_V5E,
+) -> int:
+    """Deprecated: use ``repro.plan.ConvPlanner`` with a pinned full-plane
+    ``block_h`` (the legacy Delta_O-only rule, Sec. 2.2.2)."""
+    del W_Ipad  # implied by (H_O, W_O, F) at stride 1
+    s = ConvPlanner(machine).plan(
+        H_O=H_O, W_O=W_O, F=F, S=1, d_in=block_di, d_out=d_out,
+        in_bytes=in_bytes, block_di=block_di, block_h=H_O,
+    )
+    return s.block("block_do")

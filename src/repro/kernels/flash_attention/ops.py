@@ -1,47 +1,97 @@
-"""Jit'd public wrapper for the flash-attention kernel."""
+"""Public wrapper for the flash-attention kernel — a thin registration
+against the ``repro.plan`` scheduling layer.
+
+The block choice that used to live implicitly in this wrapper (hard 128
+defaults clamped to the rounded sequence) is now
+:class:`repro.plan.AttentionPlanner`: the q block + f32 accumulator is the
+VMEM-resident output stack, K/V stream through, and blocks halve until the
+working set fits the machine budget.
+"""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.machine import TPU_V5E, MachineModel
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401
+from repro.plan import AttentionPlanner, Schedule, pad_dim, pallas_op
+from repro.plan.planners import round_up as _round_up
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+def _shape_args(q, k, v, *, causal=True, window=None, scale=None,
+                block_q=None, block_kv=None):
+    del causal, window, scale
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    return dict(
+        seq_q=Sq, seq_kv=Skv, head_dim=D, n_q_heads=Hq, n_kv_heads=Hkv,
+        batch=B, in_bytes=q.dtype.itemsize, block_q=block_q, block_kv=block_kv,
+    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "scale", "block_q", "block_kv", "interpret"),
+    static_argnames=("causal", "window", "scale", "schedule", "out_dtype", "interpret"),
 )
-def flash_attention(
-    q: jax.Array, k: jax.Array, v: jax.Array,
-    *, causal: bool = True, window: int | None = None, scale: float | None = None,
-    block_q: int = 128, block_kv: int = 128, interpret: bool | None = None,
-) -> jax.Array:
-    """Blockwise attention. q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D].
-
-    Pads sequences to block multiples; GQA via Hkv | Hq head grouping.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _flash_attention_impl(
+    q, k, v, *, causal, window, scale, schedule, out_dtype, interpret,
+):
     B, Hq, Sq, D = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     scale = scale if scale is not None else D**-0.5
-    bq = min(block_q, _round_up(Sq, 8))
-    bkv = min(block_kv, _round_up(Skv, 8))
+    # Missing blocks in hand-built schedules default to the MXU sweet spot.
+    bq = min(schedule.block("block_q", 128), _round_up(Sq, 8))
+    bkv = min(schedule.block("block_kv", 128), _round_up(Skv, 8))
     Sqp, Skvp = _round_up(Sq, bq), _round_up(Skv, bkv)
 
-    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0))).reshape(B * Hq, Sqp, D)
-    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0))).reshape(B * Hkv, Skvp, D)
-    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0))).reshape(B * Hkv, Skvp, D)
+    qp = pad_dim(q, 2, Sqp).reshape(B * Hq, Sqp, D)
+    kp = pad_dim(k, 2, Skvp).reshape(B * Hkv, Skvp, D)
+    vp = pad_dim(v, 2, Skvp).reshape(B * Hkv, Skvp, D)
 
     out = flash_attention_pallas(
         qp, kp, vp, block_q=bq, block_kv=bkv, scale=scale,
         causal=causal, window=window, q_len=Sq, kv_len=Skv, interpret=interpret,
     )
-    return out.reshape(B, Hq, Sqp, D)[:, :, :Sq, :]
+    return out.reshape(B, Hq, Sqp, D)[:, :, :Sq, :].astype(out_dtype)
+
+
+def _impl(q, k, v, *, schedule, out_dtype, interpret,
+          causal=True, window=None, scale=None, block_q=None, block_kv=None):
+    del block_q, block_kv  # consumed by the planner
+    return _flash_attention_impl(
+        q, k, v, causal=causal, window=window, scale=scale,
+        schedule=schedule, out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+attention_op = pallas_op(
+    "flash_attention",
+    planner=AttentionPlanner,
+    shape_args=_shape_args,
+    impl=_impl,
+    reference=attention_ref,
+)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: int | None = None, scale: float | None = None,
+    schedule: Schedule | None = None,
+    block_q: int | None = None, block_kv: int | None = None,
+    out_dtype=None, interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """Blockwise attention. q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D].
+
+    Pads sequences to block multiples; GQA via Hkv | Hq head grouping.
+    Blocking: ``schedule`` > ``block_q``/``block_kv`` pins > planner.
+    """
+    return attention_op(
+        q, k, v, schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or q.dtype,
+        causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv,
+    )

@@ -1,2 +1,2 @@
-from repro.kernels.matmul.ops import fc_matmul, choose_blocks
+from repro.kernels.matmul.ops import choose_blocks, fc_matmul, matmul_op
 from repro.kernels.matmul.ref import fc_matmul_ref

@@ -1,8 +1,10 @@
-"""Jit'd public wrapper for the FC matmul kernel: padding, block choice.
+"""Public wrapper for the FC matmul kernel — a thin registration against
+the ``repro.plan`` scheduling layer.
 
-Block sizes are chosen by the *paper's* capacity argument (Sec. 3.1.2)
-against the TPU machine model: maximize the output stack (block_n, the
-Delta_O analogue) subject to the working set + double-buffers fitting VMEM.
+Blocks come from :class:`repro.plan.MatmulPlanner`: the paper's capacity
+argument (Sec. 3.1.2) maximizing the output stack (block_n, the Delta_O
+analogue) subject to the working set + double-buffers fitting local
+memory.  ``choose_blocks`` survives only as a deprecated shim.
 """
 
 from __future__ import annotations
@@ -10,16 +12,87 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.machine import TPU_V5E, MachineModel
 from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import fc_matmul_ref  # noqa: F401
+from repro.plan import MatmulPlanner, Schedule, pad_dim, pallas_op
+from repro.plan.planners import round_up as _round_up
 
-_LANE = 128  # MXU/VPU lane width: all blocks are multiples of 128
+_LANE = 128
 
 
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
+def _shape_args(x, w, *, block_m=None, block_n=None, block_k=None):
+    k, n = w.shape
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    return dict(m=m, n=n, k=k, in_bytes=x.dtype.itemsize,
+                block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "out_dtype", "interpret"))
+def _fc_matmul_impl(x, w, *, schedule, out_dtype, interpret):
+    lead = x.shape[:-1]
+    k, n = w.shape
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    # Missing blocks in hand-built schedules default to legal sizes.
+    bm = min(schedule.block("block_m", _LANE), _round_up(m, _LANE))
+    bn = schedule.block("block_n", _LANE)
+    bk = schedule.block("block_k", min(_round_up(k, _LANE), 512))
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    x2 = pad_dim(pad_dim(x2, 0, mp), 1, kp)
+    wp = pad_dim(pad_dim(w, 0, kp), 1, np_)
+    out = matmul_pallas(
+        x2, wp, block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :n].reshape(*lead, n)
+
+
+def _impl(x, w, *, schedule, out_dtype, interpret,
+          block_m=None, block_n=None, block_k=None):
+    del block_m, block_n, block_k  # consumed by the planner
+    return _fc_matmul_impl(
+        x, w, schedule=schedule, out_dtype=out_dtype, interpret=interpret
+    )
+
+
+matmul_op = pallas_op(
+    "matmul",
+    planner=MatmulPlanner,
+    shape_args=_shape_args,
+    impl=_impl,
+    reference=fc_matmul_ref,
+)
+
+
+def fc_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    schedule: Schedule | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """O = X @ W via the Alg 4/5 Pallas kernel; arbitrary shapes (padded).
+
+    ``x``: [..., K]; ``w``: [K, N].  Leading dims of ``x`` are flattened
+    into M (the batch dimension of the paper's FC layer).  Blocking:
+    ``schedule`` > ``block_*`` pins > planner.
+    """
+    return matmul_op(
+        x, w, schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or x.dtype,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    )
 
 
 def choose_blocks(
@@ -29,63 +102,7 @@ def choose_blocks(
     in_bytes: int = 2,
     machine: MachineModel = TPU_V5E,
 ) -> tuple[int, int, int]:
-    """Paper-style Delta_O chooser for matmul blocks.
-
-    Working set per grid step: x block (bm*bk), w block (bk*bn), f32
-    accumulator (bm*bn*4), double-buffered in/out streams.  We fix
-    bm, bk at MXU-friendly sizes and grow bn (the output stack) until the
-    budget is exhausted - the Alg 5 strategy verbatim.
-    """
-    bm = min(_round_up(m, _LANE), 512)
-    bk = min(_round_up(k, _LANE), 512)
-    budget = machine.usable_for_working_set(streams=2)
-    bn = _LANE
-    while True:
-        nxt = bn + _LANE
-        working = (bm * bk + bk * nxt) * in_bytes * 2 + bm * nxt * 4
-        if nxt > 2048 or nxt > _round_up(n, _LANE) or working > budget:
-            break
-        bn = nxt
-    return bm, min(bn, _round_up(n, _LANE)), bk
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
-)
-def fc_matmul(
-    x: jax.Array,
-    w: jax.Array,
-    *,
-    block_m: int | None = None,
-    block_n: int | None = None,
-    block_k: int | None = None,
-    out_dtype=None,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """O = X @ W via the Alg 4/5 Pallas kernel; arbitrary shapes (padded).
-
-    ``x``: [..., K]; ``w``: [K, N].  Leading dims of ``x`` are flattened
-    into M (the batch dimension of the paper's FC layer).
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    out_dtype = out_dtype or x.dtype
-    lead = x.shape[:-1]
-    k, n = w.shape
-    x2 = x.reshape(-1, k)
-    m = x2.shape[0]
-
-    bm, bn, bk = choose_blocks(m, n, k, in_bytes=x.dtype.itemsize)
-    bm = block_m or min(bm, _round_up(m, _LANE))
-    bn = block_n or bn
-    bk = block_k or bk
-
-    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
-    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
-    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
-    out = matmul_pallas(
-        x2, wp, block_m=bm, block_n=bn, block_k=bk,
-        out_dtype=out_dtype, interpret=interpret,
-    )
-    return out[:m, :n].reshape(*lead, n)
+    """Deprecated: use ``repro.plan.MatmulPlanner``.  Returns the planner's
+    (block_m, block_n, block_k)."""
+    s = MatmulPlanner(machine).plan(m=m, n=n, k=k, in_bytes=in_bytes)
+    return s.block("block_m"), s.block("block_n"), s.block("block_k")

@@ -8,16 +8,14 @@ initialization, and smoke tests/benches must keep seeing 1 device.
 
 from __future__ import annotations
 
-import jax
-
+from repro.core.shard_compat import make_auto_mesh
 from repro.runtime.parallel import ParallelCtx
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_auto_mesh(shape, axes)
 
 
 def make_ctx(mesh=None, *, multi_pod: bool = False) -> ParallelCtx:
@@ -28,5 +26,4 @@ def make_ctx(mesh=None, *, multi_pod: bool = False) -> ParallelCtx:
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for 8-virtual-device tests."""
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_auto_mesh(shape, axes)

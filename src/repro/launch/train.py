@@ -83,8 +83,9 @@ def main() -> None:
             f"mesh {args.mesh} needs {n_dev} devices, have {len(jax.devices())} "
             "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
         )
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    mesh = jax.make_mesh(shape, axes, axis_types=auto)
+    from repro.core.shard_compat import make_auto_mesh
+
+    mesh = make_auto_mesh(shape, axes)
     dp_axes = tuple(a for a in axes if a != "model")
     ctx = ParallelCtx(mesh=mesh, dp_axes=dp_axes, tp_axis="model")
     print(f"mesh {dict(mesh.shape)} | arch {cfg.name} | {tcfg.compute_dtype} compute")

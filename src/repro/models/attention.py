@@ -22,6 +22,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from repro.core.shard_compat import shard_map
 
 NEG = -1e30
 
@@ -162,7 +163,7 @@ def attention(
         return _attention_core(q_l, k_l, v_l, qpos_l, kpos_l, causal, wnd_l,
                                scale, chunk_q, chunk_kv)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=parallel.mesh,
         in_specs=(P(blead, tp, None, None), P(blead, None, None, None),
                   P(blead, None, None, None), P(tp), P(None), P()),

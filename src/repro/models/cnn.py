@@ -46,8 +46,14 @@ def param_defs(cfg: ModelConfig) -> dict:
 
 
 def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
-            use_kernels: bool = True, **_):
-    """images: [B, IMG, IMG, 3] -> logits [B, classes]."""
+            use_kernels: bool = True, schedules: dict | None = None, **_):
+    """images: [B, IMG, IMG, 3] -> logits [B, classes].
+
+    ``schedules`` optionally maps stage names ("conv0", ..., "fc1", "fc2")
+    to explicit :class:`repro.plan.Schedule` objects (e.g. from
+    :func:`plan_forward`), overriding the per-stage capacity planner.
+    """
+    sched = schedules or {}
     x = images
     for i in range(cfg.n_layers):
         f, b = params[f"conv{i}"], params[f"bias{i}"]
@@ -55,7 +61,7 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
             # One batched kernel launch per stage: conv + bias + ReLU + 2x2
             # max-pool all fused in the flush — no HBM round-trip between
             # the conv and its epilogue.
-            x = conv_block(x, f, b, 1, F // 2, 2, "strip")
+            x = conv_block(x, f, b, 1, F // 2, 2, "strip", sched.get(f"conv{i}"))
         else:
             from repro.kernels.conv2d.ref import conv2d_fused_ref
 
@@ -63,7 +69,34 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
                                  relu=True, pool=2)
     x = x.reshape(x.shape[0], -1)
     if use_kernels:
-        x = jax.nn.relu(fc_layer(x, params["fc1"]) + params["fc1_b"])
-        return fc_layer(x, params["fc2"]) + params["fc2_b"]
+        x = jax.nn.relu(fc_layer(x, params["fc1"], sched.get("fc1")) + params["fc1_b"])
+        return fc_layer(x, params["fc2"], sched.get("fc2")) + params["fc2_b"]
     x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
     return x @ params["fc2"] + params["fc2_b"]
+
+
+def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
+                 machine=None) -> dict:
+    """Plan every kernel launch of :func:`forward` without running it.
+
+    Returns {stage name: Schedule} — pass back in via ``schedules=`` to pin
+    the blocking, or sum ``.modeled_words`` to connect the whole model's
+    planned traffic to analysis/roofline.py (repro.plan.to_roofline).
+    """
+    from repro.core import conv_layer as cl
+    from repro.core import fc_layer as fl
+
+    out = {}
+    H = IMG
+    for i, (ci, co) in enumerate(_stage_channels(cfg)):
+        out[f"conv{i}"] = cl.plan(
+            (batch, H, H, ci), (F, F, ci, co), stride=1, padding=F // 2,
+            pool=2, in_bytes=in_bytes, machine=machine,
+        )
+        H //= 2
+    flat = H * H * cfg.d_model * (2 ** (cfg.n_layers - 1))
+    out["fc1"] = fl.plan((batch, flat), (flat, cfg.d_ff),
+                         in_bytes=in_bytes, machine=machine)
+    out["fc2"] = fl.plan((batch, cfg.d_ff), (cfg.d_ff, cfg.vocab),
+                         in_bytes=in_bytes, machine=machine)
+    return out

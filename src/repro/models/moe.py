@@ -33,6 +33,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as ll
 from repro.models import transformer as tf
 from repro.models.module import ParamDef
+from repro.core.shard_compat import shard_map
 
 param_count_note = "MoE params = dense attn + E * expert FFN"
 
@@ -140,7 +141,7 @@ def apply_moe_ffn(mp, x, cfg: ModelConfig, parallel=None):
         y = jax.lax.psum(y, tp)
         return y.reshape(Bl, Sl, d)
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None), wspec, wspec, dspec),
         out_specs=P(dp, None, None),

@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.core.shard_compat import shard_map
 
 
 def compress_decompress(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -50,7 +51,7 @@ def int8_psum(x: jax.Array, mesh, axis: str):
         s = jax.lax.psum(q.astype(jnp.int32), axis)  # int payload on the wire
         return s.astype(jnp.float32) * scale
 
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=P(*([None] * x.ndim)), out_specs=P(*([None] * x.ndim)),
         check_vma=False,
     )(x)

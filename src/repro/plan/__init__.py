@@ -1,0 +1,48 @@
+"""repro.plan — the unified scheduling API behind every Pallas kernel.
+
+One `Schedule` dataclass (grid, blocks, halo, modeled HBM words, VMEM
+working set), one `Planner` protocol with per-op implementations that
+encode the paper's capacity argument against a `MachineModel` (MANTICORE
+or TPU_V5E), and one `pallas_op` registry that owns the wrapper
+boilerplate.  See DESIGN.md Sec. 3.
+"""
+
+from repro.plan.planners import (
+    PLANNERS,
+    AttentionPlanner,
+    ConvPlanner,
+    MatmulPlanner,
+    Planner,
+    conv_strip_words,
+    planner_for,
+)
+from repro.plan.registry import (
+    PallasOp,
+    default_interpret,
+    get_op,
+    pad_dim,
+    pallas_op,
+    registered_ops,
+    with_reference_vjp,
+)
+from repro.plan.schedule import Blocks, Schedule, to_roofline
+
+__all__ = [
+    "AttentionPlanner",
+    "Blocks",
+    "ConvPlanner",
+    "MatmulPlanner",
+    "PLANNERS",
+    "PallasOp",
+    "Planner",
+    "Schedule",
+    "conv_strip_words",
+    "default_interpret",
+    "get_op",
+    "pad_dim",
+    "pallas_op",
+    "planner_for",
+    "registered_ops",
+    "to_roofline",
+    "with_reference_vjp",
+]

@@ -1,0 +1,387 @@
+"""Per-op planners: the paper's capacity argument, written once.
+
+Every planner implements the same contract (:class:`Planner`): given layer
+shapes and a :class:`~repro.core.machine.MachineModel`, emit the
+:class:`~repro.plan.schedule.Schedule` whose working set fits the machine's
+local memory (after the DMA-stream reservation, paper Sec. 2.2.2) and whose
+modeled main-memory words are smallest.  The same code path therefore
+yields the paper's Manticore quotes — ConvPlanner on MANTICORE at the
+full-plane strip picks Delta_O = alg2_max_stack (24 sp / 12 dp on the
+running example), MatmulPlanner picks block_n = alg45_max_stack (768/384)
+— and the Pallas BlockSpec blocks on TPU_V5E.
+
+Traffic models are kernel-faithful: the conv model is exactly
+``ccr.alg2_strip_traffic`` generalized to rectangular planes, pooling and
+batch (filters re-stream once per strip — the filter BlockSpec's index
+changes whenever the strip index does — and zero-padding rows are free);
+the matmul model degenerates to Alg 5's Eqs. (12-13) when block_m covers
+the batch.  Explicit ``block_*`` overrides are honored verbatim (clamped
+to legal ranges) so a schedule can also *describe* a hand-picked blocking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Protocol, runtime_checkable
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.plan.schedule import Schedule
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _align_down(x: int, m: int) -> int:
+    return x // m * m
+
+
+@runtime_checkable
+class Planner(Protocol):
+    """The planner contract: shapes in, one best Schedule out."""
+
+    op: ClassVar[str]
+    machine: MachineModel
+
+    def plan(self, **shape) -> Schedule:  # pragma: no cover - protocol
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Conv (Algs 1/2 + strip tiling)
+# ---------------------------------------------------------------------------
+
+
+def conv_strip_words(
+    *, H_O: int, W_O: int, H_I: int, W_I: int, F: int, S: int, P: int,
+    d_in: int, d_out: int, block_h: int, block_do: int,
+    pool: int = 1, batch: int = 1,
+) -> tuple[int, int]:
+    """(loads, stores) of the strip-tiled stacked schedule — the
+    rectangular/pooled/batched generalization of ccr.alg2_strip_traffic.
+
+    Each of the ceil(H_O/block_h) strips re-streams its halo'd input rows
+    once per output stack (zero-padding rows cost nothing) and its filter
+    slabs once per (strip, d_i, d_o); pooled outputs store once.  On a
+    square plane with pool=1 and batch=1 this equals
+    ``ccr.alg2_strip_traffic(shape, block_do, block_h).main_loads/stores``
+    exactly.
+    """
+    n_stacks = -(-d_out // block_do)
+    n_strips = -(-H_O // block_h)
+    h_in = (block_h - 1) * S + F
+    rows = 0
+    for h0 in range(0, H_O, block_h):
+        lo = h0 * S - P
+        rows += max(0, min(lo + h_in, H_I) - max(lo, 0))
+    loads = n_stacks * d_in * rows * W_I + n_strips * d_out * d_in * F * F
+    stores = (H_O // pool) * (W_O // pool) * d_out
+    return batch * loads, batch * stores
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlanner:
+    """Picks (block_h, block_do, block_di) for the strip-tiled conv kernel.
+
+    Candidate strips are H_O and its power-of-two fractions (rounded up to
+    the pool granularity); for each, the largest lane-aligned output stack
+    whose working set fits is considered; the (strip, stack) pair with the
+    fewest modeled words wins, ties toward taller strips (less halo
+    re-streaming) — the paper's Delta_O argument, two-dimensional.
+    """
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "conv2d"
+
+    _BDO_CAP: ClassVar[int] = 2048
+    _BDI_CAP: ClassVar[int] = 512
+
+    def default_block_di(self, d_in: int) -> int:
+        lane = self.machine.lane
+        if lane == 1:
+            return 1  # the paper's per-slice `for d_i` loop
+        return min(round_up(d_in, lane), self._BDI_CAP)
+
+    def _stream_bytes(self, hb: int, bdo: int, bdi: int, W_stream: int,
+                      F: int, S: int, in_bytes: int) -> int:
+        """Double-buffered input-strip + filter streams, when the machine
+        holds streamed blocks in the budget (Pallas does; Manticore's ride
+        the reserved DMA buffers)."""
+        if not self.machine.charge_stream_blocks:
+            return 0
+        h_halo = (hb - 1) * S + F
+        return (h_halo * W_stream * bdi + F * F * bdi * bdo) * in_bytes * 2
+
+    def _vmem_bytes(self, hb: int, bdo: int, bdi: int, W_O: int, W_stream: int,
+                    F: int, S: int, in_bytes: int) -> int:
+        acc_word = max(4, in_bytes)  # f32 accumulator (dp on dp machines)
+        return (self._stream_bytes(hb, bdo, bdi, W_stream, F, S, in_bytes)
+                + hb * W_O * bdo * acc_word)
+
+    def _max_stack(self, hb: int, bdi: int, W_O: int, W_stream: int,
+                   F: int, S: int, in_bytes: int, d_out: int) -> int:
+        """Largest lane-aligned block_do fitting the budget at strip hb
+        (0 when not even one lane of output slices fits)."""
+        m = self.machine
+        lane = m.lane
+        budget = m.usable_for_working_set(streams=2)
+        acc_word = max(4, in_bytes)
+        fixed = per_bdo_stream = 0
+        if m.charge_stream_blocks:
+            h_halo = (hb - 1) * S + F
+            fixed = h_halo * W_stream * bdi * in_bytes * 2
+            per_bdo_stream = F * F * bdi * in_bytes * 2
+        per_bdo = per_bdo_stream + hb * W_O * acc_word
+        bdo = _align_down((budget - fixed) // per_bdo, lane) if budget > fixed else 0
+        return min(bdo, self._BDO_CAP, round_up(d_out, lane))
+
+    def plan(
+        self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int, d_out: int,
+        in_bytes: int = 2, block_di: int | None = None, pool: int = 1,
+        batch: int = 1, padding: int | None = None,
+        H_I: int | None = None, W_I: int | None = None,
+        block_h: int | None = None, block_do: int | None = None,
+    ) -> Schedule:
+        m = self.machine
+        lane = m.lane
+        # Real input extents for the traffic model; callers that only know
+        # the output extent get the exact-cover derivation (no padding).
+        P = 0 if padding is None else padding
+        H_I = H_I if H_I is not None else (H_O - 1) * S + F - 2 * P
+        W_I = W_I if W_I is not None else (W_O - 1) * S + F - 2 * P
+        W_stream = (W_O - 1) * S + F  # streamed (padded) strip width
+        bdi = block_di or self.default_block_di(d_in)
+
+        def words(hb: int, bdo: int) -> int:
+            loads, stores = conv_strip_words(
+                H_O=H_O, W_O=W_O, H_I=H_I, W_I=W_I, F=F, S=S, P=P,
+                d_in=d_in, d_out=d_out, block_h=hb, block_do=bdo,
+                pool=pool, batch=batch,
+            )
+            return loads + stores
+
+        def clamp_h(hb: int) -> int:
+            return round_up(min(hb, round_up(H_O, pool)), pool)
+
+        if block_h is not None and block_do is not None:
+            hb, bdo = block_h, block_do
+        else:
+            # Candidate strips: H_O and its power-of-two fractions down to
+            # the pool granularity, tallest first — or just the pinned
+            # strip when block_h is given (e.g. full-plane Alg 2, where the
+            # search at that strip *is* the paper's Delta_O rule).  The
+            # floor matters: a plane much larger than the budget only fits
+            # at single-digit strips, and stopping early would strand the
+            # plan on a non-fitting fallback.
+            if block_h is not None:
+                cands = [clamp_h(block_h)]
+            else:
+                cands = []
+                k = 1
+                while True:
+                    hb = round_up(-(-H_O // k), pool)
+                    if not cands or hb < cands[-1]:
+                        cands.append(hb)
+                    if hb <= pool:
+                        break
+                    k *= 2
+            budget = m.usable_for_working_set(streams=2)
+            best = None
+            for hb in cands:
+                if block_do is not None:
+                    bdo = min(block_do, round_up(d_out, lane))
+                    if self._vmem_bytes(hb, bdo, bdi, W_O, W_stream, F, S,
+                                        in_bytes) > budget:
+                        continue  # pinned stack doesn't fit at this strip
+                else:
+                    bdo = self._max_stack(hb, bdi, W_O, W_stream, F, S,
+                                          in_bytes, d_out)
+                    if bdo < max(lane, 1):
+                        continue  # nothing fits at this strip height
+                w = words(hb, bdo)
+                if best is None or w < best[0]:
+                    best = (w, hb, bdo)
+            if best is None:  # nothing fits the model; smallest legal tile
+                hb = block_h if block_h is not None else round_up(min(8, H_O), pool)
+                bdo = block_do if block_do is not None else lane
+            else:
+                _, hb, bdo = best
+        # Clamp to legal ranges (explicit overrides may exceed them).
+        hb = clamp_h(hb)
+        bdo = min(bdo, round_up(d_out, lane))
+
+        loads, stores = conv_strip_words(
+            H_O=H_O, W_O=W_O, H_I=H_I, W_I=W_I, F=F, S=S, P=P,
+            d_in=d_in, d_out=d_out, block_h=hb, block_do=bdo,
+            pool=pool, batch=batch,
+        )
+        n_h = -(-H_O // hb)
+        grid = (batch, n_h, round_up(d_out, bdo) // bdo, round_up(d_in, bdi) // bdi)
+        return Schedule(
+            op=self.op,
+            grid=grid,
+            blocks=(("block_di", bdi), ("block_do", bdo), ("block_h", hb)),
+            halo=max(0, F - S),
+            macs=batch * H_O * W_O * F * F * d_in * d_out,
+            loads=loads,
+            stores=stores,
+            vmem_bytes=self._vmem_bytes(hb, bdo, bdi, W_O, W_stream, F, S, in_bytes),
+            machine=m.name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Matmul (Algs 4/5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulPlanner:
+    """Picks (block_m, block_n, block_k) for the FC matmul kernel.
+
+    block_m/block_k sit at MXU-friendly sizes; block_n — the Delta_O
+    output stack — grows until the working set (x block + w block streams,
+    f32 accumulator) exhausts the budget: the Alg 5 strategy verbatim.  On
+    MANTICORE (streams uncharged, lane 1) the same rule is exactly
+    ``ccr.alg45_max_stack``: block_n <= 768 (sp) / 384 (dp) at batch 32.
+    """
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "matmul"
+
+    _BN_CAP: ClassVar[int] = 2048
+    _BMK_CAP: ClassVar[int] = 512
+
+    def _vmem_bytes(self, bm: int, bn: int, bk: int, in_bytes: int) -> int:
+        acc_word = max(4, in_bytes)
+        stream = (bm * bk + bk * bn) * in_bytes * 2 if self.machine.charge_stream_blocks else 0
+        return stream + bm * bn * acc_word
+
+    def plan(
+        self, *, m: int, n: int, k: int, in_bytes: int = 2,
+        block_m: int | None = None, block_n: int | None = None,
+        block_k: int | None = None,
+    ) -> Schedule:
+        mm = self.machine
+        lane = mm.lane
+        budget = mm.usable_for_working_set(streams=2)
+        bm = block_m or min(round_up(m, lane), self._BMK_CAP)
+        bk = block_k or min(round_up(k, lane), self._BMK_CAP)
+        if block_n is not None:
+            bn = block_n
+        else:
+            acc_word = max(4, in_bytes)
+            fixed = per_bn = 0
+            if mm.charge_stream_blocks:
+                fixed = bm * bk * in_bytes * 2
+                per_bn = bk * in_bytes * 2
+            per_bn += bm * acc_word
+            bn = _align_down(max(0, budget - fixed) // per_bn, lane)
+            bn = max(lane, min(bn, self._BN_CAP, round_up(n, lane)))
+
+        mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+        # Alg 5 device analogue: x re-streams once per output stack
+        # (n-block), w once per m-block, outputs store once — with a single
+        # m-block this is Eqs. (12)-(13) on the padded problem.
+        loads = (np_ // bn) * mp * kp + (mp // bm) * kp * np_
+        stores = mp * np_
+        return Schedule(
+            op=self.op,
+            grid=(mp // bm, np_ // bn, kp // bk),
+            blocks=(("block_k", bk), ("block_m", bm), ("block_n", bn)),
+            halo=0,
+            macs=mp * np_ * kp,
+            loads=loads,
+            stores=stores,
+            vmem_bytes=self._vmem_bytes(bm, bn, bk, in_bytes),
+            machine=mm.name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (beyond-paper, same methodology)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPlanner:
+    """Picks (block_q, block_kv) for the flash-attention kernel.
+
+    The q block with its f32 accumulator and (m, l) statistics is the
+    VMEM-resident output stack; K/V stream through like the paper's input
+    depth slices.  Blocks start at the MXU sweet spot (128, clamped to the
+    sequence rounded up to the 8-row sublane) and halve until the working
+    set fits — the capacity rule, downward.  Explicit blocks are honored
+    (clamped to the rounded sequence, as the old wrapper did).
+    """
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "flash_attention"
+
+    _SUBLANE: ClassVar[int] = 8
+    _CAP: ClassVar[int] = 128
+
+    def _vmem_bytes(self, bq: int, bkv: int, head_dim: int, in_bytes: int) -> int:
+        stream = 0
+        if self.machine.charge_stream_blocks:
+            # q block + double-buffered k and v blocks.
+            stream = (bq * head_dim + 2 * bkv * head_dim) * in_bytes * 2
+        return stream + bq * head_dim * 4 + 2 * bq * 4  # acc + (m, l)
+
+    def plan(
+        self, *, seq_q: int, seq_kv: int, head_dim: int,
+        n_q_heads: int = 1, n_kv_heads: int = 1, batch: int = 1,
+        in_bytes: int = 4, block_q: int | None = None,
+        block_kv: int | None = None,
+    ) -> Schedule:
+        sub = self._SUBLANE
+        auto = block_q is None and block_kv is None
+        bq = min(block_q or self._CAP, round_up(seq_q, sub))
+        bkv = min(block_kv or self._CAP, round_up(seq_kv, sub))
+        if auto:
+            budget = self.machine.usable_for_working_set(streams=2)
+            while (self._vmem_bytes(bq, bkv, head_dim, in_bytes) > budget
+                   and max(bq, bkv) > sub):
+                if bkv >= bq:
+                    bkv = max(sub, round_up(bkv // 2, sub))
+                else:
+                    bq = max(sub, round_up(bq // 2, sub))
+
+        sqp, skvp = round_up(seq_q, bq), round_up(seq_kv, bkv)
+        bhq = batch * n_q_heads
+        n_qb = sqp // bq
+        # q loads once per row-block; every q block of every *query* head
+        # streams its KV head's whole K and V (the kernel's kv BlockSpec
+        # cycles kb per (h, qb) step, so GQA sharing saves no HBM traffic —
+        # the grid re-fetches per query head).  Causal/window skips reduce
+        # this — the model is the upper bound the planner minimizes.
+        loads = bhq * sqp * head_dim + bhq * n_qb * skvp * head_dim * 2
+        stores = bhq * sqp * head_dim
+        return Schedule(
+            op=self.op,
+            grid=(bhq, n_qb, skvp // bkv),
+            blocks=(("block_kv", bkv), ("block_q", bq)),
+            halo=0,
+            macs=bhq * sqp * skvp * head_dim * 2,
+            loads=loads,
+            stores=stores,
+            vmem_bytes=self._vmem_bytes(bq, bkv, head_dim, in_bytes),
+            machine=self.machine.name,
+        )
+
+
+PLANNERS: dict[str, type] = {
+    ConvPlanner.op: ConvPlanner,
+    MatmulPlanner.op: MatmulPlanner,
+    AttentionPlanner.op: AttentionPlanner,
+}
+
+
+def planner_for(op: str, machine: MachineModel = TPU_V5E) -> Planner:
+    """The registered planner for an op name, bound to a machine."""
+    try:
+        cls = PLANNERS[op]
+    except KeyError:
+        raise KeyError(f"no planner registered for op {op!r}; "
+                       f"known: {sorted(PLANNERS)}") from None
+    return cls(machine)

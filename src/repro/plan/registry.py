@@ -1,0 +1,178 @@
+"""`pallas_op`: the registry that puts one Schedule/Planner layer behind
+every Pallas kernel in the repo.
+
+Each kernel package registers itself once — a planner, a shape extractor,
+and a schedule-driven implementation — and inherits the boilerplate the
+three ``ops.py`` files used to duplicate in diverging dialects:
+
+  * interpret-mode fallback (``interpret=None`` -> interpret off-TPU),
+  * output-dtype promotion (``out_dtype=None`` -> first operand's dtype),
+  * schedule resolution (explicit ``Schedule`` beats the planner),
+  * lane padding/unpadding helpers (:func:`pad_dim`),
+  * reference-VJP ``custom_vjp`` wiring (:func:`with_reference_vjp`).
+
+Ops resolve lazily by name (:func:`get_op`), so ``repro.plan`` never
+imports kernel code at module load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.plan.planners import Planner, planner_for, round_up
+from repro.plan.schedule import Schedule
+
+# ---------------------------------------------------------------------------
+# Shared boilerplate
+# ---------------------------------------------------------------------------
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Pallas interpret-mode fallback: run interpreted anywhere but on TPU."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def pad_dim(x: jax.Array, axis: int, size: int) -> jax.Array:
+    """Zero-pad one axis up to ``size`` (no-op when already there)."""
+    have = x.shape[axis]
+    if have == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - have)
+    return jnp.pad(x, widths)
+
+
+def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = ()):
+    """``custom_vjp`` wiring shared by every layer module: forward runs the
+    Pallas kernel, backward differentiates the XLA reference composition.
+
+    ``nondiff_argnums`` must be the *trailing* positional arguments of
+    ``kernel_fn``; ``ref_fn`` takes the same positional arguments.
+    """
+    for i, j in zip(nondiff_argnums, nondiff_argnums[1:]):
+        assert j == i + 1, "nondiff_argnums must be contiguous and trailing"
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=nondiff_argnums)
+    def op(*args):
+        return kernel_fn(*args)
+
+    def fwd(*args):
+        assert not nondiff_argnums or nondiff_argnums[-1] == len(args) - 1, (
+            "nondiff_argnums must be the trailing arguments of kernel_fn: "
+            f"got {nondiff_argnums} for {len(args)} args"
+        )
+        diff = tuple(a for i, a in enumerate(args) if i not in nondiff_argnums)
+        return kernel_fn(*args), diff
+
+    def bwd(*call):
+        n = len(nondiff_argnums)
+        nondiff, (res, g) = call[:n], call[n:]
+        _, vjp = jax.vjp(lambda *d: ref_fn(*d, *nondiff), *res)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+# ---------------------------------------------------------------------------
+# The op registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasOp:
+    """One registered kernel: planner + shape extraction + implementation.
+
+    ``shape_args(*arrays, **params)`` maps concrete operands to the
+    planner's keyword shapes; ``impl(*arrays, schedule=, out_dtype=,
+    interpret=, **params)`` runs the (jit'd) kernel from a Schedule.
+    """
+
+    name: str
+    planner: type  # Planner class, constructed per machine
+    shape_args: Callable[..., dict[str, Any]]
+    impl: Callable[..., jax.Array]
+    reference: Callable[..., jax.Array] | None = None
+
+    def planner_for(self, machine: MachineModel = TPU_V5E) -> Planner:
+        return self.planner(machine)
+
+    def plan(self, *arrays, machine: MachineModel = TPU_V5E, **params) -> Schedule:
+        """Plan from concrete operands (shapes/dtypes only are read).
+        Cached per (planner, shapes): eager call loops re-plan for free."""
+        shape = self.shape_args(*arrays, **params)
+        return _cached_plan(self.planner(machine), tuple(sorted(shape.items())))
+
+    def __call__(
+        self, *arrays, schedule: Schedule | None = None,
+        machine: MachineModel = TPU_V5E, interpret: bool | None = None,
+        out_dtype=None, **params,
+    ) -> jax.Array:
+        interpret = default_interpret(interpret)
+        out_dtype = out_dtype or arrays[0].dtype
+        if schedule is None:
+            schedule = self.plan(*arrays, machine=machine, **params)
+        return self.impl(
+            *arrays, schedule=schedule, out_dtype=out_dtype,
+            interpret=interpret, **params,
+        )
+
+
+@functools.lru_cache(maxsize=4096)
+def _cached_plan(planner: Planner, shape_items: tuple) -> Schedule:
+    """Planners are frozen dataclasses and shape kwargs are hashable ints,
+    so identical (planner, shapes) pairs return the memoized Schedule."""
+    return planner.plan(**dict(shape_items))
+
+
+_OPS: dict[str, PallasOp] = {}
+
+# Ops register at import of their kernel package; get_op() imports lazily so
+# `repro.plan` stays importable without (and before) any kernel code.
+_PROVIDERS = {
+    "conv2d": "repro.kernels.conv2d.ops",
+    "matmul": "repro.kernels.matmul.ops",
+    "flash_attention": "repro.kernels.flash_attention.ops",
+}
+
+
+def pallas_op(
+    name: str, *, planner: type, shape_args: Callable, impl: Callable,
+    reference: Callable | None = None,
+) -> PallasOp:
+    """Register a kernel behind the plan layer (returns the op handle)."""
+    op = PallasOp(name=name, planner=planner, shape_args=shape_args,
+                  impl=impl, reference=reference)
+    _OPS[name] = op
+    return op
+
+
+def get_op(name: str) -> PallasOp:
+    """Look up a registered op, importing its provider module if needed."""
+    if name not in _OPS and name in _PROVIDERS:
+        importlib.import_module(_PROVIDERS[name])
+    try:
+        return _OPS[name]
+    except KeyError:
+        raise KeyError(f"unknown pallas op {name!r}; known: "
+                       f"{sorted(set(_OPS) | set(_PROVIDERS))}") from None
+
+
+def registered_ops() -> tuple[str, ...]:
+    """All op names the registry can resolve."""
+    return tuple(sorted(set(_OPS) | set(_PROVIDERS)))
+
+
+__all__ = [
+    "PallasOp", "default_interpret", "get_op", "pad_dim", "pallas_op",
+    "planner_for", "registered_ops", "round_up", "with_reference_vjp",
+]

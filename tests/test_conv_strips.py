@@ -188,15 +188,21 @@ class TestStripTrafficModel:
         assert t.main_words > 0 and t.macs == ccr.conv_macs(self.S)
 
     def test_choose_schedule_fits_and_trades(self):
-        """The TPU chooser returns a working set that fits VMEM and prefers
+        """The TPU planner returns a working set that fits VMEM and prefers
         full-plane strips when they fit."""
-        from repro.kernels.conv2d.ops import _fits
         from repro.core.machine import TPU_V5E
+        from repro.plan import ConvPlanner
 
-        hb, bdo = choose_schedule(32, 32, 3, 1, 128, 256, in_bytes=4, block_di=128)
+        sched = ConvPlanner(TPU_V5E).plan(
+            H_O=32, W_O=32, F=3, S=1, d_in=128, d_out=256,
+            in_bytes=4, block_di=128,
+        )
+        hb, bdo = sched.block("block_h"), sched.block("block_do")
+        assert (hb, bdo) == choose_schedule(  # deprecated shim == planner
+            32, 32, 3, 1, 128, 256, in_bytes=4, block_di=128
+        )
         assert hb % 1 == 0 and bdo % 128 == 0
-        assert _fits(hb, bdo, 32, 34, 3, 1, 4, 128,
-                     TPU_V5E.usable_for_working_set(2))
+        assert sched.fits(TPU_V5E)
         # a plane too large for VMEM at any stack forces a partial strip
         hb2, _ = choose_schedule(4096, 4096, 3, 1, 128, 256, in_bytes=4,
                                  block_di=512)

@@ -26,8 +26,8 @@ def run_sub(script: str) -> str:
 PRELUDE = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.shard_compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 """
 
 

@@ -33,8 +33,8 @@ from repro.runtime import train as tr, serve as sv
 from repro.runtime.parallel import ParallelCtx, cache_specs, batch_spec
 from repro.analysis import roofline as rl
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.shard_compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 ctx = ParallelCtx(mesh=mesh, dp_axes=("data",), tp_axis="model")
 cfg = dataclasses.replace(smoke_config("qwen3-1.7b"), n_layers=2)
 tcfg = TrainConfig(param_dtype="float32", remat="block", loss_chunks=2)
@@ -89,8 +89,8 @@ from repro.optim import adamw
 from repro.runtime import train as tr
 from repro.runtime.parallel import ParallelCtx
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.shard_compat import make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 ctx = ParallelCtx(mesh=mesh, dp_axes=("data",), tp_axis="model")
 cfg = dataclasses.replace(smoke_config("qwen3-moe-235b-a22b"), n_layers=2)
 tcfg = TrainConfig(param_dtype="float32", remat="none", loss_chunks=2)
