@@ -10,6 +10,11 @@
   fc_matmul    - planner-scheduled FC matmul vs a naive block_n=128 blocking
                  (parity + wall time + modeled words; BENCH_fc.json holds
                  the committed baseline)
+  conv_bwd     - planned backward conv kernels (dgrad strip conv + wgrad
+                 accumulation) vs jax.grad of the XLA reference (parity +
+                 wall time + modeled words; BENCH_bwd.json baseline)
+  fc_bwd       - planned dX/dW matmul kernels vs jax.grad of the XLA
+                 reference (same; shares BENCH_bwd.json)
   smoke        - one tiny planner+kernel case per registered op, interpret
                  mode, parity-asserted (scripts/tier1.sh --bench-smoke)
   schedule_sim - closed forms vs executed-schedule word counts
@@ -57,6 +62,21 @@ def _write_baseline(rows, filename, force=False):
         with open(path, "w") as fh:
             json.dump({n: {"us_per_call": us, "derived": d} for n, us, d in rows},
                       fh, indent=2)
+
+
+def _merge_baseline(rows, filename, force=False):
+    """Like :func:`_write_baseline` but merges into an existing file —
+    several sections (conv_bwd + fc_bwd) share one committed baseline."""
+    path = os.path.join(os.path.dirname(__file__), "..", filename)
+    data = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            data = json.load(fh)
+    for n, us, d in rows:
+        if force or _FORCE_BASELINE or n not in data:
+            data[n] = {"us_per_call": us, "derived": d}
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2)
 
 
 def bench_conv_ccr():
@@ -261,6 +281,92 @@ def bench_fc_matmul(write_baseline: bool = False):
     return rows
 
 
+def bench_conv_bwd(write_baseline: bool = False):
+    """Planned backward conv kernels vs jax.grad of the XLA reference.
+
+    planned path : jax.grad through conv_block runs the conv2d_dgrad strip
+                   kernel (flipped-filter transposed conv) and the
+                   conv2d_wgrad accumulation kernel, each on its own
+                   planner Schedule.
+    ref path     : jax.grad of the conv2d_fused_ref composition (XLA).
+    CPU interpret-mode timing — relative ordering, not TPU perf.
+    """
+    from repro.core.conv_layer import conv_block, plan_bwd
+    from repro.kernels.conv2d.ref import conv2d_fused_ref
+
+    B, H, DI, DO, F, P = 4, 12, 8, 16, 3, 1
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((B, H, H, DI)), jnp.float32)
+    f = jnp.asarray(rng.standard_normal((F, F, DI, DO)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((DO,)), jnp.float32)
+    bwd = plan_bwd(x.shape, f.shape, stride=1, padding=P)
+
+    planned = jax.jit(jax.grad(
+        lambda x, f, b: conv_block(x, f, b, 1, P, 2, "strip").sum(),
+        argnums=(0, 1, 2)))
+    ref = jax.jit(jax.grad(
+        lambda x, f, b: conv2d_fused_ref(x, f, b, stride=1, padding=P,
+                                         relu=True, pool=2).sum(),
+        argnums=(0, 1, 2)))
+
+    gp, gr = planned(x, f, b), ref(x, f, b)
+    err = max(float(jnp.abs(a - r).max()) for a, r in zip(gp, gr))
+    assert err < 1e-4, f"planned conv backward diverges ({err})"
+
+    t_ref = _time(lambda: ref(x, f, b))
+    t_plan = _time(lambda: planned(x, f, b))
+    words = {k: s.modeled_words for k, s in bwd.items()}
+    rows = [
+        ("conv_bwd_ref_xla", t_ref, f"B={B};jax.grad-of-fused-ref"),
+        ("conv_bwd_planned", t_plan,
+         f"speedup_vs_ref={t_ref / t_plan:.2f}x;maxerr={err:.2e};"
+         f"dgrad_words={words['dgrad']};wgrad_words={words['wgrad']};"
+         f"recompute_words={words['recompute']}"),
+    ]
+    _merge_baseline(rows, "BENCH_bwd.json", write_baseline)
+    return rows
+
+
+def bench_fc_bwd(write_baseline: bool = False):
+    """Planned dX/dW matmul kernels vs jax.grad of the XLA reference.
+
+    The dX kernel contracts dY and W along N (no W^T materialization);
+    the dW kernel streams the batch dimension through a resident [K-tile,
+    N-tile] accumulator.  CPU interpret-mode timing.
+    """
+    from repro.core.fc_layer import fc_layer, plan_bwd
+    from repro.kernels.matmul.ref import fc_matmul_ref
+
+    M, K, N = 64, 512, 1024
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)) * 0.05, jnp.float32)
+    bwd = plan_bwd(x.shape, w.shape)
+
+    planned = jax.jit(jax.grad(
+        lambda x, w: (fc_layer(x, w) ** 2).sum(), argnums=(0, 1)))
+    ref = jax.jit(jax.grad(
+        lambda x, w: (fc_matmul_ref(x, w) ** 2).sum(), argnums=(0, 1)))
+
+    gp, gr = planned(x, w), ref(x, w)
+    err = max(float(jnp.abs(a - r).max() / jnp.abs(r).max())
+              for a, r in zip(gp, gr))
+    assert err < 1e-4, f"planned fc backward diverges ({err})"
+
+    t_ref = _time(lambda: ref(x, w))
+    t_plan = _time(lambda: planned(x, w))
+    rows = [
+        ("fc_bwd_ref_xla", t_ref, f"M={M};K={K};N={N};jax.grad-of-ref"),
+        ("fc_bwd_planned", t_plan,
+         f"speedup_vs_ref={t_ref / t_plan:.2f}x;maxrelerr={err:.2e};"
+         f"dx_words={bwd['dx'].modeled_words};"
+         f"dx_stack={bwd['dx'].block('block_k')};"
+         f"dw_words={bwd['dw'].modeled_words}"),
+    ]
+    _merge_baseline(rows, "BENCH_bwd.json", write_baseline)
+    return rows
+
+
 def bench_smoke():
     """One tiny planner+kernel case per registered op, parity-asserted
     against the op's registered XLA reference (the tier1.sh --bench-smoke
@@ -290,9 +396,19 @@ def bench_smoke():
     case("conv2d", (x, f, b), dict(padding=1),
          kw=dict(padding=1, block_do=2, block_di=2, block_h=4))
 
+    dy = jnp.asarray(rng.standard_normal((8, 8, 4)), jnp.float32)
+    case("conv2d_dgrad", (dy, f), dict(padding=1),
+         kw=dict(padding=1, block_do=2, block_di=2, block_h=4))
+    case("conv2d_wgrad", (x, dy), dict(F=3, padding=1),
+         kw=dict(F=3, padding=1, block_do=2, block_di=2, block_h=4))
+
     xm = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
     wm = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
     case("matmul", (xm, wm), {}, kw=dict(block_m=8, block_n=8, block_k=8))
+
+    gm = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    case("matmul_dx", (gm, wm), {}, kw=dict(block_m=8, block_n=8, block_k=8))
+    case("matmul_dw", (xm, gm), {}, kw=dict(block_m=8, block_n=8, block_k=8))
 
     q = jnp.asarray(rng.standard_normal((1, 2, 24, 16)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((1, 2, 24, 16)), jnp.float32)
@@ -300,7 +416,10 @@ def bench_smoke():
     case("flash_attention", (q, k, v), dict(causal=True),
          kw=dict(causal=True, block_q=8, block_kv=8), tol=2e-3)
 
-    assert set(registered_ops()) == {"conv2d", "matmul", "flash_attention"}
+    assert set(registered_ops()) == {
+        "conv2d", "conv2d_dgrad", "conv2d_wgrad",
+        "matmul", "matmul_dx", "matmul_dw", "flash_attention",
+    }
     return rows
 
 
@@ -331,6 +450,8 @@ SECTIONS = {
     "kernels": bench_kernels,
     "conv_fused": bench_conv_fused,
     "fc_matmul": bench_fc_matmul,
+    "conv_bwd": bench_conv_bwd,
+    "fc_bwd": bench_fc_bwd,
     "smoke": bench_smoke,
     "roofline": bench_roofline,
 }

@@ -68,3 +68,19 @@ print("fc_layer (Alg 4/5 kernel) matches reference:", o.shape)
 print("machine balance points (flop/B): manticore(sp)=",
       MANTICORE.peak_flops / MANTICORE.main_mem_bw,
       " tpu_v5e(bf16)=", TPU_V5E.peak_flops / TPU_V5E.main_mem_bw)
+
+# --- 4. Training: jax.grad runs *planned* backward kernels ----------------
+# dgrad (flipped-filter strip conv), wgrad (on-cluster dW accumulation) and
+# the FC dX/dW kernels are pallas_ops with their own planners; pin them via
+# bwd_schedules= or let the planner choose (DESIGN.md Sec. 4).
+import jax
+
+from repro.core.conv_layer import plan_bwd
+
+bwd = plan_bwd(x.shape, f.shape, stride=1, padding=1)
+gx, gf = jax.grad(lambda x, f: (conv_layer(x, f, 1, 1, "strip", None, bwd) ** 2).sum(),
+                  argnums=(0, 1))(x, f)
+print("planned backward grads:", gx.shape, gf.shape,
+      " dgrad words=", bwd["dgrad"].modeled_words,
+      " wgrad words=", bwd["wgrad"].modeled_words,
+      " both fit:", bwd["dgrad"].fits(TPU_V5E) and bwd["wgrad"].fits(TPU_V5E))

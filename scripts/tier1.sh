@@ -1,17 +1,36 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
-# Usage: scripts/tier1.sh [--bench-smoke] [extra pytest args...]
+# Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [extra pytest args...]
 #   --bench-smoke  additionally run one tiny planner+kernel case per
 #                  registered op in interpret mode (benchmarks/run.py smoke)
+#   --grad-smoke   run ONLY the gradient parity harness's fast subset
+#                  (tests/test_backward_plan.py TestGradSmoke) and exit
+# The default invocation runs the grad-smoke subset first, so backward
+# regressions fail fast before the full suite spins up.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 BENCH_SMOKE=0
-if [[ "${1:-}" == "--bench-smoke" ]]; then
-  BENCH_SMOKE=1
+GRAD_SMOKE_ONLY=0
+while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" ]]; do
+  case "$1" in
+    --bench-smoke) BENCH_SMOKE=1 ;;
+    --grad-smoke) GRAD_SMOKE_ONLY=1 ;;
+  esac
   shift
+done
+
+run_grad_smoke() {
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    tests/test_backward_plan.py -k TestGradSmoke
+}
+
+if [[ "$GRAD_SMOKE_ONLY" == 1 ]]; then
+  run_grad_smoke
+  exit 0
 fi
 
+run_grad_smoke
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
 if [[ "$BENCH_SMOKE" == 1 ]]; then

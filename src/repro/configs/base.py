@@ -88,6 +88,10 @@ class TrainConfig:
     seed: int = 0
     loss_chunks: int = 8  # chunked cross-entropy over tokens
     grad_compression: str = "none"  # none | int8_ef
+    # cnn family: run the planned Pallas kernels (forward AND the planned
+    # dgrad/wgrad/dX/dW backward) in the train step instead of the XLA
+    # reference path.  Slow in interpret mode off-TPU; the hot path on TPU.
+    planned_kernels: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -184,6 +184,50 @@ def alg2_strip_traffic(s: ConvShape, stack: int, h_block: int) -> Traffic:
     return Traffic(macs=conv_macs(s), main_loads=loads, main_stores=stores)
 
 
+def conv_dgrad_shape(s: ConvShape) -> ConvShape:
+    """The backward-data (dgrad) geometry of a conv layer: dX is a
+    *stride-1* conv over the S-dilated gradient with spatially flipped
+    filters and swapped channel roles (DESIGN.md Sec. 4) — itself a
+    ConvShape, so every Alg 1-3 closed form and capacity rule applies to
+    the backward pass unchanged.  Requires P <= F-1 (the transposed
+    padding F-1-P stays non-negative)."""
+    if s.P > s.F - 1:
+        raise ValueError(f"dgrad needs P <= F-1, got P={s.P} for F={s.F}")
+    return ConvShape(W_I=(s.W_O - 1) * s.S + 1, D_I=s.D_O, D_O=s.D_I,
+                     F=s.F, S=1, P=s.F - 1 - s.P)
+
+
+def conv_dgrad_traffic(s: ConvShape, stack: int, h_block: int,
+                       batch: int = 1) -> Traffic:
+    """Strip-tiled dgrad traffic: alg2_strip_traffic on the transposed
+    geometry (gradient slices stream, Delta_I output slices of dX stack),
+    once per batch element."""
+    t = alg2_strip_traffic(conv_dgrad_shape(s), stack, h_block)
+    return Traffic(macs=batch * t.macs, main_loads=batch * t.main_loads,
+                   main_stores=batch * t.main_stores)
+
+
+def conv_wgrad_traffic(s: ConvShape, stack: int, h_block: int,
+                       di_block: int = 1, batch: int = 1) -> Traffic:
+    """Backward-filter (wgrad) traffic of the strip-tiled schedule: the
+    F^2 x Delta_I x Delta_O filter-gradient accumulator is the resident
+    stack.  Each of the ceil(D_O/stack) gradient stacks re-streams every
+    halo'd input strip (zero-padding rows free, as in Eq. 7); each of the
+    ceil(D_I/di_block) input blocks re-streams the whole gradient plane;
+    dW stores exactly once, accumulated over batch and strips on-cluster.
+    MACs are counted over the *output* extent (each dW MAC pairs one
+    gradient element with one input element) — equal to conv_macs when
+    W_O = W_I."""
+    n_do = math.ceil(s.D_O / stack)
+    n_di = math.ceil(s.D_I / di_block)
+    H_O = s.W_O  # square images throughout the paper
+    input_words = sum(r_in * s.W_I for r_in, _ in _strip_rows(s, h_block))
+    loads = batch * (n_do * s.D_I * input_words + n_di * s.D_O * H_O * s.W_O)
+    stores = s.F**2 * s.D_I * s.D_O
+    macs = batch * H_O * s.W_O * s.F**2 * s.D_I * s.D_O
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
 def alg3_traffic(s: ConvShape, stack: int, group: int = 16) -> Traffic:
     """Alg 3: Alg 2 + ring reuse of input slices within an L2 quadrant
     (Sec. 2.3.3, Eqs. 9-10).  ``group`` is the quadrant size (16 clusters).

@@ -15,18 +15,32 @@ explicit :class:`repro.plan.Schedule` (``schedule=``) overrides the
 planner entirely.  Forward runs the batched strip-tiled Pallas kernel
 (interpret mode off-TPU); :func:`conv_block` additionally fuses the layer
 epilogue (bias + ReLU + optional 2x2 max-pool) into the kernel's flush
-step.  Backward is the XLA reference VJP (``repro.plan.with_reference_vjp``),
-so CNNs built from these layers train.  Traffic accounting for any
-strategy comes from core/ccr.py.
+step.
+
+Backward is *also* planned (DESIGN.md Sec. 4): ``jax.grad`` runs the
+``conv2d_dgrad`` strip kernel (flipped-filter transposed conv) for dX and
+the ``conv2d_wgrad`` accumulation kernel for dF, each scheduled by its own
+planner — override with ``bwd_schedules={"dgrad": ..., "wgrad": ...,
+"recompute": ...}`` (see :func:`plan_bwd`).  When a backward schedule does
+not fit the machine the layer falls back to the XLA reference VJP, which
+also remains the parity oracle (tests/test_backward_plan.py).  Traffic
+accounting for any strategy comes from core/ccr.py.
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+
 from repro.core import ccr
-from repro.core.machine import MANTICORE
+from repro.core.machine import MANTICORE, TPU_V5E, machine_named
+from repro.kernels.conv2d.bwd import conv2d_dgrad, conv2d_wgrad
 from repro.kernels.conv2d.ops import conv2d
-from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref
-from repro.plan import Schedule, with_reference_vjp
+from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref
+from repro.plan import Schedule, freeze_schedules, get_op, with_reference_vjp
+
+# The machine backward schedules are planned (and fit-checked) against.
+_BWD_MACHINE = TPU_V5E
 
 
 def _strategy_blocks(strategy, x, f, stride, padding):
@@ -40,7 +54,37 @@ def _strategy_blocks(strategy, x, f, stride, padding):
     return block_do, block_h
 
 
-def _conv_layer_kernel(x, f, stride, padding, strategy, schedule):
+def _planned_conv_backward(x, f, dy, stride, padding, sd):
+    """dX/dW through the planned Pallas backward kernels; ``sd`` maps
+    {"dgrad"/"wgrad": Schedule} overrides.  Returns None when a schedule
+    does not fit the machine (or the geometry is out of the dgrad
+    contract) — the caller then falls back to the XLA reference VJP."""
+    F = f.shape[0]
+    if padding > F - 1:
+        return None
+    out_hw = (x.shape[-3], x.shape[-2])
+    s_dg = sd.get("dgrad")
+    if s_dg is None:
+        s_dg = get_op("conv2d_dgrad").plan(
+            dy, f, stride=stride, padding=padding, out_hw=out_hw)
+    s_wg = sd.get("wgrad")
+    if s_wg is None:
+        s_wg = get_op("conv2d_wgrad").plan(
+            x, dy, F=F, stride=stride, padding=padding)
+    # Each schedule is fit-checked against the machine it was planned for
+    # (a user-pinned Manticore schedule must not pass a TPU-sized gate).
+    if not (s_dg.fits(machine_named(s_dg.machine, _BWD_MACHINE))
+            and s_wg.fits(machine_named(s_wg.machine, _BWD_MACHINE))):
+        return None
+    dx = conv2d_dgrad(dy, f, stride=stride, padding=padding, out_hw=out_hw,
+                      schedule=s_dg, out_dtype=jnp.float32)
+    dw = conv2d_wgrad(x, dy, F=F, stride=stride, padding=padding,
+                      schedule=s_wg, out_dtype=jnp.float32)
+    return dx.astype(x.dtype), dw.astype(f.dtype)
+
+
+def _conv_layer_kernel(x, f, stride, padding, strategy, schedule, bwd_schedules):
+    del bwd_schedules  # consumed by the backward pass
     block_do, block_h = _strategy_blocks(strategy, x, f, stride, padding)
     return conv2d(
         x, f, stride=stride, padding=padding, schedule=schedule,
@@ -48,23 +92,42 @@ def _conv_layer_kernel(x, f, stride, padding, strategy, schedule):
     )
 
 
-def _conv_layer_ref(x, f, stride, padding, strategy, schedule):
-    del strategy, schedule  # schedule knobs never change numerics
+def _conv_layer_ref(x, f, stride, padding, strategy, schedule, bwd_schedules):
+    del strategy, schedule, bwd_schedules  # schedule knobs never change numerics
     return conv2d_ref(x, f, stride=stride, padding=padding)
 
 
+def _conv_layer_bwd(x, f, g, stride, padding, strategy, schedule, bwd_schedules):
+    del strategy, schedule
+    planned = _planned_conv_backward(
+        x, f, g.astype(jnp.float32), stride, padding, dict(bwd_schedules or ()))
+    if planned is None:  # XLA reference VJP fallback
+        _, vjp = jax.vjp(
+            lambda xx, ff: conv2d_ref(xx, ff, stride=stride, padding=padding),
+            x, f)
+        return vjp(g)
+    return planned
+
+
 _conv_layer_vjp = with_reference_vjp(
-    _conv_layer_kernel, _conv_layer_ref, nondiff_argnums=(2, 3, 4, 5)
+    _conv_layer_kernel, _conv_layer_ref, nondiff_argnums=(2, 3, 4, 5, 6),
+    bwd_fn=_conv_layer_bwd,
 )
 
 
 def conv_layer(x, f, stride=1, padding=0, strategy="alg2",
-               schedule: Schedule | None = None):
-    """x: [B, H, W, D_I] or [H, W, D_I]; f: [F, F, D_I, D_O]."""
-    return _conv_layer_vjp(x, f, stride, padding, strategy, schedule)
+               schedule: Schedule | None = None, bwd_schedules=None):
+    """x: [B, H, W, D_I] or [H, W, D_I]; f: [F, F, D_I, D_O].
+
+    ``bwd_schedules`` optionally maps {"dgrad"/"wgrad": Schedule} to pin
+    the planned backward kernels' blocking (see :func:`plan_bwd`)."""
+    return _conv_layer_vjp(x, f, stride, padding, strategy, schedule,
+                           freeze_schedules(bwd_schedules))
 
 
-def _conv_block_kernel(x, f, b, stride, padding, pool, strategy, schedule):
+def _conv_block_kernel(x, f, b, stride, padding, pool, strategy, schedule,
+                       bwd_schedules):
+    del bwd_schedules  # consumed by the backward pass
     block_do, block_h = _strategy_blocks(strategy, x, f, stride, padding)
     return conv2d(
         x, f, bias=b, stride=stride, padding=padding,
@@ -73,29 +136,69 @@ def _conv_block_kernel(x, f, b, stride, padding, pool, strategy, schedule):
     )
 
 
-def _conv_block_ref(x, f, b, stride, padding, pool, strategy, schedule):
-    del strategy, schedule
+def _conv_block_ref(x, f, b, stride, padding, pool, strategy, schedule,
+                    bwd_schedules):
+    del strategy, schedule, bwd_schedules
     return conv2d_fused_ref(
         x, f, b, stride=stride, padding=padding, relu=True, pool=pool
     )
 
 
+def _conv_block_bwd(x, f, b, g, stride, padding, pool, strategy, schedule,
+                    bwd_schedules):
+    del strategy, schedule
+    sd = dict(bwd_schedules or ())
+    # Rematerialize the pre-pool activation with the planned forward kernel
+    # (the fused forward never stores it), backprop the elementwise/pool
+    # epilogue in XLA, then run the planned transposed kernels on dY.  A
+    # pinned recompute Schedule gets the same fit gate as dgrad/wgrad: if
+    # it overflows its machine, drop it and let the planner re-plan a
+    # fitting blocking instead of launching a known-oversized kernel.
+    recompute = sd.get("recompute")
+    if recompute is not None and not recompute.fits(
+            machine_named(recompute.machine, _BWD_MACHINE)):
+        recompute = None
+    y0 = conv2d(x, f, bias=b, stride=stride, padding=padding, relu=False,
+                pool=1, schedule=recompute, out_dtype=jnp.float32)
+
+    def _epilogue(y):
+        y = jnp.maximum(y, 0.0)
+        return maxpool_ref(y, pool) if pool > 1 else y
+
+    _, evjp = jax.vjp(_epilogue, y0)
+    dy, = evjp(g.astype(jnp.float32))
+    db = dy.sum(tuple(range(dy.ndim - 1))).astype(b.dtype)
+    planned = _planned_conv_backward(x, f, dy, stride, padding, sd)
+    if planned is None:  # XLA reference VJP fallback for the conv itself
+        _, vjp = jax.vjp(
+            lambda xx, ff: conv2d_ref(xx, ff, stride=stride, padding=padding,
+                                      out_dtype=jnp.float32), x, f)
+        dx, dw = vjp(dy)
+        dx, dw = dx.astype(x.dtype), dw.astype(f.dtype)
+    else:
+        dx, dw = planned
+    return dx, dw, db
+
+
 _conv_block_vjp = with_reference_vjp(
-    _conv_block_kernel, _conv_block_ref, nondiff_argnums=(3, 4, 5, 6, 7)
+    _conv_block_kernel, _conv_block_ref, nondiff_argnums=(3, 4, 5, 6, 7, 8),
+    bwd_fn=_conv_block_bwd,
 )
 
 
 def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip",
-               schedule: Schedule | None = None):
+               schedule: Schedule | None = None, bwd_schedules=None):
     """Fused conv + bias + ReLU (+ optional ``pool x pool`` max-pool).
 
     The whole epilogue runs in the Pallas kernel's flush step on the
     VMEM-resident output strip — the activation never round-trips HBM
     between the conv and the pool.  ``x``: [B, H, W, D_I] or [H, W, D_I];
     ``f``: [F, F, D_I, D_O]; ``b``: [D_O].  An explicit ``schedule``
-    overrides the strategy's planner constraints.
+    overrides the strategy's planner constraints; ``bwd_schedules``
+    ({"dgrad"/"wgrad"/"recompute": Schedule}) pins the planned backward.
     """
-    return _conv_block_vjp(x, f, b, stride, padding, pool, strategy, schedule)
+    return _conv_block_vjp(x, f, b, stride, padding, pool, strategy, schedule,
+                           freeze_schedules(bwd_schedules))
 
 
 def plan(
@@ -124,6 +227,43 @@ def plan(
         in_bytes=in_bytes, pool=fused, batch=B, padding=padding,
         H_I=H, W_I=W, block_do=block_do, block_h=block_h,
     )
+
+
+def plan_bwd(
+    x_shape, f_shape, *, stride=1, padding=0, in_bytes=4, machine=None,
+) -> dict[str, Schedule]:
+    """Backward-pass Schedules for this layer's shapes: the dgrad and
+    wgrad kernels ``jax.grad`` will run, plus the pre-epilogue recompute
+    conv of :func:`conv_block`.  Pass (a subset of) the result back via
+    ``bwd_schedules=`` to pin the blocking; sum ``.modeled_words`` to
+    model the layer's training-step traffic.  Geometries outside the
+    dgrad kernel's contract (padding > F-1, where the layer trains via
+    the XLA fallback) return only the plannable subset — no "dgrad" key.
+    """
+    from repro.kernels.conv2d.ops import conv_out_extent
+    from repro.plan import ConvDgradPlanner, ConvPlanner, ConvWgradPlanner
+
+    machine = machine or _BWD_MACHINE
+    batched = len(x_shape) == 4
+    B = x_shape[0] if batched else 1
+    H, W, d_in = x_shape[-3], x_shape[-2], x_shape[-1]
+    F, d_out = f_shape[0], f_shape[3]
+    H_O = conv_out_extent(H, padding, F, stride)
+    W_O = conv_out_extent(W, padding, F, stride)
+    out = {
+        "wgrad": ConvWgradPlanner(machine).plan(
+            H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
+            in_bytes=in_bytes, batch=B, padding=padding, H_I=H, W_I=W),
+        "recompute": ConvPlanner(machine).plan(
+            H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
+            in_bytes=in_bytes, pool=1, batch=B, padding=padding,
+            H_I=H, W_I=W),
+    }
+    if padding <= F - 1:
+        out["dgrad"] = ConvDgradPlanner(machine).plan(
+            H_O=H_O, W_O=W_O, F=F, S=stride, P=padding, d_in=d_in,
+            d_out=d_out, in_bytes=in_bytes, batch=B, H_I=H, W_I=W)
+    return out
 
 
 def traffic(

@@ -5,37 +5,69 @@ accumulator = the private partial output).  Distributed ("alg4_sharded"):
 the input-depth dimension is sharded over a mesh axis and each device's
 private partial output is combined by one psum — the paper's tree
 reduction, lowered to the ICI collective.
+
+Backward is planned too (DESIGN.md Sec. 4): ``jax.grad`` runs the
+``matmul_dx`` kernel (dX = dY @ W^T, contraction on N, no W^T in HBM) and
+the ``matmul_dw`` kernel (dW = X^T @ dY, batch streams as the
+contraction), each scheduled by its own planner — override with
+``bwd_schedules={"dx": ..., "dw": ...}`` (see :func:`plan_bwd`); the XLA
+reference VJP remains the fallback when a schedule does not fit and the
+parity oracle in tests.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ccr
-from repro.core.machine import MANTICORE
+from repro.core.machine import MANTICORE, TPU_V5E, machine_named
+from repro.kernels.matmul.bwd import matmul_dw, matmul_dx
 from repro.kernels.matmul.ops import fc_matmul
 from repro.kernels.matmul.ref import fc_matmul_ref
-from repro.plan import Schedule, with_reference_vjp
+from repro.plan import Schedule, freeze_schedules, get_op, with_reference_vjp
 from repro.core.shard_compat import shard_map
 
+# The machine backward schedules are planned (and fit-checked) against.
+_BWD_MACHINE = TPU_V5E
 
-def _fc_kernel(x, w, schedule):
+
+def _fc_kernel(x, w, schedule, bwd_schedules):
+    del bwd_schedules  # consumed by the backward pass
     return fc_matmul(x, w, schedule=schedule)
 
 
-def _fc_ref(x, w, schedule):
-    del schedule  # blocking never changes numerics
+def _fc_ref(x, w, schedule, bwd_schedules):
+    del schedule, bwd_schedules  # blocking never changes numerics
     return fc_matmul_ref(x, w)
 
 
-_fc_layer_vjp = with_reference_vjp(_fc_kernel, _fc_ref, nondiff_argnums=(2,))
+def _fc_bwd(x, w, g, schedule, bwd_schedules):
+    del schedule
+    sd = dict(bwd_schedules or ())
+    s_dx = sd.get("dx") or get_op("matmul_dx").plan(g, w)
+    s_dw = sd.get("dw") or get_op("matmul_dw").plan(x, g)
+    # Fit-check each schedule against the machine it was planned for.
+    if not (s_dx.fits(machine_named(s_dx.machine, _BWD_MACHINE))
+            and s_dw.fits(machine_named(s_dw.machine, _BWD_MACHINE))):
+        _, vjp = jax.vjp(fc_matmul_ref, x, w)  # XLA reference fallback
+        return vjp(g)
+    dx = matmul_dx(g, w, schedule=s_dx, out_dtype=jnp.float32).astype(x.dtype)
+    dw = matmul_dw(x, g, schedule=s_dw, out_dtype=jnp.float32).astype(w.dtype)
+    return dx, dw
 
 
-def fc_layer(x, w, schedule: Schedule | None = None):
+_fc_layer_vjp = with_reference_vjp(_fc_kernel, _fc_ref, nondiff_argnums=(2, 3),
+                                   bwd_fn=_fc_bwd)
+
+
+def fc_layer(x, w, schedule: Schedule | None = None, bwd_schedules=None):
     """x: [..., K]; w: [K, D_O].  Forward = Pallas Alg 4/5 kernel; the
-    MatmulPlanner picks blocks unless an explicit ``schedule`` is given."""
-    return _fc_layer_vjp(x, w, schedule)
+    MatmulPlanner picks blocks unless an explicit ``schedule`` is given.
+    ``bwd_schedules`` ({"dx"/"dw": Schedule}) pins the planned backward
+    kernels' blocking (see :func:`plan_bwd`)."""
+    return _fc_layer_vjp(x, w, schedule, freeze_schedules(bwd_schedules))
 
 
 def plan(x_shape, w_shape, *, in_bytes=4, machine=None) -> Schedule:
@@ -48,6 +80,23 @@ def plan(x_shape, w_shape, *, in_bytes=4, machine=None) -> Schedule:
         m *= d
     k, n = w_shape
     return MatmulPlanner(machine or TPU_V5E).plan(m=m, n=n, k=k, in_bytes=in_bytes)
+
+
+def plan_bwd(x_shape, w_shape, *, in_bytes=4, machine=None) -> dict[str, Schedule]:
+    """Backward-pass Schedules for this layer's shapes: the dX and dW
+    kernels ``jax.grad`` will run.  Pass back via ``bwd_schedules=`` to
+    pin the blocking."""
+    from repro.plan import MatmulDwPlanner, MatmulDxPlanner
+
+    machine = machine or _BWD_MACHINE
+    m = 1
+    for d in x_shape[:-1]:
+        m *= d
+    k, n = w_shape
+    return {
+        "dx": MatmulDxPlanner(machine).plan(m=m, n=n, k=k, in_bytes=in_bytes),
+        "dw": MatmulDwPlanner(machine).plan(m=m, n=n, k=k, in_bytes=in_bytes),
+    }
 
 
 def fc_layer_sharded(x, w, mesh, axis: str = "model"):

@@ -86,6 +86,15 @@ TPU_V5E = MachineModel(
     charge_stream_blocks=True,  # Pallas double-buffers whole blocks in VMEM
 )
 
+MACHINES = {m.name: m for m in (MANTICORE, TPU_V5E)}
+
+
+def machine_named(name: str, default: MachineModel = TPU_V5E) -> MachineModel:
+    """The registered MachineModel for a Schedule's ``machine`` name
+    (falls back to ``default`` for unregistered names)."""
+    return MACHINES.get(name, default)
+
+
 WORD_BYTES = {"sp": 4, "dp": 8, "bf16": 2, "f32": 4, "f64": 8}
 
 

@@ -105,6 +105,107 @@ def simulate_alg3(s: ConvShape, stack: int, group: int = 16) -> Traffic:
     return Traffic(macs=macs, main_loads=loads, main_stores=stores, intercluster=inter)
 
 
+def simulate_conv_dgrad(s: ConvShape, stack: int, h_block: int,
+                        batch: int = 1) -> Traffic:
+    """Walk the dgrad schedule: the strip-tiled Alg 2 loop nest over the
+    transposed geometry (ccr.conv_dgrad_shape — S-dilated gradient in,
+    flipped channel-swapped filters, Delta_I output stacking), executed
+    once per batch element."""
+    from repro.core.ccr import conv_dgrad_shape
+
+    sT = conv_dgrad_shape(s)
+    loads = stores = macs = 0
+    for _b in range(batch):
+        t = simulate_alg2_strip(sT, stack, h_block)
+        loads += t.main_loads
+        stores += t.main_stores
+        macs += t.macs
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
+def simulate_conv_wgrad(s: ConvShape, stack: int, h_block: int,
+                        di_block: int = 1, batch: int = 1) -> Traffic:
+    """Walk the wgrad kernel's grid (d_i-block, d_o-stack, batch, strip):
+    every step streams the halo'd input strip (zero-padding rows free) and
+    the gradient strip; the F^2 x Delta_I x Delta_O accumulator stays
+    resident across the whole (batch, strip) sweep and flushes exactly
+    once at the end."""
+    H_O = s.W_O  # square images throughout the paper
+    h_in = (h_block - 1) * s.S + s.F
+    loads = macs = 0
+    for di0 in range(0, s.D_I, di_block):
+        ndi = min(di_block, s.D_I - di0)
+        for do0 in range(0, s.D_O, stack):
+            ndo = min(stack, s.D_O - do0)
+            for _b in range(batch):
+                for h0 in range(0, H_O, h_block):
+                    lo = h0 * s.S - s.P
+                    rows_in = max(0, min(lo + h_in, s.W_I) - max(lo, 0))
+                    rows_out = min(h_block, H_O - h0)
+                    loads += rows_in * s.W_I * ndi   # DmaLoad input strip
+                    loads += rows_out * s.W_O * ndo  # DmaLoad gradient strip
+                    macs += rows_out * s.W_O * s.F**2 * ndi * ndo
+    stores = s.F**2 * s.D_I * s.D_O  # single DmaStore of accumulated dW
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
+def simulate_matmul_blocks(m: int, n: int, k: int,
+                           bm: int, bn: int, bk: int) -> Traffic:
+    """Walk the blocked-matmul grid (i, j, kk) exactly as the kernel's
+    BlockSpecs fetch: an x block (bm x bk) and a w block (bk x bn) per
+    step, one (bm x bn) store per (i, j); the walk is over the padded
+    problem, as on the device.  The dX kernel is this walk with roles
+    (m, n, k) -> (m, k, n); the dW kernel with (k, n, m)."""
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    loads = stores = macs = 0
+    for _i in range(mp // bm):
+        for _j in range(np_ // bn):
+            for _kk in range(kp // bk):
+                loads += bm * bk + bk * bn
+                macs += bm * bn * bk
+            stores += bm * bn
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
+def simulate_attention_blocks(
+    *, seq_q: int, seq_kv: int, head_dim: int, block_q: int, block_kv: int,
+    n_q_heads: int = 1, n_kv_heads: int = 1, batch: int = 1,
+    causal: bool = False, window: int | None = None,
+) -> Traffic:
+    """Walk the flash-attention grid (batch*head, q block, kv block)
+    applying the kernel's block-level `run` predicate verbatim: causal
+    skips KV blocks entirely in the future, a sliding window skips blocks
+    entirely before the window.  Counts q/k/v block loads, output stores
+    and both matmuls' MACs — AttentionPlanner's closed form must equal
+    this executed count.  The skips are real DMA savings on the kernel
+    too: its kv BlockSpec clamps the block index into the run range, so
+    skipped steps revisit an adjacent block and the pipeline copies
+    nothing new (modulo one boundary copy when adjacent q blocks' ranges
+    touch)."""
+    del n_kv_heads  # GQA shares no HBM traffic: the grid refetches per q head
+    sqp = -(-seq_q // block_q) * block_q
+    skvp = -(-seq_kv // block_kv) * block_kv
+    loads = stores = macs = 0
+    for _h in range(batch * n_q_heads):
+        for qb in range(sqp // block_q):
+            q_start = qb * block_q
+            loads += block_q * head_dim  # q block, once per (head, qb)
+            for kb in range(skvp // block_kv):
+                k_start = kb * block_kv
+                run = True
+                if causal:  # kernel: k_start <= q_start + block_q - 1
+                    run = run and k_start <= q_start + block_q - 1
+                if window is not None:  # kernel: block not fully pre-window
+                    run = run and k_start + block_kv - 1 > q_start - window
+                if run:
+                    loads += 2 * block_kv * head_dim  # k and v blocks
+                    macs += 2 * block_q * block_kv * head_dim  # qk^T and pv
+            stores += block_q * head_dim
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
 def _tree_reduce_words(n_parts: int, words_each: int) -> int:
     """Pairwise tree reduction of ``n_parts`` private volumes: each merge
     reads one full volume over the network (paper Sec. 3.1.3: 127*D_O*B for

@@ -1,16 +1,20 @@
 """Deterministic, shard-aware token data pipeline.
 
-Two sources:
+Three sources:
   * ``SyntheticSource`` - structured pseudo-text (Zipfian unigrams with a
     Markov flavour) generated deterministically from (seed, step, shard),
     so every host produces exactly its shard with no coordination;
   * ``MemmapSource``   - packed uint16/uint32 token files (np.memmap),
     strided by (host, step) for disjoint coverage; the standard format a
-    real run would use.
+    real run would use;
+  * ``SyntheticImageSource`` - CIFAR-shaped image/label batches for the
+    cnn family (the paper's own domain), same (seed, step, shard)
+    determinism.
 
-Both yield {"tokens": [B_local, S], "labels": [B_local, S]} with labels =
-next-token shifted and the final position masked via label -1 (the loss
-ignores label < 0).
+Token sources yield {"tokens": [B_local, S], "labels": [B_local, S]} with
+labels = next-token shifted and the final position masked via label -1
+(the loss ignores label < 0); the image source yields
+{"images": [B_local, IMG, IMG, C], "labels": [B_local]}.
 """
 
 from __future__ import annotations
@@ -47,6 +51,30 @@ class SyntheticSource:
         tokens = mixed[:, :-1].astype(np.int32)
         labels = mixed[:, 1:].astype(np.int32)
         return {"tokens": tokens, "labels": labels}
+
+
+class SyntheticImageSource:
+    """Deterministic image/label batches for the cnn family: class-coded
+    blobs on noise, so the training loss can actually fall."""
+
+    def __init__(self, img: int, channels: int, classes: int,
+                 global_batch: int, shard: ShardInfo = ShardInfo(0, 1),
+                 seed: int = 0):
+        assert global_batch % shard.count == 0
+        self.img, self.channels, self.classes = img, channels, classes
+        self.batch = global_batch // shard.count
+        self.shard, self.seed = shard, seed
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard.index])
+        )
+        labels = rng.integers(0, self.classes, size=(self.batch,)).astype(np.int32)
+        images = rng.standard_normal(
+            (self.batch, self.img, self.img, self.channels)).astype(np.float32)
+        # A learnable class signal: shift each image's mean by its label.
+        images += (labels / max(1, self.classes - 1) - 0.5)[:, None, None, None]
+        return {"images": images, "labels": labels}
 
 
 class MemmapSource:

@@ -1,2 +1,10 @@
+from repro.kernels.conv2d.bwd import (
+    conv2d_dgrad,
+    conv2d_dgrad_ref,
+    conv2d_wgrad,
+    conv2d_wgrad_ref,
+    dgrad_op,
+    wgrad_op,
+)
 from repro.kernels.conv2d.ops import choose_schedule, choose_stack, conv2d, conv2d_op
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref

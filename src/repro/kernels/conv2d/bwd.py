@@ -1,0 +1,395 @@
+"""Planned backward kernels for the strip-tiled conv2d pipeline.
+
+Two first-class ``pallas_op`` registrations (DESIGN.md Sec. 4):
+
+* ``conv2d_dgrad`` — the input gradient.  dX is a *stride-1* strip conv
+  over the S-dilated gradient with spatially flipped, channel-swapped
+  filters, so it runs the forward kernel (:func:`conv2d_fused_pallas`)
+  verbatim on that transposed geometry: halo-overlapped gradient strips,
+  Delta_I output stacking, same VMEM accumulator discipline.  The
+  dilation + transposed zero padding happen in one ``lax.pad``.
+* ``conv2d_wgrad`` — the filter gradient.  dW[ky, kx] accumulates
+  X_strip^T @ dY_strip over a (d_i-block, d_o-stack, batch, strip) grid;
+  the F^2 x block_di x block_do f32 accumulator is the VMEM-resident
+  output stack (it never round-trips HBM between batch elements or
+  strips) and flushes exactly once on the last (batch, strip) step.
+
+Blocking comes from :class:`repro.plan.ConvDgradPlanner` /
+:class:`repro.plan.ConvWgradPlanner`; an explicit ``schedule=`` overrides
+the planner, mirroring the forward wrapper contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.kernels.conv2d.conv2d import conv2d_fused_pallas
+from repro.kernels.pallas_compat import tpu_compiler_params
+from repro.plan import ConvDgradPlanner, ConvWgradPlanner, Schedule, pad_dim, pallas_op
+from repro.plan.planners import round_up as _round_up
+
+_LANE = 128
+
+
+# ---------------------------------------------------------------------------
+# dgrad: dX via the forward strip kernel on the transposed geometry
+# ---------------------------------------------------------------------------
+
+
+def dgrad_out_extent(out: int, F: int, stride: int, padding: int) -> int:
+    """Default dX extent for one axis: the exact-cover forward input
+    (H_O - 1)*S + F - 2P.  A forward input larger than this (ragged
+    stride) still back-propagates into its first min(H_I, (H_O-1)S+F-P)
+    rows — pass the true extent via ``out_hw`` and the kernel computes
+    those rows (the rest are zeros it also produces)."""
+    return (out - 1) * stride + F - 2 * padding
+
+
+def conv2d_dgrad_ref(dy, f, *, stride: int = 1, padding: int = 0, out_hw=None):
+    """XLA oracle: the VJP of conv2d_ref with respect to its input."""
+    from repro.kernels.conv2d.ref import conv2d_ref
+
+    F = f.shape[0]
+    d_in = f.shape[2]
+    H_O, W_O = dy.shape[-3], dy.shape[-2]
+    H_I, W_I = out_hw if out_hw is not None else (
+        dgrad_out_extent(H_O, F, stride, padding),
+        dgrad_out_extent(W_O, F, stride, padding),
+    )
+    shape = dy.shape[:-3] + (H_I, W_I, d_in)
+    x0 = jnp.zeros(shape, jnp.float32)
+    _, vjp = jax.vjp(
+        lambda x: conv2d_ref(x, f, stride=stride, padding=padding,
+                             out_dtype=jnp.float32), x0)
+    return vjp(dy.astype(jnp.float32))[0]
+
+
+def _dgrad_shape_args(dy, f, *, stride=1, padding=0, out_hw=None,
+                      block_h=None, block_do=None, block_di=None):
+    """Planner shapes (forward-layer terms) from concrete operands;
+    ``out_hw`` is the dX extent the kernel actually produces."""
+    batched = dy.ndim == 4
+    B = dy.shape[0] if batched else 1
+    H_O, W_O, d_out = dy.shape[-3], dy.shape[-2], dy.shape[-1]
+    H_I, W_I = out_hw if out_hw is not None else (None, None)
+    return dict(
+        H_O=H_O, W_O=W_O, F=f.shape[0], S=stride, P=padding,
+        d_in=f.shape[2], d_out=d_out, in_bytes=dy.dtype.itemsize, batch=B,
+        H_I=H_I, W_I=W_I,
+        block_h=block_h, block_do=block_do, block_di=block_di,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "out_hw", "schedule", "out_dtype",
+                     "interpret"),
+)
+def _dgrad_impl_jit(dy, f, *, stride, padding, out_hw, schedule, out_dtype,
+                    interpret):
+    batched = dy.ndim == 4
+    if not batched:
+        dy = dy[None]
+    B, H_O, W_O, d_out = dy.shape
+    F = f.shape[0]
+    d_in = f.shape[2]
+    S, P = stride, padding
+    assert P <= F - 1, f"dgrad needs padding <= F-1, got {P} for F={F}"
+    H_I, W_I = out_hw if out_hw is not None else (
+        dgrad_out_extent(H_O, F, S, P), dgrad_out_extent(W_O, F, S, P))
+    pt = F - 1 - P  # transposed padding
+
+    bdi = schedule.block("block_di", min(_round_up(d_out, _LANE), 512))
+    hb = max(1, min(schedule.block("block_h", H_I), H_I))
+    bdo = min(schedule.block("block_do", _LANE), _round_up(d_in, _LANE))
+
+    n_h = -(-H_I // hb)
+    H_dil, W_dil = (H_O - 1) * S + 1, (W_O - 1) * S + 1
+    # The stride-1 conv over the dilated gradient produces all H_I rows of
+    # dX directly: rows past the dilated extent read pure zero padding and
+    # come out zero (a ragged-stride forward input leaves such rows).
+    rows_needed = (n_h * hb - 1) + F
+    pad_bottom = pt + max(0, rows_needed - (H_dil + 2 * pt))
+    pad_right = pt + max(0, (W_I - 1) + F - (W_dil + 2 * pt))
+    # One lax.pad: S-1 interior zeros (dilation) + transposed edge padding.
+    xp = jax.lax.pad(dy, jnp.zeros((), dy.dtype),
+                     ((0, 0, 0), (pt, pad_bottom, S - 1), (pt, pad_right, S - 1),
+                      (0, 0, 0)))
+    dip, dop = _round_up(d_out, bdi), _round_up(d_in, bdo)
+    xp = pad_dim(xp, 3, dip)
+    # Spatially flipped, channel-swapped filters: [F, F, D_O, D_I].
+    ft = jnp.flip(f, (0, 1)).transpose(0, 1, 3, 2)
+    ftp = pad_dim(pad_dim(ft, 2, dip), 3, dop)
+    bias = jnp.zeros((1, dop), jnp.float32)
+
+    out = conv2d_fused_pallas(
+        xp, ftp, bias, stride=1, block_h=hb, block_do=bdo, block_di=bdi,
+        H_O=H_I, W_O=W_I, relu=False, pool=1,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    dx = out[:, :H_I, :, :d_in]
+    return dx if batched else dx[0]
+
+
+def _dgrad_impl(dy, f, *, schedule, out_dtype, interpret, stride=1, padding=0,
+                out_hw=None, block_h=None, block_do=None, block_di=None):
+    del block_h, block_do, block_di  # consumed by the planner
+    return _dgrad_impl_jit(
+        dy, f, stride=stride, padding=padding, out_hw=out_hw,
+        schedule=schedule, out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+dgrad_op = pallas_op(
+    "conv2d_dgrad",
+    planner=ConvDgradPlanner,
+    shape_args=_dgrad_shape_args,
+    impl=_dgrad_impl,
+    reference=conv2d_dgrad_ref,
+)
+
+
+def conv2d_dgrad(
+    dy: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    out_hw: tuple[int, int] | None = None,
+    schedule: Schedule | None = None,
+    block_h: int | None = None,
+    block_do: int | None = None,
+    block_di: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """Input gradient of :func:`repro.kernels.conv2d.ops.conv2d`.
+
+    ``dy``: [B, H_O, W_O, D_O] or [H_O, W_O, D_O] cotangent of the conv
+    output; ``f``: [F, F, D_I, D_O] the forward filters.  Runs the forward
+    strip kernel on the S-dilated, (F-1-P)-padded gradient with flipped,
+    channel-swapped filters.  ``out_hw`` = (H_I, W_I) of the forward input
+    pads the result up to the true input extent (ragged strides leave
+    trailing zero-gradient rows).  Blocking: ``schedule`` > ``block_*``
+    pins > ConvDgradPlanner.
+    """
+    return dgrad_op(
+        dy, f, schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or dy.dtype, stride=stride, padding=padding,
+        out_hw=out_hw, block_h=block_h, block_do=block_do, block_di=block_di,
+    )
+
+
+# ---------------------------------------------------------------------------
+# wgrad: dW accumulated over the (batch, strip) grid
+# ---------------------------------------------------------------------------
+
+
+def conv2d_wgrad_ref(x, dy, *, F: int, stride: int = 1, padding: int = 0):
+    """XLA oracle: the VJP of conv2d_ref with respect to its filters."""
+    from repro.kernels.conv2d.ref import conv2d_ref
+
+    f0 = jnp.zeros((F, F, x.shape[-1], dy.shape[-1]), jnp.float32)
+    _, vjp = jax.vjp(
+        lambda f: conv2d_ref(x, f, stride=stride, padding=padding,
+                             out_dtype=jnp.float32), f0)
+    return vjp(dy.astype(jnp.float32))[0]
+
+
+def _wgrad_kernel(x_ref, g_ref, o_ref, acc_ref, *,
+                  n_b: int, n_h: int, F: int, S: int, block_h: int, W_O: int):
+    b, h = pl.program_id(2), pl.program_id(3)
+
+    @pl.when((b == 0) & (h == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)  # dW stack starts at zero
+
+    x = x_ref[0]  # [(block_h-1)*S+F, W_in, bdi] halo'd input strip block
+    bdi = x.shape[-1]
+    g = g_ref[0].reshape(block_h * W_O, -1)  # [strip rows, bdo] gradient
+    # dW[ky, kx] += win^T @ g — F^2 transposed MXU matmuls per strip.
+    for ky in range(F):
+        for kx in range(F):
+            win = jax.lax.slice(
+                x,
+                (ky, kx, 0),
+                (ky + (block_h - 1) * S + 1, kx + (W_O - 1) * S + 1, bdi),
+                (S, S, 1),
+            ).reshape(block_h * W_O, bdi)
+            acc_ref[ky, kx] += jax.lax.dot_general(
+                win, g, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    @pl.when((b == n_b - 1) & (h == n_h - 1))
+    def _flush():  # single DmaStore of the accumulated filter gradient
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def conv2d_wgrad_pallas(
+    x_pad: jax.Array,
+    dy: jax.Array,
+    *,
+    F: int,
+    stride: int,
+    block_h: int,
+    block_do: int,
+    block_di: int,
+    H_O: int,
+    W_O: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Filter gradient over the (d_i, d_o, batch, strip) grid.
+
+    ``x_pad``: [B, H_in, W_in, D_I] spatially pre-padded inputs with
+    H_in >= (n_h*block_h - 1)*stride + F; ``dy``: [B, n_h*block_h, W_O,
+    D_O] with rows beyond H_O zero-padded (zero rows contribute nothing).
+    D_I, D_O must be multiples of the channel blocks.  Returns
+    [F, F, D_I, D_O].
+    """
+    B, H_in, W_in, d_in = x_pad.shape
+    B2, H_g, W_g, d_out = dy.shape
+    assert B == B2 and W_g == W_O, (x_pad.shape, dy.shape, W_O)
+    n_h = H_g // block_h
+    assert n_h * block_h == H_g and n_h == -(-H_O // block_h)
+    assert d_in % block_di == 0 and d_out % block_do == 0
+    assert H_in >= (n_h * block_h - 1) * stride + F
+    assert W_in >= (W_O - 1) * stride + F
+    h_halo = (block_h - 1) * stride + F
+    out_dtype = out_dtype or x_pad.dtype
+
+    kernel = functools.partial(
+        _wgrad_kernel, n_b=B, n_h=n_h, F=F, S=stride,
+        block_h=block_h, W_O=W_O,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(d_in // block_di, d_out // block_do, B, n_h),
+        in_specs=[
+            # Halo-overlapped input strip block (element-granular), indexed
+            # by (batch, strip, d_i-block): re-streamed once per d_o stack.
+            pl.BlockSpec(
+                (1, h_halo, W_in, block_di),
+                lambda di, do, b, h: (b, h * block_h * stride, 0,
+                                      di * block_di),
+                indexing_mode=pl.unblocked,
+            ),
+            # Gradient strip for the d_o stack: re-streamed once per
+            # d_i-block.
+            pl.BlockSpec((1, block_h, W_O, block_do),
+                         lambda di, do, b, h: (b, h, 0, do)),
+        ],
+        # The dW block ignores (b, h): it stays VMEM-resident across the
+        # whole batch/strip sweep and is written once at the flush.
+        out_specs=pl.BlockSpec((F, F, block_di, block_do),
+                               lambda di, do, b, h: (0, 0, di, do)),
+        out_shape=jax.ShapeDtypeStruct((F, F, d_in, d_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((F, F, block_di, block_do), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_pad, dy)
+
+
+def _wgrad_shape_args(x, dy, *, F, stride=1, padding=0,
+                      block_h=None, block_do=None, block_di=None):
+    batched = x.ndim == 4
+    B = x.shape[0] if batched else 1
+    H, W, d_in = x.shape[-3], x.shape[-2], x.shape[-1]
+    H_O, W_O, d_out = dy.shape[-3], dy.shape[-2], dy.shape[-1]
+    return dict(
+        H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
+        in_bytes=x.dtype.itemsize, batch=B, padding=padding, H_I=H, W_I=W,
+        block_h=block_h, block_do=block_do, block_di=block_di,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("F", "stride", "padding", "schedule", "out_dtype",
+                     "interpret"),
+)
+def _wgrad_impl_jit(x, dy, *, F, stride, padding, schedule, out_dtype,
+                    interpret):
+    batched = x.ndim == 4
+    if not batched:
+        x, dy = x[None], dy[None]
+    B, H, W, d_in = x.shape
+    _, H_O, W_O, d_out = dy.shape
+    S, P = stride, padding
+
+    bdi = schedule.block("block_di", min(_round_up(d_in, _LANE), 512))
+    hb = max(1, min(schedule.block("block_h", H_O), H_O))
+    bdo = min(schedule.block("block_do", _LANE), _round_up(d_out, _LANE))
+
+    n_h = -(-H_O // hb)
+    rows_needed = (n_h * hb - 1) * S + F
+    pad_bottom = P + max(0, rows_needed - (H + 2 * P))
+    dip, dop = _round_up(d_in, bdi), _round_up(d_out, bdo)
+    xp = jnp.pad(x, ((0, 0), (P, pad_bottom), (P, P), (0, 0)))
+    xp = pad_dim(xp, 3, dip)
+    gp = pad_dim(pad_dim(dy, 1, n_h * hb), 3, dop)
+
+    dw = conv2d_wgrad_pallas(
+        xp, gp, F=F, stride=S, block_h=hb, block_do=bdo, block_di=bdi,
+        H_O=H_O, W_O=W_O, out_dtype=out_dtype, interpret=interpret,
+    )
+    return dw[:, :, :d_in, :d_out]
+
+
+def _wgrad_impl(x, dy, *, schedule, out_dtype, interpret, F, stride=1,
+                padding=0, block_h=None, block_do=None, block_di=None):
+    del block_h, block_do, block_di  # consumed by the planner
+    return _wgrad_impl_jit(
+        x, dy, F=F, stride=stride, padding=padding,
+        schedule=schedule, out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+wgrad_op = pallas_op(
+    "conv2d_wgrad",
+    planner=ConvWgradPlanner,
+    shape_args=_wgrad_shape_args,
+    impl=_wgrad_impl,
+    reference=conv2d_wgrad_ref,
+)
+
+
+def conv2d_wgrad(
+    x: jax.Array,
+    dy: jax.Array,
+    *,
+    F: int,
+    stride: int = 1,
+    padding: int = 0,
+    schedule: Schedule | None = None,
+    block_h: int | None = None,
+    block_do: int | None = None,
+    block_di: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """Filter gradient of :func:`repro.kernels.conv2d.ops.conv2d`.
+
+    ``x``: [B, H, W, D_I] or [H, W, D_I] the forward input; ``dy``: the
+    matching conv-output cotangent; ``F`` the filter extent.  One batched
+    ``pallas_call`` accumulates dW in VMEM over the whole (batch, strip)
+    grid and stores it once.  Blocking: ``schedule`` > ``block_*`` pins >
+    ConvWgradPlanner.
+    """
+    return wgrad_op(
+        x, dy, schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or x.dtype, F=F, stride=stride, padding=padding,
+        block_h=block_h, block_do=block_do, block_di=block_di,
+    )

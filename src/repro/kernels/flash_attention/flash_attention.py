@@ -85,7 +85,13 @@ def _fa_kernel(
     @pl.when(kb == n_kv - 1)
     def _flush():
         l = l_ref[...]
-        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked (padded) rows -> 0
+        # Fully-masked rows -> 0.  This covers sequence padding AND real
+        # rows whose causal/window mask admits no key (e.g. a window
+        # entirely past kv_len when q_len > kv_len): the kernel defines
+        # their attention as zero, where a dense softmax-of--inf would
+        # spread uniform weights.  ref.py matches only the non-degenerate
+        # rows; callers wanting uniform semantics must not feed such rows.
+        l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
@@ -103,7 +109,24 @@ def flash_attention_pallas(
     group = BHq // BHkv
     n_kv = Skv // block_kv
 
-    kv_index = lambda h, qb, kb: (h // group, kb, 0)
+    def kv_index(h, qb, kb):
+        # Clamp the kv block index into this q block's run range: grid
+        # steps the `run` predicate skips revisit an adjacent block, so the
+        # pipeline issues NO new copy for them — the causal/window skips
+        # save HBM traffic, not just MXU work, and AttentionPlanner's words
+        # model counts exactly these fetches (give or take one boundary
+        # copy when consecutive q blocks' ranges touch).  The clamped
+        # fetch is never read: the kernel's compute body is off for
+        # skipped steps.
+        if causal:  # run: k_start <= q_start + block_q - 1
+            kb = jnp.minimum(kb, (qb * block_q + block_q - 1) // block_kv)
+        if window is not None:  # run: k_start + block_kv - 1 > q_start - window
+            lo = jnp.maximum(0, -(-(qb * block_q - window + 2 - block_kv)
+                                  // block_kv))
+            # A fully-masked q block (lo past the end) pins to the last
+            # block; its one fetch is the +-1 boundary slack of the model.
+            kb = jnp.minimum(jnp.maximum(kb, lo), n_kv - 1)
+        return (h // group, kb, 0)
     return pl.pallas_call(
         functools.partial(
             _fa_kernel, n_kv=n_kv, block_q=block_q, block_kv=block_kv,

@@ -23,12 +23,13 @@ from repro.plan.planners import round_up as _round_up
 
 def _shape_args(q, k, v, *, causal=True, window=None, scale=None,
                 block_q=None, block_kv=None):
-    del causal, window, scale
+    del scale  # never changes blocking or traffic
     B, Hq, Sq, D = q.shape
     Hkv, Skv = k.shape[1], k.shape[2]
     return dict(
         seq_q=Sq, seq_kv=Skv, head_dim=D, n_q_heads=Hq, n_kv_heads=Hkv,
         batch=B, in_bytes=q.dtype.itemsize, block_q=block_q, block_kv=block_kv,
+        causal=causal, window=window,  # modeled: block-level skips
     )
 
 

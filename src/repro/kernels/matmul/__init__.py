@@ -1,2 +1,10 @@
+from repro.kernels.matmul.bwd import (
+    dw_op,
+    dx_op,
+    matmul_dw,
+    matmul_dw_ref,
+    matmul_dx,
+    matmul_dx_ref,
+)
 from repro.kernels.matmul.ops import choose_blocks, fc_matmul, matmul_op
 from repro.kernels.matmul.ref import fc_matmul_ref

@@ -1,0 +1,313 @@
+"""Planned backward kernels for the FC matmul (DESIGN.md Sec. 4).
+
+Two first-class ``pallas_op`` registrations:
+
+* ``matmul_dx`` — dX[M, K] = dY[M, N] @ W[K, N]^T.  The kernel contracts
+  the *last* axis of both operands block-by-block (no W^T ever
+  materializes in HBM); the resident output stack is a (block_m x
+  block_k) tile of dX while N streams through — Alg 5's capacity rule
+  with the output stack on the K dimension.
+* ``matmul_dw`` — dW[K, N] = X[M, K]^T @ dY[M, N].  Contracts the *first*
+  axis of both operands; a (block_k x block_n) tile of dW stays resident
+  while the batch dimension M streams through as the contraction — the
+  private-partial-output accumulation of Alg 4, flushed once.
+
+Blocking comes from :class:`repro.plan.MatmulDxPlanner` /
+:class:`repro.plan.MatmulDwPlanner` (block names use the *forward* roles:
+block_m = batch tile, block_k = input-feature tile, block_n = output tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.kernels.pallas_compat import tpu_compiler_params
+from repro.plan import MatmulDwPlanner, MatmulDxPlanner, Schedule, pad_dim, pallas_op
+from repro.plan.planners import round_up as _round_up
+
+_LANE = 128
+
+
+# ---------------------------------------------------------------------------
+# dX = dY @ W^T  (contract the last axis of both operands)
+# ---------------------------------------------------------------------------
+
+
+def matmul_dx_ref(g, w, out_dtype=None):
+    """XLA oracle: dX = dY @ W^T with f32 accumulation."""
+    out_dtype = out_dtype or g.dtype
+    return jax.lax.dot_general(
+        g, w, (((g.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def _mm_nt_kernel(g_ref, w_ref, o_ref, acc_ref, *, n_n: int):
+    nn = pl.program_id(2)
+
+    @pl.when(nn == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [bm, bn] x [bk, bn] -> [bm, bk]: contract the shared N axis.
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(nn == n_n - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_nt_pallas(
+    g: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """O[M, K] = G[M, N] @ W[K, N]^T; shapes must be block multiples."""
+    m, n = g.shape
+    kdim, n2 = w.shape
+    assert n == n2, (g.shape, w.shape)
+    assert m % block_m == 0 and kdim % block_k == 0 and n % block_n == 0
+    out_dtype = out_dtype or g.dtype
+    n_n = n // block_n
+
+    return pl.pallas_call(
+        functools.partial(_mm_nt_kernel, n_n=n_n),
+        grid=(m // block_m, kdim // block_k, n_n),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, nn: (i, nn)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, nn: (j, nn)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_k), lambda i, j, nn: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_k), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(g, w)
+
+
+def _dx_shape_args(g, w, *, block_m=None, block_n=None, block_k=None):
+    k, n = w.shape
+    m = 1
+    for d in g.shape[:-1]:
+        m *= d
+    return dict(m=m, n=n, k=k, in_bytes=g.dtype.itemsize,
+                block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "out_dtype", "interpret"))
+def _dx_impl_jit(g, w, *, schedule, out_dtype, interpret):
+    lead = g.shape[:-1]
+    k, n = w.shape
+    g2 = g.reshape(-1, n)
+    m = g2.shape[0]
+
+    bm = min(schedule.block("block_m", _LANE), _round_up(m, _LANE))
+    bk = schedule.block("block_k", _LANE)
+    bn = schedule.block("block_n", min(_round_up(n, _LANE), 512))
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    g2 = pad_dim(pad_dim(g2, 0, mp), 1, np_)
+    wp = pad_dim(pad_dim(w, 0, kp), 1, np_)
+    out = matmul_nt_pallas(
+        g2, wp, block_m=bm, block_k=bk, block_n=bn,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m, :k].reshape(*lead, k)
+
+
+def _dx_impl(g, w, *, schedule, out_dtype, interpret,
+             block_m=None, block_n=None, block_k=None):
+    del block_m, block_n, block_k  # consumed by the planner
+    return _dx_impl_jit(g, w, schedule=schedule, out_dtype=out_dtype,
+                        interpret=interpret)
+
+
+dx_op = pallas_op(
+    "matmul_dx",
+    planner=MatmulDxPlanner,
+    shape_args=_dx_shape_args,
+    impl=_dx_impl,
+    reference=matmul_dx_ref,
+)
+
+
+def matmul_dx(
+    g: jax.Array,
+    w: jax.Array,
+    *,
+    schedule: Schedule | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """Input gradient of :func:`repro.kernels.matmul.ops.fc_matmul`.
+
+    ``g``: [..., N] cotangent of the FC output; ``w``: [K, N] the forward
+    weights.  Leading dims of ``g`` flatten into M.  Blocking:
+    ``schedule`` > ``block_*`` pins > MatmulDxPlanner.
+    """
+    return dx_op(
+        g, w, schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or g.dtype,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# dW = X^T @ dY  (contract the first axis of both operands)
+# ---------------------------------------------------------------------------
+
+
+def matmul_dw_ref(x, g, out_dtype=None):
+    """XLA oracle: dW = X^T @ dY with f32 accumulation (leading dims of
+    both operands flatten into M)."""
+    out_dtype = out_dtype or x.dtype
+    x2 = x.reshape(-1, x.shape[-1])
+    g2 = g.reshape(-1, g.shape[-1])
+    return jax.lax.dot_general(
+        x2, g2, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def _mm_tn_kernel(x_ref, g_ref, o_ref, acc_ref, *, n_m: int):
+    mm = pl.program_id(2)
+
+    @pl.when(mm == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [bm, bk] x [bm, bn] -> [bk, bn]: contract the shared M axis.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(mm == n_m - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_tn_pallas(
+    x: jax.Array,
+    g: jax.Array,
+    *,
+    block_m: int,
+    block_k: int,
+    block_n: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """O[K, N] = X[M, K]^T @ G[M, N]; shapes must be block multiples."""
+    m, kdim = x.shape
+    m2, n = g.shape
+    assert m == m2, (x.shape, g.shape)
+    assert m % block_m == 0 and kdim % block_k == 0 and n % block_n == 0
+    out_dtype = out_dtype or x.dtype
+    n_m = m // block_m
+
+    return pl.pallas_call(
+        functools.partial(_mm_tn_kernel, n_m=n_m),
+        grid=(kdim // block_k, n // block_n, n_m),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, mm: (mm, i)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, mm: (mm, j)),
+        ],
+        out_specs=pl.BlockSpec((block_k, block_n), lambda i, j, mm: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((kdim, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, g)
+
+
+def _dw_shape_args(x, g, *, block_m=None, block_n=None, block_k=None):
+    k, n = x.shape[-1], g.shape[-1]
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    return dict(m=m, n=n, k=k, in_bytes=x.dtype.itemsize,
+                block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "out_dtype", "interpret"))
+def _dw_impl_jit(x, g, *, schedule, out_dtype, interpret):
+    k, n = x.shape[-1], g.shape[-1]
+    x2 = x.reshape(-1, k)
+    g2 = g.reshape(-1, n)
+    m = x2.shape[0]
+
+    bk = min(schedule.block("block_k", _LANE), _round_up(k, _LANE))
+    bn = min(schedule.block("block_n", _LANE), _round_up(n, _LANE))
+    bm = schedule.block("block_m", min(_round_up(m, _LANE), 512))
+
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    x2 = pad_dim(pad_dim(x2, 0, mp), 1, kp)
+    g2 = pad_dim(pad_dim(g2, 0, mp), 1, np_)
+    out = matmul_tn_pallas(
+        x2, g2, block_m=bm, block_k=bk, block_n=bn,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:k, :n]
+
+
+def _dw_impl(x, g, *, schedule, out_dtype, interpret,
+             block_m=None, block_n=None, block_k=None):
+    del block_m, block_n, block_k  # consumed by the planner
+    return _dw_impl_jit(x, g, schedule=schedule, out_dtype=out_dtype,
+                        interpret=interpret)
+
+
+dw_op = pallas_op(
+    "matmul_dw",
+    planner=MatmulDwPlanner,
+    shape_args=_dw_shape_args,
+    impl=_dw_impl,
+    reference=matmul_dw_ref,
+)
+
+
+def matmul_dw(
+    x: jax.Array,
+    g: jax.Array,
+    *,
+    schedule: Schedule | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """Weight gradient of :func:`repro.kernels.matmul.ops.fc_matmul`.
+
+    ``x``: [..., K] the forward activations; ``g``: [..., N] the matching
+    output cotangent (same leading dims, flattened into M).  Blocking:
+    ``schedule`` > ``block_*`` pins > MatmulDwPlanner.
+    """
+    return dw_op(
+        x, g, schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or x.dtype,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    )

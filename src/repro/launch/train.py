@@ -31,7 +31,8 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config, smoke_config
-from repro.data.pipeline import ShardInfo, SyntheticSource
+from repro.data.pipeline import ShardInfo, SyntheticImageSource, SyntheticSource
+from repro.models import cnn
 from repro.models.module import abstract_params, init_params, param_specs
 from repro.models.registry import get_family
 from repro.optim import adamw
@@ -66,6 +67,10 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--grad-compression", default="none", choices=["none", "int8_ef"])
+    ap.add_argument("--planned-kernels", action="store_true",
+                    help="cnn: run the planned Pallas forward AND backward "
+                         "kernels (dgrad/wgrad conv, dX/dW matmul) in the "
+                         "train step instead of the XLA reference path")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -74,6 +79,7 @@ def main() -> None:
         learning_rate=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
         total_steps=args.steps, remat=args.remat, microbatch=args.microbatch,
         loss_chunks=4, seed=args.seed, grad_compression=args.grad_compression,
+        planned_kernels=args.planned_kernels,
     )
 
     shape, axes = parse_mesh(args.mesh)
@@ -90,8 +96,12 @@ def main() -> None:
     ctx = ParallelCtx(mesh=mesh, dp_axes=dp_axes, tp_axis="model")
     print(f"mesh {dict(mesh.shape)} | arch {cfg.name} | {tcfg.compute_dtype} compute")
 
-    fam = get_family(cfg.family)
-    defs = fam.param_defs(cfg)
+    # The cnn family (the paper's own domain) has no LM-style family
+    # module; its param_defs / forward live in models/cnn.py and the loss
+    # comes from runtime.train.make_loss_fn (planned Pallas fwd+bwd
+    # kernels under --planned-kernels).
+    defs = (cnn.param_defs(cfg) if cfg.family == "cnn"
+            else get_family(cfg.family).param_defs(cfg))
     aparams = abstract_params(defs, jnp.dtype(tcfg.param_dtype))
     n_params = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(aparams))
     print(f"params: {n_params/1e6:.1f}M")
@@ -123,8 +133,13 @@ def main() -> None:
             print(f"resumed from step {last} ({args.ckpt})")
 
     # Data: one shard per data-parallel host group (single process here).
-    source = SyntheticSource(cfg.vocab, args.seq, args.batch,
-                             ShardInfo(0, 1), seed=tcfg.seed)
+    if cfg.family == "cnn":
+        source = SyntheticImageSource(cnn.IMG, cnn.IN_CH, cfg.vocab,
+                                      args.batch, ShardInfo(0, 1),
+                                      seed=tcfg.seed)
+    else:
+        source = SyntheticSource(cfg.vocab, args.seq, args.batch,
+                                 ShardInfo(0, 1), seed=tcfg.seed)
 
     step_fn = tr.make_train_step(cfg, tcfg, parallel=ctx if use_sharding else None,
                                  grad_specs=pspecs)
@@ -136,8 +151,13 @@ def main() -> None:
                 m=jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs),
                 v=jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs)),
             err=None)
-        bspec = {k: NamedSharding(mesh, P(dp_axes if len(dp_axes) > 1 else dp_axes[0], None))
-                 for k in ("tokens", "labels")}
+        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        if cfg.family == "cnn":
+            bspec = {"images": NamedSharding(mesh, P(dp, None, None, None)),
+                     "labels": NamedSharding(mesh, P(dp))}
+        else:
+            bspec = {k: NamedSharding(mesh, P(dp, None))
+                     for k in ("tokens", "labels")}
         step_fn = jax.jit(step_fn, in_shardings=(sstate, bspec))
     else:
         step_fn = jax.jit(step_fn)

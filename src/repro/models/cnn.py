@@ -29,20 +29,41 @@ def _stage_channels(cfg: ModelConfig) -> list[tuple[int, int]]:
     return chans
 
 
-def param_defs(cfg: ModelConfig) -> dict:
-    stages = {}
+def _stage_geometry(cfg: ModelConfig, batch: int):
+    """The single source of every stage's operand shapes: yields
+    ``(name, x_shape, w_shape)`` for each conv stage (halving the plane
+    per 2x2 pool) and each FC stage — consumed by param_defs (widths),
+    plan_forward and plan_training, so a topology change lands in one
+    place."""
+    H = IMG
     for i, (ci, co) in enumerate(_stage_channels(cfg)):
-        stages[f"conv{i}"] = ParamDef((F, F, ci, co), (None, None, None, None), fan_in_axis=2)
-        stages[f"bias{i}"] = ParamDef((co,), (None,), init="zeros")
-    spatial = IMG // (2 ** cfg.n_layers)
-    flat = spatial * spatial * cfg.d_model * (2 ** (cfg.n_layers - 1))
-    return {
-        **stages,
-        "fc1": ParamDef((flat, cfg.d_ff), (None, "model")),
-        "fc1_b": ParamDef((cfg.d_ff,), (None,), init="zeros"),
-        "fc2": ParamDef((cfg.d_ff, cfg.vocab), ("model", None)),
-        "fc2_b": ParamDef((cfg.vocab,), (None,), init="zeros"),
-    }
+        yield f"conv{i}", (batch, H, H, ci), (F, F, ci, co)
+        H //= 2
+    flat = H * H * cfg.d_model * (2 ** (cfg.n_layers - 1))
+    yield "fc1", (batch, flat), (flat, cfg.d_ff)
+    yield "fc2", (batch, cfg.d_ff), (cfg.d_ff, cfg.vocab)
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = {}
+    for name, _x_shape, w_shape in _stage_geometry(cfg, batch=1):
+        if name.startswith("conv"):
+            i = name[len("conv"):]
+            defs[name] = ParamDef(w_shape, (None, None, None, None), fan_in_axis=2)
+            defs[f"bias{i}"] = ParamDef((w_shape[3],), (None,), init="zeros")
+        else:
+            spec = (None, "model") if name == "fc1" else ("model", None)
+            defs[name] = ParamDef(w_shape, spec)
+            defs[f"{name}_b"] = ParamDef((w_shape[1],), (None,), init="zeros")
+    return defs
+
+
+def _bwd_for(sched: dict, stage: str) -> dict | None:
+    """The backward-Schedule overrides of one stage: ``{"conv0.dgrad": s}``
+    style keys (see :func:`plan_training`) become ``{"dgrad": s}``."""
+    prefix = stage + "."
+    out = {k[len(prefix):]: v for k, v in sched.items() if k.startswith(prefix)}
+    return out or None
 
 
 def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
@@ -52,6 +73,11 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
     ``schedules`` optionally maps stage names ("conv0", ..., "fc1", "fc2")
     to explicit :class:`repro.plan.Schedule` objects (e.g. from
     :func:`plan_forward`), overriding the per-stage capacity planner.
+    Backward-pass overrides ride in the same dict under
+    "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" (conv) and
+    "<stage>.dx"/"<stage>.dw" (FC) keys — :func:`plan_training` emits the
+    full set, so ``jax.grad`` through this forward runs pinned planned
+    backward kernels.
     """
     sched = schedules or {}
     x = images
@@ -61,7 +87,8 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
             # One batched kernel launch per stage: conv + bias + ReLU + 2x2
             # max-pool all fused in the flush — no HBM round-trip between
             # the conv and its epilogue.
-            x = conv_block(x, f, b, 1, F // 2, 2, "strip", sched.get(f"conv{i}"))
+            x = conv_block(x, f, b, 1, F // 2, 2, "strip",
+                           sched.get(f"conv{i}"), _bwd_for(sched, f"conv{i}"))
         else:
             from repro.kernels.conv2d.ref import conv2d_fused_ref
 
@@ -69,8 +96,11 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
                                  relu=True, pool=2)
     x = x.reshape(x.shape[0], -1)
     if use_kernels:
-        x = jax.nn.relu(fc_layer(x, params["fc1"], sched.get("fc1")) + params["fc1_b"])
-        return fc_layer(x, params["fc2"], sched.get("fc2")) + params["fc2_b"]
+        x = jax.nn.relu(
+            fc_layer(x, params["fc1"], sched.get("fc1"), _bwd_for(sched, "fc1"))
+            + params["fc1_b"])
+        return fc_layer(x, params["fc2"], sched.get("fc2"),
+                        _bwd_for(sched, "fc2")) + params["fc2_b"]
     x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
     return x @ params["fc2"] + params["fc2_b"]
 
@@ -87,16 +117,35 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     from repro.core import fc_layer as fl
 
     out = {}
-    H = IMG
-    for i, (ci, co) in enumerate(_stage_channels(cfg)):
-        out[f"conv{i}"] = cl.plan(
-            (batch, H, H, ci), (F, F, ci, co), stride=1, padding=F // 2,
-            pool=2, in_bytes=in_bytes, machine=machine,
-        )
-        H //= 2
-    flat = H * H * cfg.d_model * (2 ** (cfg.n_layers - 1))
-    out["fc1"] = fl.plan((batch, flat), (flat, cfg.d_ff),
-                         in_bytes=in_bytes, machine=machine)
-    out["fc2"] = fl.plan((batch, cfg.d_ff), (cfg.d_ff, cfg.vocab),
-                         in_bytes=in_bytes, machine=machine)
+    for name, x_shape, w_shape in _stage_geometry(cfg, batch):
+        if name.startswith("conv"):
+            out[name] = cl.plan(x_shape, w_shape, stride=1, padding=F // 2,
+                                pool=2, in_bytes=in_bytes, machine=machine)
+        else:
+            out[name] = fl.plan(x_shape, w_shape, in_bytes=in_bytes,
+                                machine=machine)
+    return out
+
+
+def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
+                  machine=None) -> dict:
+    """:func:`plan_forward` plus every backward kernel ``jax.grad`` runs:
+    "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" for conv stages,
+    "<stage>.dx"/"<stage>.dw" for FC stages.  Pass the result via
+    ``schedules=`` so the whole training step executes pinned planned
+    kernels; sum ``.modeled_words`` for the step's modeled HBM traffic.
+    """
+    from repro.core import conv_layer as cl
+    from repro.core import fc_layer as fl
+
+    out = plan_forward(cfg, batch, in_bytes=in_bytes, machine=machine)
+    for name, x_shape, w_shape in _stage_geometry(cfg, batch):
+        if name.startswith("conv"):
+            bwd = cl.plan_bwd(x_shape, w_shape, stride=1, padding=F // 2,
+                              in_bytes=in_bytes, machine=machine)
+        else:
+            bwd = fl.plan_bwd(x_shape, w_shape, in_bytes=in_bytes,
+                              machine=machine)
+        for k, s in bwd.items():
+            out[f"{name}.{k}"] = s
     return out

@@ -10,15 +10,21 @@ boilerplate.  See DESIGN.md Sec. 3.
 from repro.plan.planners import (
     PLANNERS,
     AttentionPlanner,
+    ConvDgradPlanner,
     ConvPlanner,
+    ConvWgradPlanner,
+    MatmulDwPlanner,
+    MatmulDxPlanner,
     MatmulPlanner,
     Planner,
     conv_strip_words,
+    conv_wgrad_words,
     planner_for,
 )
 from repro.plan.registry import (
     PallasOp,
     default_interpret,
+    freeze_schedules,
     get_op,
     pad_dim,
     pallas_op,
@@ -30,14 +36,20 @@ from repro.plan.schedule import Blocks, Schedule, to_roofline
 __all__ = [
     "AttentionPlanner",
     "Blocks",
+    "ConvDgradPlanner",
     "ConvPlanner",
+    "ConvWgradPlanner",
+    "MatmulDwPlanner",
+    "MatmulDxPlanner",
     "MatmulPlanner",
     "PLANNERS",
     "PallasOp",
     "Planner",
     "Schedule",
     "conv_strip_words",
+    "conv_wgrad_words",
     "default_interpret",
+    "freeze_schedules",
     "get_op",
     "pad_dim",
     "pallas_op",

@@ -231,6 +231,202 @@ class ConvPlanner:
 
 
 # ---------------------------------------------------------------------------
+# Conv backward: dgrad (input gradient) and wgrad (filter gradient)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDgradPlanner:
+    """Plans the conv backward-data (dgrad) kernel.
+
+    dX is a stride-1 strip conv over the S-dilated gradient with spatially
+    flipped, channel-swapped filters — exactly the forward kernel on a
+    transposed geometry — so the planner delegates to :class:`ConvPlanner`
+    on that geometry and relabels the schedule.  Kwargs are the *forward*
+    layer's shapes: ``(H_O, W_O)`` is the gradient extent, ``d_in/d_out``
+    the forward channel counts (dgrad streams d_out slices and stacks
+    Delta_I = ``block_do`` output slices of dX, the same capacity rule that
+    bounds the forward Delta_O).
+    """
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "conv2d_dgrad"
+
+    def plan(
+        self, *, H_O: int, W_O: int, F: int, S: int = 1, P: int = 0,
+        d_in: int, d_out: int, in_bytes: int = 2, batch: int = 1,
+        H_I: int | None = None, W_I: int | None = None,
+        block_h: int | None = None, block_do: int | None = None,
+        block_di: int | None = None,
+    ) -> Schedule:
+        if P > F - 1:
+            raise ValueError(f"dgrad needs padding <= F-1, got P={P} for F={F}")
+        H_dil, W_dil = (H_O - 1) * S + 1, (W_O - 1) * S + 1  # dilated grad
+        pt = F - 1 - P  # transposed padding
+        # dX extent: exact cover by default; a ragged-stride forward input
+        # is larger — the kernel then computes (zero) rows past the cover.
+        H_I = H_I if H_I is not None else H_dil + 2 * pt - F + 1
+        W_I = W_I if W_I is not None else W_dil + 2 * pt - F + 1
+        inner = ConvPlanner(self.machine).plan(
+            H_O=H_I, W_O=W_I,
+            F=F, S=1, d_in=d_out, d_out=d_in, in_bytes=in_bytes,
+            batch=batch, padding=pt, H_I=H_dil, W_I=W_dil,
+            block_h=block_h, block_do=block_do, block_di=block_di,
+        )
+        return dataclasses.replace(inner, op=self.op)
+
+
+def conv_wgrad_words(
+    *, H_O: int, W_O: int, H_I: int, W_I: int, F: int, S: int, P: int,
+    d_in: int, d_out: int, block_h: int, block_di: int, block_do: int,
+    batch: int = 1,
+) -> tuple[int, int]:
+    """(loads, stores) of the wgrad accumulation schedule: the F^2 x
+    Delta_I x Delta_O filter-gradient accumulator is the resident stack;
+    each of the ceil(d_out/block_do) gradient stacks re-streams every
+    halo'd input strip (zero-padding rows free) and each of the
+    ceil(d_in/block_di) input blocks re-streams the whole gradient; dW
+    stores exactly once (accumulated over batch and strips in VMEM)."""
+    n_do = -(-d_out // block_do)
+    n_di = -(-d_in // block_di)
+    h_in = (block_h - 1) * S + F
+    rows = 0
+    for h0 in range(0, H_O, block_h):
+        lo = h0 * S - P
+        rows += max(0, min(lo + h_in, H_I) - max(lo, 0))
+    loads = n_do * d_in * rows * W_I + n_di * d_out * H_O * W_O
+    stores = F * F * d_in * d_out
+    return batch * loads, stores
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvWgradPlanner:
+    """Picks (block_h, block_do, block_di) for the wgrad accumulation
+    kernel: dW[ky, kx] += X_strip^T @ dY_strip over the (batch, strip)
+    grid.  The resident output stack is the F^2 * block_di * block_do f32
+    accumulator; the input and gradient strips stream through.  The same
+    two-dimensional search as the forward planner: strip candidates are
+    H_O and its power-of-two fractions, the largest fitting lane-aligned
+    gradient stack per strip, fewest modeled words wins."""
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "conv2d_wgrad"
+
+    _BDO_CAP: ClassVar[int] = 2048
+    _BDI_CAP: ClassVar[int] = 512
+
+    def default_block_di(self, d_in: int) -> int:
+        lane = self.machine.lane
+        if lane == 1:
+            return 1  # the paper's per-slice loop granularity
+        return min(round_up(d_in, lane), self._BDI_CAP)
+
+    def _vmem_bytes(self, hb: int, bdo: int, bdi: int, F: int, S: int,
+                    W_O: int, W_stream: int, in_bytes: int) -> int:
+        acc_word = max(4, in_bytes)
+        stream = 0
+        if self.machine.charge_stream_blocks:
+            h_halo = (hb - 1) * S + F
+            stream = (h_halo * W_stream * bdi + hb * W_O * bdo) * in_bytes * 2
+        return F * F * bdi * bdo * acc_word + stream
+
+    def _max_stack(self, hb: int, bdi: int, F: int, S: int, W_O: int,
+                   W_stream: int, in_bytes: int, d_out: int) -> int:
+        m = self.machine
+        lane = m.lane
+        budget = m.usable_for_working_set(streams=2)
+        acc_word = max(4, in_bytes)
+        fixed = 0
+        per_bdo = F * F * bdi * acc_word
+        if m.charge_stream_blocks:
+            h_halo = (hb - 1) * S + F
+            fixed = h_halo * W_stream * bdi * in_bytes * 2
+            per_bdo += hb * W_O * in_bytes * 2
+        bdo = _align_down((budget - fixed) // per_bdo, lane) if budget > fixed else 0
+        return min(bdo, self._BDO_CAP, round_up(d_out, lane))
+
+    def plan(
+        self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int,
+        d_out: int, in_bytes: int = 2, batch: int = 1,
+        padding: int | None = None, H_I: int | None = None,
+        W_I: int | None = None, block_h: int | None = None,
+        block_do: int | None = None, block_di: int | None = None,
+    ) -> Schedule:
+        m = self.machine
+        lane = m.lane
+        P = 0 if padding is None else padding
+        H_I = H_I if H_I is not None else (H_O - 1) * S + F - 2 * P
+        W_I = W_I if W_I is not None else (W_O - 1) * S + F - 2 * P
+        W_stream = (W_O - 1) * S + F
+        bdi = block_di or self.default_block_di(d_in)
+
+        def words(hb: int, bdo: int) -> int:
+            loads, stores = conv_wgrad_words(
+                H_O=H_O, W_O=W_O, H_I=H_I, W_I=W_I, F=F, S=S, P=P,
+                d_in=d_in, d_out=d_out, block_h=hb, block_di=bdi,
+                block_do=bdo, batch=batch,
+            )
+            return loads + stores
+
+        if block_h is not None and block_do is not None:
+            hb, bdo = block_h, block_do
+        else:
+            cands = [block_h] if block_h is not None else []
+            if not cands:
+                k = 1
+                while True:
+                    hb = -(-H_O // k)
+                    if not cands or hb < cands[-1]:
+                        cands.append(hb)
+                    if hb <= 1:
+                        break
+                    k *= 2
+            budget = m.usable_for_working_set(streams=2)
+            best = None
+            for hb in cands:
+                if block_do is not None:
+                    bdo = min(block_do, round_up(d_out, lane))
+                    if self._vmem_bytes(hb, bdo, bdi, F, S, W_O, W_stream,
+                                        in_bytes) > budget:
+                        continue
+                else:
+                    bdo = self._max_stack(hb, bdi, F, S, W_O, W_stream,
+                                          in_bytes, d_out)
+                    if bdo < max(lane, 1):
+                        continue
+                w = words(hb, bdo)
+                if best is None or w < best[0]:
+                    best = (w, hb, bdo)
+            if best is None:
+                hb = block_h if block_h is not None else min(8, H_O)
+                bdo = block_do if block_do is not None else lane
+            else:
+                _, hb, bdo = best
+        hb = max(1, min(hb, H_O))
+        bdo = min(bdo, round_up(d_out, lane))
+
+        loads, stores = conv_wgrad_words(
+            H_O=H_O, W_O=W_O, H_I=H_I, W_I=W_I, F=F, S=S, P=P,
+            d_in=d_in, d_out=d_out, block_h=hb, block_di=bdi,
+            block_do=bdo, batch=batch,
+        )
+        grid = (round_up(d_in, bdi) // bdi, round_up(d_out, bdo) // bdo,
+                batch, -(-H_O // hb))
+        return Schedule(
+            op=self.op,
+            grid=grid,
+            blocks=(("block_di", bdi), ("block_do", bdo), ("block_h", hb)),
+            halo=max(0, F - S),
+            macs=batch * H_O * W_O * F * F * d_in * d_out,
+            loads=loads,
+            stores=stores,
+            vmem_bytes=self._vmem_bytes(hb, bdo, bdi, F, S, W_O, W_stream,
+                                        in_bytes),
+            machine=m.name,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Matmul (Algs 4/5)
 # ---------------------------------------------------------------------------
 
@@ -299,6 +495,74 @@ class MatmulPlanner:
 
 
 # ---------------------------------------------------------------------------
+# Matmul backward: dX = G @ W^T and dW = X^T @ G
+# ---------------------------------------------------------------------------
+
+
+def _relabel_matmul(inner: Schedule, op: str, names: dict[str, str]) -> Schedule:
+    """Rename an inner MatmulPlanner schedule's blocks into the backward
+    kernel's own (forward-role) names; grid and model fields carry over."""
+    blocks = tuple(sorted((names[k], v) for k, v in inner.blocks))
+    return dataclasses.replace(inner, op=op, blocks=blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulDxPlanner:
+    """Plans dX = dY @ W^T for the FC layer.
+
+    A matmul whose resident output stack is the K (input-feature) dimension
+    while N streams through as the contraction — the Alg 5 capacity rule
+    with the roles transposed — so the planner delegates to
+    :class:`MatmulPlanner` on ``(m, k, n)`` and relabels the blocks back
+    into forward names: ``block_k`` is the output stack (the Delta_O
+    analogue, 768/384 on MANTICORE at batch 32), ``block_n`` the streamed
+    contraction step.  Kwargs are the *forward* shapes (x: [m, k],
+    w: [k, n], dY: [m, n]).
+    """
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "matmul_dx"
+
+    def plan(
+        self, *, m: int, n: int, k: int, in_bytes: int = 2,
+        block_m: int | None = None, block_n: int | None = None,
+        block_k: int | None = None,
+    ) -> Schedule:
+        inner = MatmulPlanner(self.machine).plan(
+            m=m, n=k, k=n, in_bytes=in_bytes,
+            block_m=block_m, block_n=block_k, block_k=block_n,
+        )
+        return _relabel_matmul(inner, self.op, {
+            "block_m": "block_m", "block_n": "block_k", "block_k": "block_n",
+        })
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulDwPlanner:
+    """Plans dW = X^T @ dY for the FC layer: output [k, n] tiles resident
+    while the M (batch) dimension streams as the contraction.  Delegates to
+    :class:`MatmulPlanner` on ``(k, n, m)``; ``block_m`` is the streamed
+    contraction step in the relabeled schedule.  Kwargs are the *forward*
+    shapes."""
+
+    machine: MachineModel = TPU_V5E
+    op: ClassVar[str] = "matmul_dw"
+
+    def plan(
+        self, *, m: int, n: int, k: int, in_bytes: int = 2,
+        block_m: int | None = None, block_n: int | None = None,
+        block_k: int | None = None,
+    ) -> Schedule:
+        inner = MatmulPlanner(self.machine).plan(
+            m=k, n=n, k=m, in_bytes=in_bytes,
+            block_m=block_k, block_n=block_n, block_k=block_m,
+        )
+        return _relabel_matmul(inner, self.op, {
+            "block_m": "block_k", "block_n": "block_n", "block_k": "block_m",
+        })
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (beyond-paper, same methodology)
 # ---------------------------------------------------------------------------
 
@@ -328,11 +592,27 @@ class AttentionPlanner:
             stream = (bq * head_dim + 2 * bkv * head_dim) * in_bytes * 2
         return stream + bq * head_dim * 4 + 2 * bq * 4  # acc + (m, l)
 
+    @staticmethod
+    def kv_blocks_run(q0: int, bq: int, bkv: int, n_kvb: int,
+                      causal: bool, window: int | None) -> int:
+        """KV blocks the kernel's `run` predicate executes for the q block
+        starting at row ``q0`` — the closed-form mirror of the kernel's
+        block-level causal/window skips (validated against the executed
+        walk in core/schedule_sim.simulate_attention_blocks)."""
+        hi = n_kvb - 1
+        if causal:  # kernel: k_start <= q_start + bq - 1
+            hi = min(hi, (q0 + bq - 1) // bkv)
+        lo = 0
+        if window is not None:  # kernel: k_start + bkv - 1 > q_start - window
+            lo = max(0, -(-(q0 - window + 2 - bkv) // bkv))
+        return max(0, hi - lo + 1)
+
     def plan(
         self, *, seq_q: int, seq_kv: int, head_dim: int,
         n_q_heads: int = 1, n_kv_heads: int = 1, batch: int = 1,
         in_bytes: int = 4, block_q: int | None = None,
-        block_kv: int | None = None,
+        block_kv: int | None = None, causal: bool = False,
+        window: int | None = None,
     ) -> Schedule:
         sub = self._SUBLANE
         auto = block_q is None and block_kv is None
@@ -350,19 +630,28 @@ class AttentionPlanner:
         sqp, skvp = round_up(seq_q, bq), round_up(seq_kv, bkv)
         bhq = batch * n_q_heads
         n_qb = sqp // bq
+        n_kvb = skvp // bkv
         # q loads once per row-block; every q block of every *query* head
-        # streams its KV head's whole K and V (the kernel's kv BlockSpec
-        # cycles kb per (h, qb) step, so GQA sharing saves no HBM traffic —
-        # the grid re-fetches per query head).  Causal/window skips reduce
-        # this — the model is the upper bound the planner minimizes.
-        loads = bhq * sqp * head_dim + bhq * n_qb * skvp * head_dim * 2
+        # streams its KV head's K and V blocks that survive the kernel's
+        # block-level causal/window skips — real DMA savings: the kernel's
+        # kv BlockSpec clamps its index into the run range, so skipped grid
+        # steps revisit an adjacent block and the pipeline issues no new
+        # copy (give or take one boundary copy when consecutive q blocks'
+        # ranges touch).  GQA sharing saves no HBM traffic — the grid
+        # re-fetches per query head.  With no mask this degenerates to the
+        # dense n_qb * skvp upper bound.
+        run_blocks = sum(
+            self.kv_blocks_run(qi * bq, bq, bkv, n_kvb, causal, window)
+            for qi in range(n_qb)
+        )
+        loads = bhq * (sqp * head_dim + run_blocks * bkv * head_dim * 2)
         stores = bhq * sqp * head_dim
         return Schedule(
             op=self.op,
-            grid=(bhq, n_qb, skvp // bkv),
+            grid=(bhq, n_qb, n_kvb),
             blocks=(("block_kv", bkv), ("block_q", bq)),
             halo=0,
-            macs=bhq * sqp * skvp * head_dim * 2,
+            macs=bhq * run_blocks * bq * bkv * head_dim * 2,
             loads=loads,
             stores=stores,
             vmem_bytes=self._vmem_bytes(bq, bkv, head_dim, in_bytes),
@@ -372,7 +661,11 @@ class AttentionPlanner:
 
 PLANNERS: dict[str, type] = {
     ConvPlanner.op: ConvPlanner,
+    ConvDgradPlanner.op: ConvDgradPlanner,
+    ConvWgradPlanner.op: ConvWgradPlanner,
     MatmulPlanner.op: MatmulPlanner,
+    MatmulDxPlanner.op: MatmulDxPlanner,
+    MatmulDwPlanner.op: MatmulDwPlanner,
     AttentionPlanner.op: AttentionPlanner,
 }
 

@@ -51,12 +51,29 @@ def pad_dim(x: jax.Array, axis: int, size: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = ()):
+def freeze_schedules(schedules) -> tuple | None:
+    """Normalize a ``{name: Schedule}`` mapping into the hashable
+    sorted-tuple form that ``custom_vjp`` nondiff arguments require
+    (tuples and ``None`` pass through unchanged)."""
+    if schedules is None or isinstance(schedules, tuple):
+        return schedules
+    return tuple(sorted(schedules.items()))
+
+
+def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = (),
+                       bwd_fn: Callable | None = None):
     """``custom_vjp`` wiring shared by every layer module: forward runs the
-    Pallas kernel, backward differentiates the XLA reference composition.
+    Pallas kernel, backward runs ``bwd_fn`` (planned backward kernels) when
+    given, else differentiates the XLA reference composition.
 
     ``nondiff_argnums`` must be the *trailing* positional arguments of
     ``kernel_fn``; ``ref_fn`` takes the same positional arguments.
+    ``bwd_fn`` is called as ``bwd_fn(*diff_args, cotangent, *nondiff_args)``
+    and must return one cotangent per differentiable argument.  Backward
+    Schedules ride as a trailing nondiff argument (``bwd_schedules``,
+    frozen via :func:`freeze_schedules`) so ``bwd_fn`` can honor them —
+    closing the old gap where a user-passed schedule was silently ignored
+    on the backward call because the reference VJP has no schedule knob.
     """
     for i, j in zip(nondiff_argnums, nondiff_argnums[1:]):
         assert j == i + 1, "nondiff_argnums must be contiguous and trailing"
@@ -76,6 +93,8 @@ def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = 
     def bwd(*call):
         n = len(nondiff_argnums)
         nondiff, (res, g) = call[:n], call[n:]
+        if bwd_fn is not None:
+            return tuple(bwd_fn(*res, g, *nondiff))
         _, vjp = jax.vjp(lambda *d: ref_fn(*d, *nondiff), *res)
         return vjp(g)
 
@@ -140,7 +159,11 @@ _OPS: dict[str, PallasOp] = {}
 # `repro.plan` stays importable without (and before) any kernel code.
 _PROVIDERS = {
     "conv2d": "repro.kernels.conv2d.ops",
+    "conv2d_dgrad": "repro.kernels.conv2d.bwd",
+    "conv2d_wgrad": "repro.kernels.conv2d.bwd",
     "matmul": "repro.kernels.matmul.ops",
+    "matmul_dx": "repro.kernels.matmul.bwd",
+    "matmul_dw": "repro.kernels.matmul.bwd",
     "flash_attention": "repro.kernels.flash_attention.ops",
 }
 
@@ -173,6 +196,7 @@ def registered_ops() -> tuple[str, ...]:
 
 
 __all__ = [
-    "PallasOp", "default_interpret", "get_op", "pad_dim", "pallas_op",
-    "planner_for", "registered_ops", "round_up", "with_reference_vjp",
+    "PallasOp", "default_interpret", "freeze_schedules", "get_op", "pad_dim",
+    "pallas_op", "planner_for", "registered_ops", "round_up",
+    "with_reference_vjp",
 ]

@@ -70,8 +70,18 @@ def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, parallel=None):
     if cfg.family == "cnn":
 
         def loss_fn(params, batch):
-            logits = cnn.forward(cfg, params, batch["images"].astype(dt),
-                                 use_kernels=False).astype(jnp.float32)
+            imgs = batch["images"].astype(dt)
+            if tcfg.planned_kernels:
+                # The full planned training step: fused forward kernels plus
+                # the planned dgrad/wgrad/dX/dW backward kernels, every
+                # Schedule pinned by plan_training (cached per shape).
+                logits = cnn.forward(
+                    cfg, params, imgs, use_kernels=True,
+                    schedules=cnn.plan_training(cfg, imgs.shape[0],
+                                                in_bytes=imgs.dtype.itemsize))
+            else:
+                logits = cnn.forward(cfg, params, imgs, use_kernels=False)
+            logits = logits.astype(jnp.float32)
             lse = jax.nn.logsumexp(logits, -1)
             tgt = jnp.take_along_axis(logits, batch["labels"][:, None], -1)[:, 0]
             return (lse - tgt).mean()

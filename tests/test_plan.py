@@ -235,6 +235,66 @@ class TestScheduleProperties:
 
 
 # ---------------------------------------------------------------------------
+# Attention words validation: closed form == executed block walk (ROADMAP)
+# ---------------------------------------------------------------------------
+
+
+class TestAttentionWords:
+    """AttentionPlanner's traffic model vs the schedule_sim block walker —
+    the same closed-form == executed-count pin done for Algs 1-5, with the
+    kernel's causal/window block-level skips included."""
+
+    # Includes seq_q > seq_kv, where a small window leaves trailing q
+    # blocks with zero KV fetches (the kernel's clamped BlockSpec pins one
+    # residual fetch for such blocks — the model's documented +-1 boundary
+    # slack; their rows are defined as zero output, flash_attention.py).
+    CASES = [(256, 256, 64, 64), (120, 200, 32, 48), (8, 2048, 8, 128),
+             (64, 64, 16, 24), (128, 64, 32, 32), (256, 40, 16, 8)]
+
+    @pytest.mark.parametrize("sq,skv,bq,bkv", CASES)
+    @pytest.mark.parametrize("causal,window", [(False, None), (True, None),
+                                               (True, 64), (False, 33),
+                                               (True, 7)])
+    def test_closed_form_matches_walker(self, sq, skv, bq, bkv, causal, window):
+        from repro.core import schedule_sim as sim
+
+        sched = AttentionPlanner(TPU_V5E).plan(
+            seq_q=sq, seq_kv=skv, head_dim=32, n_q_heads=2, n_kv_heads=1,
+            batch=2, in_bytes=4, block_q=bq, block_kv=bkv,
+            causal=causal, window=window)
+        t = sim.simulate_attention_blocks(
+            seq_q=sq, seq_kv=skv, head_dim=32, n_q_heads=2, batch=2,
+            block_q=sched.block("block_q"), block_kv=sched.block("block_kv"),
+            causal=causal, window=window)
+        assert sched.loads == t.main_loads
+        assert sched.stores == t.main_stores
+        assert sched.macs == t.macs
+
+    def test_dense_degenerates_to_upper_bound(self):
+        """No mask -> the original dense closed form (q once per row block,
+        every q block streams the whole padded KV twice)."""
+        sched = AttentionPlanner(TPU_V5E).plan(
+            seq_q=300, seq_kv=300, head_dim=64, n_q_heads=4, n_kv_heads=2,
+            batch=2, in_bytes=4)
+        bq, bkv = sched.block("block_q"), sched.block("block_kv")
+        sqp = -(-300 // bq) * bq
+        skvp = -(-300 // bkv) * bkv
+        bhq = 2 * 4
+        assert sched.loads == bhq * (sqp * 64 + (sqp // bq) * skvp * 64 * 2)
+        assert sched.macs == bhq * sqp * skvp * 64 * 2
+
+    def test_causal_and_window_reduce_words(self):
+        kw = dict(seq_q=512, seq_kv=512, head_dim=32, block_q=64, block_kv=64)
+        p = AttentionPlanner(TPU_V5E)
+        dense = p.plan(**kw)
+        causal = p.plan(**kw, causal=True)
+        windowed = p.plan(**kw, causal=True, window=64)
+        assert dense.loads > causal.loads > windowed.loads
+        assert dense.macs > causal.macs > windowed.macs
+        assert dense.stores == causal.stores == windowed.stores
+
+
+# ---------------------------------------------------------------------------
 # Explicit Schedule round-trips through the kernels (acceptance)
 # ---------------------------------------------------------------------------
 
