@@ -15,6 +15,10 @@
                  wall time + modeled words; BENCH_bwd.json baseline)
   fc_bwd       - planned dX/dW matmul kernels vs jax.grad of the XLA
                  reference (same; shares BENCH_bwd.json)
+  fc_sharded   - sharded FC through the plan layer: psum/ring strategies
+                 executed on the 1-device mesh + the mesh-aware planner's
+                 modeled HBM/ICI split for 4-way and the paper's quadrant
+                 (BENCH_shard.json baseline)
   smoke        - one tiny planner+kernel case per registered op, interpret
                  mode, parity-asserted (scripts/tier1.sh --bench-smoke)
   schedule_sim - closed forms vs executed-schedule word counts
@@ -367,6 +371,65 @@ def bench_fc_bwd(write_baseline: bool = False):
     return rows
 
 
+def bench_fc_sharded(write_baseline: bool = False):
+    """Sharded FC through the plan layer (DESIGN.md Sec. 5).
+
+    Executes the registry's sharded dispatch (psum and ring strategies) on
+    the 1-device host mesh — the degenerate path every strategy must
+    support — and reports the mesh-aware planner's *model* of the real
+    meshes next to it: the 4-way host mesh the --dist-smoke tests force,
+    and the paper's 16-cluster MANTICORE quadrant where the argmin picks
+    Alg 3's ring over Alg 4's psum.  Rows carry hbm/ici modeled words;
+    BENCH_shard.json is the committed baseline.
+    """
+    from repro.core.fc_layer import fc_layer_sharded
+    from repro.core.machine import MANTICORE
+    from repro.core.shard_compat import make_auto_mesh
+    from repro.plan import MatmulPlanner, MeshSpec, get_op
+
+    M, K, N = 32, 4096, 1024
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)) * 0.05, jnp.float32)
+    want = np.asarray(x) @ np.asarray(w)
+    mesh1 = make_auto_mesh((1,), ("model",))
+    op = get_op("matmul")
+
+    rows = []
+    for strategy in ("psum", "ring"):
+        ss1 = op.plan_sharded(x, w, mesh=mesh1, axis="model",
+                              strategy=strategy)
+
+        def run(ss=ss1):
+            with mesh1:
+                return fc_layer_sharded(x, w, mesh1, axis="model",
+                                        schedule=ss)
+
+        err = float(np.abs(np.asarray(run()) - want).max() / np.abs(want).max())
+        t = _time(run)
+        # The modeled 4-way split for the same shapes (what --dist-smoke
+        # executes) — planning only, no devices touched.
+        ss4 = op.plan_sharded(x, w, mesh=MeshSpec((("model", 4),)),
+                              axis="model", strategy=strategy)
+        rows.append((f"fc_sharded_{strategy}", t,
+                     f"maxerr={err:.2e};1dev_strategy={ss1.strategy};"
+                     f"hbm4={ss4.hbm_words};ici4={ss4.ici_words}"))
+
+    # The paper quadrant: the planner's pick and the ring-vs-psum split.
+    quad = MeshSpec((("cluster", 16),))
+    auto = MatmulPlanner(MANTICORE, quad, "cluster").plan(
+        m=32, n=4096, k=25088, in_bytes=4)
+    psum = MatmulPlanner(MANTICORE, quad, "cluster", "psum").plan(
+        m=32, n=4096, k=25088, in_bytes=4)
+    rows.append(("fc_sharded_quadrant_pick", 0.0,
+                 f"strategy={auto.strategy};hbm={auto.hbm_words};"
+                 f"ici={auto.ici_words};psum_hbm={psum.hbm_words};"
+                 f"psum_ici={psum.ici_words};"
+                 f"hbm_saved={psum.hbm_words - auto.hbm_words}"))
+    _write_baseline(rows, "BENCH_shard.json", write_baseline)
+    return rows
+
+
 def bench_smoke():
     """One tiny planner+kernel case per registered op, parity-asserted
     against the op's registered XLA reference (the tier1.sh --bench-smoke
@@ -452,6 +515,7 @@ SECTIONS = {
     "fc_matmul": bench_fc_matmul,
     "conv_bwd": bench_conv_bwd,
     "fc_bwd": bench_fc_bwd,
+    "fc_sharded": bench_fc_sharded,
     "smoke": bench_smoke,
     "roofline": bench_roofline,
 }

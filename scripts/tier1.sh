@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
-# Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [extra pytest args...]
+# Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [--dist-smoke] [extra pytest args...]
 #   --bench-smoke  additionally run one tiny planner+kernel case per
 #                  registered op in interpret mode (benchmarks/run.py smoke)
 #   --grad-smoke   run ONLY the gradient parity harness's fast subset
 #                  (tests/test_backward_plan.py TestGradSmoke) and exit
+#   --dist-smoke   run ONLY the sharded-parity subset (ShardedSchedule
+#                  planning pins + the forced 4-device host-mesh execution
+#                  tests, which set XLA_FLAGS=--xla_force_host_platform_
+#                  device_count=4 in their subprocesses) and exit
 # The default invocation runs the grad-smoke subset first, so backward
 # regressions fail fast before the full suite spins up.
 set -euo pipefail
@@ -12,10 +16,12 @@ cd "$(dirname "$0")/.."
 
 BENCH_SMOKE=0
 GRAD_SMOKE_ONLY=0
-while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" ]]; do
+DIST_SMOKE_ONLY=0
+while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" || "${1:-}" == "--dist-smoke" ]]; do
   case "$1" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --grad-smoke) GRAD_SMOKE_ONLY=1 ;;
+    --dist-smoke) DIST_SMOKE_ONLY=1 ;;
   esac
   shift
 done
@@ -25,8 +31,22 @@ run_grad_smoke() {
     tests/test_backward_plan.py -k TestGradSmoke
 }
 
+run_dist_smoke() {
+  # Sharded-plan model pins (no devices needed) + the multi-device
+  # execution parity tests (each subprocess forces a 4-device host mesh).
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    tests/test_plan.py -k TestShardedPlans
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    tests/test_distributed.py -k "sharded or ring"
+}
+
 if [[ "$GRAD_SMOKE_ONLY" == 1 ]]; then
   run_grad_smoke
+  exit 0
+fi
+
+if [[ "$DIST_SMOKE_ONLY" == 1 ]]; then
+  run_dist_smoke
   exit 0
 fi
 

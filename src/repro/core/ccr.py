@@ -376,6 +376,109 @@ def alg45_max_stack(s: FCShape, machine: MachineModel, precision: str) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Sharded (multi-device) closed forms: the mesh-aware planner's word model
+# ---------------------------------------------------------------------------
+
+
+def tree_reduce_words(n_parts: int, words_each: int) -> int:
+    """Pairwise tree reduction of ``n_parts`` private volumes: each merge
+    reads one full volume over the network — (n_parts - 1) * words_each
+    total (paper Sec. 3.1.3: 127 * D_O * B for 128 clusters).  The closed
+    form behind every psum/batch-contraction ``ici_words`` count."""
+    total = 0
+    live = n_parts
+    while live > 1:
+        merges = live // 2
+        total += merges * words_each
+        live -= merges
+    return total
+
+
+def matmul_block_traffic(*, m: int, n: int, k: int, block_m: int,
+                         block_n: int, block_k: int) -> Traffic:
+    """Closed form of the blocked-matmul grid walk on the padded problem
+    (== schedule_sim.simulate_matmul_blocks): an x block and a w block per
+    (i, j, kk) step, one output block store per (i, j) — i.e. x re-streams
+    once per output stack, w once per m-block, Alg 5's Eqs. (12)-(13) when
+    one m-block covers the batch."""
+    mp = math.ceil(m / block_m) * block_m
+    np_ = math.ceil(n / block_n) * block_n
+    kp = math.ceil(k / block_k) * block_k
+    loads = (np_ // block_n) * mp * kp + (mp // block_m) * kp * np_
+    stores = mp * np_
+    return Traffic(macs=mp * np_ * kp, main_loads=loads, main_stores=stores)
+
+
+def ring_traffic(*, m: int, n: int, k: int, devices: int) -> Traffic:
+    """Alg 3's ring reuse on the FC/matmul mesh (core/ring.py): X is
+    K-sharded, W is N-sharded with full K, and each device multiplies the
+    resident X shard while permuting it to its ring neighbour — so every
+    X word is loaded from main memory exactly once (by its home device)
+    and travels the ring (devices - 1) times, exactly like the paper's
+    DmaLoad from cluster (CID - 1) mod 16.
+
+    Per device: loads = M*K/P (own shard) + K*N/P (its weight columns),
+    stores = M*N/P, interconnect sends = (P-1) * M*K/P.
+    """
+    if devices <= 0 or k % devices or n % devices:
+        raise ValueError(
+            f"ring needs K and N divisible by the mesh: k={k}, n={n}, "
+            f"devices={devices}")
+    k_loc, n_loc = k // devices, n // devices
+    loads = devices * (m * k_loc + k * n_loc)  # == m*k + k*n
+    stores = devices * m * n_loc  # == m*n
+    inter = devices * (devices - 1) * m * k_loc  # == (P-1) * m*k
+    return Traffic(macs=m * n * k, main_loads=loads, main_stores=stores,
+                   intercluster=inter)
+
+
+def fc_psum_traffic(*, m: int, n: int, k: int, devices: int, block_m: int,
+                    block_n: int, block_k: int) -> Traffic:
+    """The sharded FC layer's "psum" strategy (Alg 4 over a mesh axis):
+    every device runs the blocked matmul on its K-shard and the private
+    [M, N] partial outputs merge by tree reduction."""
+    if devices <= 0 or k % devices:
+        raise ValueError(f"psum needs K divisible by the mesh: k={k}, "
+                         f"devices={devices}")
+    local = matmul_block_traffic(m=m, n=n, k=k // devices, block_m=block_m,
+                                 block_n=block_n, block_k=block_k)
+    return Traffic(
+        macs=devices * local.macs,
+        main_loads=devices * local.main_loads,
+        main_stores=devices * local.main_stores,
+        intercluster=tree_reduce_words(devices, m * n),
+    )
+
+
+def conv_sharded_traffic(s: ConvShape, stack: int, h_block: int, *,
+                         devices: int, strategy: str = "batch",
+                         batch: int = 1) -> Traffic:
+    """Sharded strip-tiled conv (forward): pure data parallelism.
+
+    "batch" shards the batch dimension (each device walks the full strip
+    schedule on batch/devices images); "stack" shards output depth (each
+    device owns D_O/devices slices and re-streams the whole input for its
+    stacks).  Neither moves interconnect words in the forward pass — the
+    split matters because the sharded *wgrad* pays the tree reduction.
+    """
+    if strategy == "batch":
+        if batch % devices:
+            raise ValueError(f"batch {batch} not divisible by {devices}")
+        t = alg2_strip_traffic(s, stack, h_block)
+        return Traffic(macs=batch * t.macs, main_loads=batch * t.main_loads,
+                       main_stores=batch * t.main_stores)
+    if strategy == "stack":
+        if s.D_O % devices:
+            raise ValueError(f"D_O {s.D_O} not divisible by {devices}")
+        sl = dataclasses.replace(s, D_O=s.D_O // devices)
+        t = alg2_strip_traffic(sl, min(stack, sl.D_O), h_block)
+        return Traffic(macs=batch * devices * t.macs,
+                       main_loads=batch * devices * t.main_loads,
+                       main_stores=batch * devices * t.main_stores)
+    raise ValueError(strategy)
+
+
+# ---------------------------------------------------------------------------
 # Roofline hook: is the algorithm memory-bound on a machine?
 # ---------------------------------------------------------------------------
 

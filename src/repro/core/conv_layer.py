@@ -37,7 +37,10 @@ from repro.core.machine import MANTICORE, TPU_V5E, machine_named
 from repro.kernels.conv2d.bwd import conv2d_dgrad, conv2d_wgrad
 from repro.kernels.conv2d.ops import conv2d
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref
-from repro.plan import Schedule, freeze_schedules, get_op, with_reference_vjp
+from repro.plan import (
+    Schedule, ShardedSchedule, freeze_schedules, get_op, local_schedule,
+    with_reference_vjp,
+)
 
 # The machine backward schedules are planned (and fit-checked) against.
 _BWD_MACHINE = TPU_V5E
@@ -63,11 +66,11 @@ def _planned_conv_backward(x, f, dy, stride, padding, sd):
     if padding > F - 1:
         return None
     out_hw = (x.shape[-3], x.shape[-2])
-    s_dg = sd.get("dgrad")
+    s_dg = local_schedule(sd.get("dgrad"))  # sharded pins run their local blocking
     if s_dg is None:
         s_dg = get_op("conv2d_dgrad").plan(
             dy, f, stride=stride, padding=padding, out_hw=out_hw)
-    s_wg = sd.get("wgrad")
+    s_wg = local_schedule(sd.get("wgrad"))
     if s_wg is None:
         s_wg = get_op("conv2d_wgrad").plan(
             x, dy, F=F, stride=stride, padding=padding)
@@ -116,12 +119,17 @@ _conv_layer_vjp = with_reference_vjp(
 
 
 def conv_layer(x, f, stride=1, padding=0, strategy="alg2",
-               schedule: Schedule | None = None, bwd_schedules=None):
+               schedule: Schedule | ShardedSchedule | None = None,
+               bwd_schedules=None):
     """x: [B, H, W, D_I] or [H, W, D_I]; f: [F, F, D_I, D_O].
 
-    ``bwd_schedules`` optionally maps {"dgrad"/"wgrad": Schedule} to pin
-    the planned backward kernels' blocking (see :func:`plan_bwd`)."""
-    return _conv_layer_vjp(x, f, stride, padding, strategy, schedule,
+    ``schedule`` accepts either flavor — a ShardedSchedule contributes its
+    per-device local blocking (a single-device mesh plan is exactly
+    today's Schedule).  ``bwd_schedules`` optionally maps
+    {"dgrad"/"wgrad": Schedule} to pin the planned backward kernels'
+    blocking (see :func:`plan_bwd`)."""
+    return _conv_layer_vjp(x, f, stride, padding, strategy,
+                           local_schedule(schedule),
                            freeze_schedules(bwd_schedules))
 
 
@@ -154,7 +162,7 @@ def _conv_block_bwd(x, f, b, g, stride, padding, pool, strategy, schedule,
     # pinned recompute Schedule gets the same fit gate as dgrad/wgrad: if
     # it overflows its machine, drop it and let the planner re-plan a
     # fitting blocking instead of launching a known-oversized kernel.
-    recompute = sd.get("recompute")
+    recompute = local_schedule(sd.get("recompute"))
     if recompute is not None and not recompute.fits(
             machine_named(recompute.machine, _BWD_MACHINE)):
         recompute = None
@@ -197,20 +205,26 @@ def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip",
     overrides the strategy's planner constraints; ``bwd_schedules``
     ({"dgrad"/"wgrad"/"recompute": Schedule}) pins the planned backward.
     """
-    return _conv_block_vjp(x, f, b, stride, padding, pool, strategy, schedule,
+    return _conv_block_vjp(x, f, b, stride, padding, pool, strategy,
+                           local_schedule(schedule),
                            freeze_schedules(bwd_schedules))
 
 
 def plan(
     x_shape, f_shape, *, stride=1, padding=0, pool=1, in_bytes=4,
-    machine=None, strategy="strip",
-) -> Schedule:
+    machine=None, strategy="strip", mesh=None, shard_axis="data",
+    shard_strategy=None,
+):
     """Plan this layer without running it: the Schedule the kernel would
     use for operands of these shapes (report `.modeled_words` next to
-    measured time, or pass it back in via ``schedule=``)."""
+    measured time, or pass it back in via ``schedule=``).  With ``mesh=``
+    the mesh-aware planner returns a ShardedSchedule — the device
+    partitioning ("batch" or "stack" data parallelism over
+    ``shard_axis``, pinnable with ``shard_strategy=``) plus the HBM/ICI
+    word split; a single-device mesh degenerates to today's Schedule."""
     from repro.core.machine import TPU_V5E
     from repro.kernels.conv2d.ops import _fused_pool, conv_out_extent
-    from repro.plan import ConvPlanner
+    from repro.plan import planner_for
 
     machine = machine or TPU_V5E
     batched = len(x_shape) == 4
@@ -222,7 +236,8 @@ def plan(
     fused = _fused_pool(H_O, W_O, pool)
     block_do = 1 if strategy == "alg1" else None
     block_h = H_O if strategy in ("alg2", "alg3") else None
-    return ConvPlanner(machine).plan(
+    return planner_for("conv2d", machine, mesh, shard_axis,
+                       shard_strategy).plan(
         H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
         in_bytes=in_bytes, pool=fused, batch=B, padding=padding,
         H_I=H, W_I=W, block_do=block_do, block_h=block_h,
@@ -231,7 +246,8 @@ def plan(
 
 def plan_bwd(
     x_shape, f_shape, *, stride=1, padding=0, in_bytes=4, machine=None,
-) -> dict[str, Schedule]:
+    mesh=None, shard_axis="data",
+) -> dict:
     """Backward-pass Schedules for this layer's shapes: the dgrad and
     wgrad kernels ``jax.grad`` will run, plus the pre-epilogue recompute
     conv of :func:`conv_block`.  Pass (a subset of) the result back via
@@ -239,9 +255,12 @@ def plan_bwd(
     model the layer's training-step traffic.  Geometries outside the
     dgrad kernel's contract (padding > F-1, where the layer trains via
     the XLA fallback) return only the plannable subset — no "dgrad" key.
+    With ``mesh=`` every entry is a ShardedSchedule: dgrad and the
+    recompute shard with the batch (no collective), while the sharded
+    wgrad charges the Alg-4 tree reduction of dW as ici_words.
     """
     from repro.kernels.conv2d.ops import conv_out_extent
-    from repro.plan import ConvDgradPlanner, ConvPlanner, ConvWgradPlanner
+    from repro.plan import planner_for
 
     machine = machine or _BWD_MACHINE
     batched = len(x_shape) == 4
@@ -251,16 +270,17 @@ def plan_bwd(
     H_O = conv_out_extent(H, padding, F, stride)
     W_O = conv_out_extent(W, padding, F, stride)
     out = {
-        "wgrad": ConvWgradPlanner(machine).plan(
+        "wgrad": planner_for("conv2d_wgrad", machine, mesh, shard_axis).plan(
             H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
             in_bytes=in_bytes, batch=B, padding=padding, H_I=H, W_I=W),
-        "recompute": ConvPlanner(machine).plan(
+        "recompute": planner_for("conv2d", machine, mesh, shard_axis).plan(
             H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
             in_bytes=in_bytes, pool=1, batch=B, padding=padding,
             H_I=H, W_I=W),
     }
     if padding <= F - 1:
-        out["dgrad"] = ConvDgradPlanner(machine).plan(
+        out["dgrad"] = planner_for("conv2d_dgrad", machine, mesh,
+                                   shard_axis).plan(
             H_O=H_O, W_O=W_O, F=F, S=stride, P=padding, d_in=d_in,
             d_out=d_out, in_bytes=in_bytes, batch=B, H_I=H, W_I=W)
     return out

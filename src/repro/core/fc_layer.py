@@ -1,10 +1,13 @@
 """The paper's fully-connected layer as a composable, differentiable module.
 
 Single-device: the Alg 4/5 Pallas kernel (output stacking = block_n, K-loop
-accumulator = the private partial output).  Distributed ("alg4_sharded"):
-the input-depth dimension is sharded over a mesh axis and each device's
-private partial output is combined by one psum — the paper's tree
-reduction, lowered to the ICI collective.
+accumulator = the private partial output).  Distributed: the partitioning
+is a *planner output* — :func:`fc_layer_sharded` resolves a
+:class:`repro.plan.ShardedSchedule` through the ``matmul`` pallas_op and
+the registry's sharded dispatch executes it ("psum": input depth sharded,
+private partial outputs combined by the Alg-4 tree reduction lowered to
+one psum; "ring": Alg 3's neighbour-permute reuse, core/ring.py; the
+planner picks by modeled HBM+ICI words unless ``strategy=`` pins one).
 
 Backward is planned too (DESIGN.md Sec. 4): ``jax.grad`` runs the
 ``matmul_dx`` kernel (dX = dY @ W^T, contraction on N, no W^T in HBM) and
@@ -19,15 +22,16 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import ccr
 from repro.core.machine import MANTICORE, TPU_V5E, machine_named
 from repro.kernels.matmul.bwd import matmul_dw, matmul_dx
 from repro.kernels.matmul.ops import fc_matmul
 from repro.kernels.matmul.ref import fc_matmul_ref
-from repro.plan import Schedule, freeze_schedules, get_op, with_reference_vjp
-from repro.core.shard_compat import shard_map
+from repro.plan import (
+    Schedule, ShardedSchedule, freeze_schedules, get_op, local_schedule,
+    with_reference_vjp,
+)
 
 # The machine backward schedules are planned (and fit-checked) against.
 _BWD_MACHINE = TPU_V5E
@@ -46,8 +50,8 @@ def _fc_ref(x, w, schedule, bwd_schedules):
 def _fc_bwd(x, w, g, schedule, bwd_schedules):
     del schedule
     sd = dict(bwd_schedules or ())
-    s_dx = sd.get("dx") or get_op("matmul_dx").plan(g, w)
-    s_dw = sd.get("dw") or get_op("matmul_dw").plan(x, g)
+    s_dx = local_schedule(sd.get("dx")) or get_op("matmul_dx").plan(g, w)
+    s_dw = local_schedule(sd.get("dw")) or get_op("matmul_dw").plan(x, g)
     # Fit-check each schedule against the machine it was planned for.
     if not (s_dx.fits(machine_named(s_dx.machine, _BWD_MACHINE))
             and s_dw.fits(machine_named(s_dw.machine, _BWD_MACHINE))):
@@ -62,56 +66,75 @@ _fc_layer_vjp = with_reference_vjp(_fc_kernel, _fc_ref, nondiff_argnums=(2, 3),
                                    bwd_fn=_fc_bwd)
 
 
-def fc_layer(x, w, schedule: Schedule | None = None, bwd_schedules=None):
+def fc_layer(x, w, schedule: Schedule | ShardedSchedule | None = None,
+             bwd_schedules=None):
     """x: [..., K]; w: [K, D_O].  Forward = Pallas Alg 4/5 kernel; the
-    MatmulPlanner picks blocks unless an explicit ``schedule`` is given.
+    MatmulPlanner picks blocks unless an explicit ``schedule`` is given
+    (a ShardedSchedule contributes its per-device local blocking).
     ``bwd_schedules`` ({"dx"/"dw": Schedule}) pins the planned backward
     kernels' blocking (see :func:`plan_bwd`)."""
-    return _fc_layer_vjp(x, w, schedule, freeze_schedules(bwd_schedules))
+    return _fc_layer_vjp(x, w, local_schedule(schedule),
+                         freeze_schedules(bwd_schedules))
 
 
-def plan(x_shape, w_shape, *, in_bytes=4, machine=None) -> Schedule:
-    """Plan this layer without running it (see conv_layer.plan)."""
-    from repro.core.machine import TPU_V5E
-    from repro.plan import MatmulPlanner
-
+def _fc_m(x_shape) -> int:
     m = 1
     for d in x_shape[:-1]:
         m *= d
+    return m
+
+
+def plan(x_shape, w_shape, *, in_bytes=4, machine=None, mesh=None,
+         shard_axis="model", strategy=None):
+    """Plan this layer without running it (see conv_layer.plan).  With
+    ``mesh=`` the returned ShardedSchedule also carries the device
+    partitioning and the HBM/ICI word split."""
+    from repro.core.machine import TPU_V5E
+    from repro.plan import planner_for
+
     k, n = w_shape
-    return MatmulPlanner(machine or TPU_V5E).plan(m=m, n=n, k=k, in_bytes=in_bytes)
+    p = planner_for("matmul", machine or TPU_V5E, mesh, shard_axis, strategy)
+    return p.plan(m=_fc_m(x_shape), n=n, k=k, in_bytes=in_bytes)
 
 
-def plan_bwd(x_shape, w_shape, *, in_bytes=4, machine=None) -> dict[str, Schedule]:
+def plan_bwd(x_shape, w_shape, *, in_bytes=4, machine=None, mesh=None,
+             shard_axis="data") -> dict:
     """Backward-pass Schedules for this layer's shapes: the dX and dW
     kernels ``jax.grad`` will run.  Pass back via ``bwd_schedules=`` to
-    pin the blocking."""
-    from repro.plan import MatmulDwPlanner, MatmulDxPlanner
+    pin the blocking.  With ``mesh=`` both come back as ShardedSchedules
+    (dX shards with the batch; dW additionally charges the Alg-4 tree
+    reduction of the weight gradient as ici_words)."""
+    from repro.plan import planner_for
 
     machine = machine or _BWD_MACHINE
-    m = 1
-    for d in x_shape[:-1]:
-        m *= d
+    m = _fc_m(x_shape)
     k, n = w_shape
     return {
-        "dx": MatmulDxPlanner(machine).plan(m=m, n=n, k=k, in_bytes=in_bytes),
-        "dw": MatmulDwPlanner(machine).plan(m=m, n=n, k=k, in_bytes=in_bytes),
+        "dx": planner_for("matmul_dx", machine, mesh, shard_axis).plan(
+            m=m, n=n, k=k, in_bytes=in_bytes),
+        "dw": planner_for("matmul_dw", machine, mesh, shard_axis).plan(
+            m=m, n=n, k=k, in_bytes=in_bytes),
     }
 
 
-def fc_layer_sharded(x, w, mesh, axis: str = "model"):
-    """Alg 4 over a mesh axis: K (input depth) sharded, psum of private
-    partial outputs.  x: [M, K]; w: [K, N]; returns [M, N] replicated."""
+def fc_layer_sharded(x, w, mesh, axis: str = "model",
+                     schedule: ShardedSchedule | None = None,
+                     strategy: str | None = "psum"):
+    """The FC layer across a mesh axis, partitioned by the planner.
 
-    def fn(xl, wl):
-        return jax.lax.psum(xl @ wl, axis)
-
-    return shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(None, axis), P(axis, None)),
-        out_specs=P(None, None),
-        check_vma=False,
-    )(x, w)
+    x: [M, K]; w: [K, N]; returns the global [M, N].  The default pins the
+    paper's Alg 4 ("psum": K sharded, one psum of private partial
+    outputs); ``strategy=None`` lets the mesh-aware MatmulPlanner choose
+    between psum and the Alg-3 ring by modeled HBM+ICI words; an explicit
+    ``schedule`` (from :func:`plan` with ``mesh=``) overrides planning
+    entirely.  Execution goes through the ``matmul`` op's registered
+    sharded impl — the shard_map specs come from ``schedule.partition``.
+    """
+    op = get_op("matmul")
+    if schedule is None:
+        schedule = op.plan_sharded(x, w, mesh=mesh, axis=axis,
+                                   strategy=strategy)
+    return op.sharded(x, w, schedule=schedule, mesh=mesh)
 
 
 def traffic(

@@ -14,17 +14,22 @@ the ICI ring, overlapped with the matmul of the currently-resident shard:
     double-buffered DmaLoad from cluster (CID-1) mod 16.
 
 After P steps every device has accumulated its complete output shard with
-zero all-gather traffic; the only collective is P-1 neighbour permutes.
+zero all-gather traffic; the only collective is P-1 neighbour permutes
+(the loop body permutes P-1 times; the final step's shard is already
+resident — `schedule_sim.simulate_ring` walks exactly this loop).
+
+The partitioning is a *planner output*: :func:`ring_matmul` resolves a
+:class:`~repro.plan.ShardedSchedule` through the ``matmul`` pallas_op
+(``strategy="ring"``) and executes it via the registry's sharded dispatch,
+so the shard_map specs come from ``schedule.partition``, the modeled
+words from ``ccr.ring_traffic``, and nothing here is hand-wired.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-from repro.core.shard_compat import axis_size, shard_map
+from repro.core.shard_compat import axis_size
 
 
 def ring_matmul_local(x_shard, w_cols, axis: str):
@@ -37,26 +42,35 @@ def ring_matmul_local(x_shard, w_cols, axis: str):
     n_loc = w_cols.shape[1]
     perm = [(j, (j + 1) % p) for j in range(p)]
 
+    def w_block(step):
+        src = (idx - step) % p  # which K block is resident this step
+        return jax.lax.dynamic_slice(w_cols, (src * k_loc, 0), (k_loc, n_loc))
+
     def step(i, carry):
         acc, xs = carry
-        src = (idx - i) % p  # which K block is resident this step
-        w_blk = jax.lax.dynamic_slice(w_cols, (src * k_loc, 0), (k_loc, n_loc))
-        acc = acc + jnp.dot(xs, w_blk, preferred_element_type=jnp.float32)
+        acc = acc + jnp.dot(xs, w_block(i), preferred_element_type=jnp.float32)
         xs = jax.lax.ppermute(xs, axis, perm)  # overlapped with next dot
         return acc, xs
 
     acc = jnp.zeros((x_shard.shape[0], n_loc), jnp.float32)
-    acc, _ = jax.lax.fori_loop(0, p, step, (acc, x_shard))
+    # P-1 permute steps, then the last resident shard with no trailing hop
+    # (Alg 3's P-1 loads from cluster (CID-1) mod 16).
+    acc, xs = jax.lax.fori_loop(0, p - 1, step, (acc, x_shard))
+    acc = acc + jnp.dot(xs, w_block(p - 1), preferred_element_type=jnp.float32)
     return acc.astype(x_shard.dtype)
 
 
-def ring_matmul(x, w, mesh, axis: str = "model"):
+def ring_matmul(x, w, mesh, axis: str = "model", schedule=None):
     """O = X @ W with X K-sharded and W N-sharded over ``axis``.
-    x: [M, K]; w: [K, N]; out: [M, N] N-sharded."""
-    fn = functools.partial(ring_matmul_local, axis=axis)
-    return shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(None, axis), P(None, axis)),
-        out_specs=P(None, axis),
-        check_vma=False,
-    )(x, w)
+    x: [M, K]; w: [K, N]; out: [M, N] N-sharded.
+
+    ``schedule`` (a ShardedSchedule) pins the partitioning; by default the
+    mesh-aware MatmulPlanner plans it with the ring strategy pinned.
+    """
+    from repro.plan import get_op
+
+    op = get_op("matmul")
+    if schedule is None:
+        schedule = op.plan_sharded(x, w, mesh=mesh, axis=axis,
+                                   strategy="ring")
+    return op.sharded(x, w, schedule=schedule, mesh=mesh)

@@ -206,17 +206,75 @@ def simulate_attention_blocks(
     return Traffic(macs=macs, main_loads=loads, main_stores=stores)
 
 
-def _tree_reduce_words(n_parts: int, words_each: int) -> int:
-    """Pairwise tree reduction of ``n_parts`` private volumes: each merge
-    reads one full volume over the network (paper Sec. 3.1.3: 127*D_O*B for
-    128 clusters)."""
-    total = 0
-    live = n_parts
-    while live > 1:
-        merges = live // 2
-        total += merges * words_each
-        live -= merges
-    return total
+# The tree-reduction closed form lives in ccr (the planners charge it as
+# ici_words); keep the old private name for the Alg 4/5 walkers below.
+from repro.core.ccr import tree_reduce_words as _tree_reduce_words  # noqa: E402
+
+
+def simulate_ring(*, m: int, n: int, k: int, devices: int) -> Traffic:
+    """Walk core/ring.py's Alg-3 ring schedule device by device: each
+    device loads its own X shard [m, k/P] and its full-K weight columns
+    [k, n/P] from main memory, then runs P multiply steps, permuting the
+    resident shard to its ring neighbour after each of the first P-1
+    (the last step's shard is already resident — Alg 3's P-1 hops)."""
+    if devices <= 0 or k % devices or n % devices:  # as ccr.ring_traffic
+        raise ValueError(
+            f"ring needs K and N divisible by the mesh: k={k}, n={n}, "
+            f"devices={devices}")
+    k_loc, n_loc = k // devices, n // devices
+    loads = stores = macs = inter = 0
+    for _dev in range(devices):
+        loads += m * k_loc  # DmaLoad of the device's own input shard
+        loads += k * n_loc  # full-K weight columns for its output shard
+        for step in range(devices):
+            macs += m * n_loc * k_loc  # resident shard @ matching W rows
+            if step < devices - 1:
+                inter += m * k_loc  # ppermute to ring neighbour
+        stores += m * n_loc  # its N-shard of the output
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores,
+                   intercluster=inter)
+
+
+def simulate_fc_psum(*, m: int, n: int, k: int, devices: int, block_m: int,
+                     block_n: int, block_k: int) -> Traffic:
+    """Walk the sharded FC "psum" strategy: every device executes the
+    blocked-matmul grid on its K-shard (simulate_matmul_blocks), then the
+    private [m, n] partial outputs merge by pairwise tree reduction.
+    Devices are symmetric, so one device's grid is walked and scaled."""
+    t = simulate_matmul_blocks(m, n, k // devices, block_m, block_n,
+                               block_k)
+    inter = _tree_reduce_words(devices, m * n)
+    return Traffic(macs=devices * t.macs, main_loads=devices * t.main_loads,
+                   main_stores=devices * t.main_stores, intercluster=inter)
+
+
+def simulate_sharded_conv_strip(s: ConvShape, stack: int, h_block: int, *,
+                                devices: int, strategy: str = "batch",
+                                batch: int = 1) -> Traffic:
+    """Walk the sharded strip-tiled conv forward: under "batch" each device
+    runs the full simulate_alg2_strip nest on its batch/devices images;
+    under "stack" each device owns D_O/devices output slices and walks the
+    nest on that local depth.  No interconnect words move (forward data
+    parallelism; the backward wgrad pays the tree reduction).  One
+    (device, image) nest is walked and scaled — every iteration of the
+    symmetric outer loops is identical."""
+    import dataclasses as _dc
+
+    if strategy == "batch":
+        if batch % devices:
+            raise ValueError(f"batch {batch} not divisible by {devices}")
+        t = simulate_alg2_strip(s, stack, h_block)
+        n = batch  # devices * (batch // devices) identical image walks
+    elif strategy == "stack":
+        if s.D_O % devices:
+            raise ValueError(f"D_O {s.D_O} not divisible by {devices}")
+        sl = _dc.replace(s, D_O=s.D_O // devices)
+        t = simulate_alg2_strip(sl, min(stack, sl.D_O), h_block)
+        n = devices * batch
+    else:
+        raise ValueError(strategy)
+    return Traffic(macs=n * t.macs, main_loads=n * t.main_loads,
+                   main_stores=n * t.main_stores)
 
 
 def simulate_alg4(s: FCShape, clusters: int = 128) -> Traffic:

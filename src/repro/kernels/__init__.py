@@ -3,20 +3,18 @@
 # kernel. Leave this package empty if the paper has none.
 #
 # Every kernel here is registered behind the repro.plan scheduling layer
-# (Schedule/Planner/pallas_op); choose_* are deprecated planner shims.
+# (Schedule/Planner/pallas_op; blocking AND device partitioning come from
+# the planners — the old choose_* shims are gone).
 # Re-exports are lazy (PEP 562) so importing one kernel package — e.g. via
 # repro.plan.get_op("conv2d") — does not pull in the other two.  The
 # callables `conv2d` and `flash_attention` are NOT re-exported here (those
 # names are this package's subpackages); import them from
 # repro.kernels.conv2d / repro.kernels.flash_attention.
 _EXPORTS = {
-    "choose_schedule": "repro.kernels.conv2d.ops",
-    "choose_stack": "repro.kernels.conv2d.ops",
     "conv2d_op": "repro.kernels.conv2d.ops",
     "conv2d_fused_ref": "repro.kernels.conv2d.ref",
     "conv2d_ref": "repro.kernels.conv2d.ref",
     "maxpool_ref": "repro.kernels.conv2d.ref",
-    "choose_blocks": "repro.kernels.matmul.ops",
     "fc_matmul": "repro.kernels.matmul.ops",
     "matmul_op": "repro.kernels.matmul.ops",
     "fc_matmul_ref": "repro.kernels.matmul.ref",

@@ -6,5 +6,5 @@ from repro.kernels.conv2d.bwd import (
     dgrad_op,
     wgrad_op,
 )
-from repro.kernels.conv2d.ops import choose_schedule, choose_stack, conv2d, conv2d_op
+from repro.kernels.conv2d.ops import conv2d, conv2d_op
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref

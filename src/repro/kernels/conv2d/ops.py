@@ -6,8 +6,9 @@ that gives Delta_O <= 24/12 on Manticore in core/ccr.py): pass nothing and
 the planner trades strip height against output-channel stacking by modeled
 main-memory words; pass ``block_*`` to pin individual blocks; or pass a
 full explicit :class:`repro.plan.Schedule` to override the planner
-entirely (``schedule=``).  ``choose_schedule``/``choose_stack`` survive
-only as deprecated shims over the planner for old callers.
+entirely (``schedule=``).  The registered ``sharded_impl`` executes the
+mesh-aware planner's data-parallel strategies ("batch"/"stack") from a
+:class:`repro.plan.ShardedSchedule`, specs read off its partition.
 """
 
 from __future__ import annotations
@@ -18,9 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.machine import TPU_V5E, MachineModel
+from repro.core.shard_compat import shard_map
 from repro.kernels.conv2d.conv2d import conv2d_fused_pallas, conv2d_pallas  # noqa: F401
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref  # noqa: F401
-from repro.plan import ConvPlanner, Schedule, pad_dim, pallas_op
+from repro.plan import ConvPlanner, Schedule, pad_dim, pallas_op, partition_specs
 from repro.plan.planners import round_up as _round_up
 
 _LANE = 128
@@ -122,12 +124,42 @@ def _impl(
     )
 
 
+def _sharded_impl(x, f, bias, *, schedule, mesh, out_dtype, interpret,
+                  stride=1, padding=0, relu=False, pool=1,
+                  block_do=None, block_di=None, block_h=None):
+    """Data-parallel conv from a ShardedSchedule: "batch" shards images,
+    "stack" shards output channels (each device runs the planned local
+    kernel on its shard); no interconnect traffic either way — the specs
+    come from ``schedule.partition``, the blocking from the per-device
+    local Schedule."""
+    del block_do, block_di, block_h  # consumed by the planner
+    if schedule.strategy not in ("batch", "stack"):
+        raise NotImplementedError(
+            f"conv2d sharded strategy {schedule.strategy!r}")
+    *in_specs, out_spec = partition_specs(schedule)
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+
+    def fn(xl, fl, bl):
+        return _conv2d_impl(
+            xl, fl, bl, stride=stride, padding=padding, relu=relu,
+            pool=int(pool), schedule=schedule.schedule, out_dtype=out_dtype,
+            interpret=interpret,
+        )
+
+    out = shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=out_spec, check_vma=False)(x, f, bias)
+    return out if batched else out[0]
+
+
 conv2d_op = pallas_op(
     "conv2d",
     planner=ConvPlanner,
     shape_args=_shape_args,
     impl=_impl,
     reference=conv2d_fused_ref,
+    sharded_impl=_sharded_impl,
 )
 
 
@@ -167,37 +199,3 @@ def conv2d(
         stride=stride, padding=padding, relu=relu, pool=int(pool or 1),
         block_do=block_do, block_di=block_di, block_h=block_h,
     )
-
-
-# ---------------------------------------------------------------------------
-# Deprecated shims (pre-plan API); kernels obtain blocking via repro.plan.
-# ---------------------------------------------------------------------------
-
-
-def choose_schedule(
-    H_O: int, W_O: int, F: int, S: int, d_in: int, d_out: int,
-    in_bytes: int = 2, block_di: int = _LANE, pool: int = 1,
-    machine: MachineModel = TPU_V5E,
-) -> tuple[int, int]:
-    """Deprecated: use ``repro.plan.ConvPlanner``.  Returns the planner's
-    (block_h, block_do) for the given shapes."""
-    s = ConvPlanner(machine).plan(
-        H_O=H_O, W_O=W_O, F=F, S=S, d_in=d_in, d_out=d_out,
-        in_bytes=in_bytes, block_di=block_di, pool=pool,
-    )
-    return s.block("block_h"), s.block("block_do")
-
-
-def choose_stack(
-    H_O: int, W_O: int, W_Ipad: int, F: int, d_out: int,
-    in_bytes: int = 2, block_di: int = _LANE,
-    machine: MachineModel = TPU_V5E,
-) -> int:
-    """Deprecated: use ``repro.plan.ConvPlanner`` with a pinned full-plane
-    ``block_h`` (the legacy Delta_O-only rule, Sec. 2.2.2)."""
-    del W_Ipad  # implied by (H_O, W_O, F) at stride 1
-    s = ConvPlanner(machine).plan(
-        H_O=H_O, W_O=W_O, F=F, S=1, d_in=block_di, d_out=d_out,
-        in_bytes=in_bytes, block_di=block_di, block_h=H_O,
-    )
-    return s.block("block_do")

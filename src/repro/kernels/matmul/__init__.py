@@ -6,5 +6,5 @@ from repro.kernels.matmul.bwd import (
     matmul_dx,
     matmul_dx_ref,
 )
-from repro.kernels.matmul.ops import choose_blocks, fc_matmul, matmul_op
+from repro.kernels.matmul.ops import fc_matmul, matmul_op
 from repro.kernels.matmul.ref import fc_matmul_ref

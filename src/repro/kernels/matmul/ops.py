@@ -4,7 +4,10 @@ the ``repro.plan`` scheduling layer.
 Blocks come from :class:`repro.plan.MatmulPlanner`: the paper's capacity
 argument (Sec. 3.1.2) maximizing the output stack (block_n, the Delta_O
 analogue) subject to the working set + double-buffers fitting local
-memory.  ``choose_blocks`` survives only as a deprecated shim.
+memory.  The registered ``sharded_impl`` executes the planner's
+multi-device strategies (Alg 4's psum tree, Alg 3's ring) from a
+:class:`repro.plan.ShardedSchedule` — shard_map specs come from the
+schedule's partition, never from the call site.
 """
 
 from __future__ import annotations
@@ -12,11 +15,16 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.machine import TPU_V5E, MachineModel
+from repro.core.ring import ring_matmul_local
+from repro.core.shard_compat import shard_map
 from repro.kernels.matmul.matmul import matmul_pallas
 from repro.kernels.matmul.ref import fc_matmul_ref  # noqa: F401
-from repro.plan import MatmulPlanner, Schedule, pad_dim, pallas_op
+from repro.plan import (
+    MatmulPlanner, Schedule, pad_dim, pallas_op, partition_specs,
+)
 from repro.plan.planners import round_up as _round_up
 
 _LANE = 128
@@ -61,12 +69,59 @@ def _impl(x, w, *, schedule, out_dtype, interpret,
     )
 
 
+def _sharded_impl(x, w, *, schedule, mesh, out_dtype, interpret,
+                  block_m=None, block_n=None, block_k=None):
+    """Run a ShardedSchedule's multi-device strategy: every spec below is
+    read off ``schedule.partition`` — the planner owns the partitioning.
+
+      * "psum": K sharded, each device runs the *planned local kernel* on
+        its shard, private partial outputs merge by one psum (Alg 4's tree
+        reduction lowered to the collective);
+      * "ring": Alg 3's ring reuse (core/ring.py) — the resident X shard
+        permutes around the mesh axis while each device's full-K weight
+        columns stay put.
+    """
+    del block_m, block_n, block_k  # consumed by the planner
+    *in_specs, out_spec = partition_specs(schedule)
+    axis = schedule.axis
+    if schedule.strategy == "psum":
+
+        def fn(xl, wl):
+            # The per-device compute is the planned *layer* (custom_vjp:
+            # Pallas forward, planned dX/dW backward) so jax.grad through
+            # the sharded call stays on planned kernels — the raw kernel
+            # has no JVP rule to differentiate through.
+            from repro.core.fc_layer import fc_layer
+
+            yl = fc_layer(xl, wl, schedule=schedule.schedule)
+            return jax.lax.psum(yl.astype(jnp.float32), axis).astype(out_dtype)
+
+    elif schedule.strategy == "ring":
+
+        def fn(xl, wl):
+            return ring_matmul_local(xl, wl, axis=axis).astype(out_dtype)
+
+    elif schedule.strategy == "batch":
+
+        def fn(xl, wl):
+            from repro.core.fc_layer import fc_layer
+
+            return fc_layer(xl, wl, schedule=schedule.schedule).astype(out_dtype)
+
+    else:
+        raise NotImplementedError(
+            f"matmul sharded strategy {schedule.strategy!r}")
+    return shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=out_spec, check_vma=False)(x, w)
+
+
 matmul_op = pallas_op(
     "matmul",
     planner=MatmulPlanner,
     shape_args=_shape_args,
     impl=_impl,
     reference=fc_matmul_ref,
+    sharded_impl=_sharded_impl,
 )
 
 
@@ -93,16 +148,3 @@ def fc_matmul(
         out_dtype=out_dtype or x.dtype,
         block_m=block_m, block_n=block_n, block_k=block_k,
     )
-
-
-def choose_blocks(
-    m: int,
-    n: int,
-    k: int,
-    in_bytes: int = 2,
-    machine: MachineModel = TPU_V5E,
-) -> tuple[int, int, int]:
-    """Deprecated: use ``repro.plan.MatmulPlanner``.  Returns the planner's
-    (block_m, block_n, block_k)."""
-    s = MatmulPlanner(machine).plan(m=m, n=n, k=k, in_bytes=in_bytes)
-    return s.block("block_m"), s.block("block_n"), s.block("block_k")

@@ -27,3 +27,15 @@ def make_ctx(mesh=None, *, multi_pod: bool = False) -> ParallelCtx:
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for 8-virtual-device tests."""
     return make_auto_mesh(shape, axes)
+
+
+def production_mesh_spec(*, multi_pod: bool = False):
+    """The production mesh as a ``repro.plan.MeshSpec`` — lets the
+    mesh-aware planners model the 16x16 (or 2x16x16) partitioning without
+    allocating a single jax device (same no-device-state discipline as the
+    dry-run)."""
+    from repro.plan import MeshSpec
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return MeshSpec(axes=tuple(zip(axes, shape)))

@@ -34,7 +34,7 @@ from repro.configs.registry import get_config, smoke_config
 from repro.data.pipeline import ShardInfo, SyntheticImageSource, SyntheticSource
 from repro.models import cnn
 from repro.models.module import abstract_params, init_params, param_specs
-from repro.models.registry import get_family
+from repro.models.registry import batch_shard_specs, get_family
 from repro.optim import adamw
 from repro.runtime import train as tr
 from repro.runtime.fault_tolerance import Heartbeat, Monitor, StragglerWatchdog
@@ -152,15 +152,25 @@ def main() -> None:
                 v=jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs)),
             err=None)
         dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-        if cfg.family == "cnn":
-            bspec = {"images": NamedSharding(mesh, P(dp, None, None, None)),
-                     "labels": NamedSharding(mesh, P(dp))}
-        else:
-            bspec = {k: NamedSharding(mesh, P(dp, None))
-                     for k in ("tokens", "labels")}
+        # The family registry owns the batch sharding spec (cnn shards its
+        # image batch, token families their token batch) — no family
+        # branching in the launcher.
+        bspec = {k: NamedSharding(mesh, s)
+                 for k, s in batch_shard_specs(cfg, dp).items()}
         step_fn = jax.jit(step_fn, in_shardings=(sstate, bspec))
     else:
         step_fn = jax.jit(step_fn)
+
+    if cfg.family == "cnn" and use_sharding:
+        # The mesh-aware planners' model of this run: every stage's device
+        # partitioning plus the step's words split HBM vs interconnect
+        # (the sharded wgrad/dw entries carry the gradient all-reduce).
+        splan = cnn.plan_training(cfg, args.batch, mesh=ctx.plan_mesh(),
+                                  shard_axis=dp_axes[-1])
+        hbm = sum(s.hbm_words for s in splan.values())
+        ici = sum(s.ici_words for s in splan.values())
+        print(f"sharded plan: {len(splan)} kernels | modeled step words "
+              f"hbm={hbm} ici={ici}")
 
     hb = wd = mon = None
     if args.ckpt:

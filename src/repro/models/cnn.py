@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.conv_layer import conv_block
@@ -56,6 +57,15 @@ def param_defs(cfg: ModelConfig) -> dict:
             defs[name] = ParamDef(w_shape, spec)
             defs[f"{name}_b"] = ParamDef((w_shape[1],), (None,), init="zeros")
     return defs
+
+
+def batch_shard_specs(dp) -> dict:
+    """Family-registry hook: how this family's batch shards over the data
+    axes (``dp`` is an axis name or tuple).  Images shard their batch
+    dimension — the same "batch" partition the mesh-aware ConvPlanner
+    emits for every conv stage (plan_forward(..., mesh=)) — so the
+    launcher needs no family special-casing."""
+    return {"images": P(dp, None, None, None), "labels": P(dp)}
 
 
 def _bwd_for(sched: dict, stage: str) -> dict | None:
@@ -106,12 +116,16 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
 
 
 def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
-                 machine=None) -> dict:
+                 machine=None, mesh=None, shard_axis: str = "data") -> dict:
     """Plan every kernel launch of :func:`forward` without running it.
 
     Returns {stage name: Schedule} — pass back in via ``schedules=`` to pin
     the blocking, or sum ``.modeled_words`` to connect the whole model's
     planned traffic to analysis/roofline.py (repro.plan.to_roofline).
+    With ``mesh=`` every stage comes back as a ShardedSchedule (the conv
+    stages shard the batch over ``shard_axis``, the FC stages pick their
+    psum/ring/single dataflow by modeled words) — ``forward`` consumes
+    either flavor, a 1-device mesh reproducing today's plans exactly.
     """
     from repro.core import conv_layer as cl
     from repro.core import fc_layer as fl
@@ -120,32 +134,40 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     for name, x_shape, w_shape in _stage_geometry(cfg, batch):
         if name.startswith("conv"):
             out[name] = cl.plan(x_shape, w_shape, stride=1, padding=F // 2,
-                                pool=2, in_bytes=in_bytes, machine=machine)
+                                pool=2, in_bytes=in_bytes, machine=machine,
+                                mesh=mesh, shard_axis=shard_axis)
         else:
             out[name] = fl.plan(x_shape, w_shape, in_bytes=in_bytes,
-                                machine=machine)
+                                machine=machine, mesh=mesh,
+                                shard_axis=shard_axis)
     return out
 
 
 def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
-                  machine=None) -> dict:
+                  machine=None, mesh=None, shard_axis: str = "data") -> dict:
     """:func:`plan_forward` plus every backward kernel ``jax.grad`` runs:
     "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" for conv stages,
     "<stage>.dx"/"<stage>.dw" for FC stages.  Pass the result via
     ``schedules=`` so the whole training step executes pinned planned
     kernels; sum ``.modeled_words`` for the step's modeled HBM traffic.
+    With ``mesh=`` the wgrad/dw entries additionally charge the gradient
+    all-reduce (Alg 4's tree reduction) as ``ici_words`` — the modeled
+    cost of data-parallel training, split HBM vs interconnect.
     """
     from repro.core import conv_layer as cl
     from repro.core import fc_layer as fl
 
-    out = plan_forward(cfg, batch, in_bytes=in_bytes, machine=machine)
+    out = plan_forward(cfg, batch, in_bytes=in_bytes, machine=machine,
+                       mesh=mesh, shard_axis=shard_axis)
     for name, x_shape, w_shape in _stage_geometry(cfg, batch):
         if name.startswith("conv"):
             bwd = cl.plan_bwd(x_shape, w_shape, stride=1, padding=F // 2,
-                              in_bytes=in_bytes, machine=machine)
+                              in_bytes=in_bytes, machine=machine, mesh=mesh,
+                              shard_axis=shard_axis)
         else:
             bwd = fl.plan_bwd(x_shape, w_shape, in_bytes=in_bytes,
-                              machine=machine)
+                              machine=machine, mesh=mesh,
+                              shard_axis=shard_axis)
         for k, s in bwd.items():
             out[f"{name}.{k}"] = s
     return out

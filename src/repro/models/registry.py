@@ -1,9 +1,17 @@
 """Model-family registry: family name -> module implementing
-param_defs / forward / logits / init_cache / layer_meta."""
+param_defs / forward / logits / init_cache / layer_meta.
+
+The cnn family (the paper's own domain) is registered too: it implements
+the core protocol subset it needs (param_defs / forward) plus the
+family-registry hooks the launcher dispatches on — currently
+``batch_shard_specs`` (how the family's batch pytree shards over the data
+axes), the first step of making cnn fully first-class (ROADMAP)."""
 
 from __future__ import annotations
 
-from repro.models import encdec, moe, rwkv6, transformer, zamba2
+from jax.sharding import PartitionSpec as P
+
+from repro.models import cnn, encdec, moe, rwkv6, transformer, zamba2
 
 FAMILIES = {
     "dense": transformer,
@@ -11,6 +19,7 @@ FAMILIES = {
     "rwkv6": rwkv6,
     "zamba2": zamba2,
     "encdec": encdec,
+    "cnn": cnn,
 }
 
 
@@ -19,3 +28,17 @@ def get_family(name: str):
         return FAMILIES[name]
     except KeyError:
         raise ValueError(f"unknown model family {name!r}; have {list(FAMILIES)}") from None
+
+
+def batch_shard_specs(cfg, dp) -> dict:
+    """The family's batch sharding specs over the data axes ``dp`` (an
+    axis name or tuple).  Families provide a ``batch_shard_specs(dp)``
+    hook (models/cnn.py does — images shard their batch dim, matching the
+    sharded ConvPlanner's "batch" partition); token families fall back to
+    the LM default.  launch/train.py dispatches here instead of branching
+    on the family name."""
+    fam = FAMILIES.get(cfg.family)
+    hook = getattr(fam, "batch_shard_specs", None) if fam else None
+    if hook is not None:
+        return hook(dp)
+    return {k: P(dp, None) for k in ("tokens", "labels")}

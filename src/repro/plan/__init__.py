@@ -4,7 +4,11 @@ One `Schedule` dataclass (grid, blocks, halo, modeled HBM words, VMEM
 working set), one `Planner` protocol with per-op implementations that
 encode the paper's capacity argument against a `MachineModel` (MANTICORE
 or TPU_V5E), and one `pallas_op` registry that owns the wrapper
-boilerplate.  See DESIGN.md Sec. 3.
+boilerplate.  Planners constructed with a `MeshSpec` additionally emit
+`ShardedSchedule`s: the device partitioning (Alg 3's ring, Alg 4's psum,
+batch/stack data parallelism) becomes a planner output with the modeled
+words split into per-mesh HBM and interconnect counts.  See DESIGN.md
+Secs. 3-5.
 """
 
 from repro.plan.planners import (
@@ -17,6 +21,7 @@ from repro.plan.planners import (
     MatmulDxPlanner,
     MatmulPlanner,
     Planner,
+    ShardablePlanner,
     conv_strip_words,
     conv_wgrad_words,
     planner_for,
@@ -32,6 +37,14 @@ from repro.plan.registry import (
     with_reference_vjp,
 )
 from repro.plan.schedule import Blocks, Schedule, to_roofline
+from repro.plan.sharded import (
+    MeshSpec,
+    ShardCandidate,
+    ShardedSchedule,
+    local_schedule,
+    mesh_spec,
+    partition_specs,
+)
 
 __all__ = [
     "AttentionPlanner",
@@ -42,17 +55,24 @@ __all__ = [
     "MatmulDwPlanner",
     "MatmulDxPlanner",
     "MatmulPlanner",
+    "MeshSpec",
     "PLANNERS",
     "PallasOp",
     "Planner",
     "Schedule",
+    "ShardCandidate",
+    "ShardablePlanner",
+    "ShardedSchedule",
     "conv_strip_words",
     "conv_wgrad_words",
     "default_interpret",
     "freeze_schedules",
     "get_op",
+    "local_schedule",
+    "mesh_spec",
     "pad_dim",
     "pallas_op",
+    "partition_specs",
     "planner_for",
     "registered_ops",
     "to_roofline",

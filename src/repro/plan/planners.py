@@ -24,8 +24,10 @@ from __future__ import annotations
 import dataclasses
 from typing import ClassVar, Protocol, runtime_checkable
 
+from repro.core import ccr
 from repro.core.machine import TPU_V5E, MachineModel
 from repro.plan.schedule import Schedule
+from repro.plan.sharded import MeshSpec, ShardCandidate, ShardedSchedule
 
 
 def round_up(x: int, m: int) -> int:
@@ -38,13 +40,92 @@ def _align_down(x: int, m: int) -> int:
 
 @runtime_checkable
 class Planner(Protocol):
-    """The planner contract: shapes in, one best Schedule out."""
+    """The planner contract: shapes in, one best Schedule out (a
+    ShardedSchedule when the planner was constructed with a mesh)."""
 
     op: ClassVar[str]
     machine: MachineModel
 
     def plan(self, **shape) -> Schedule:  # pragma: no cover - protocol
         ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardablePlanner:
+    """Shared planner base: a machine, an optional mesh, and the sharded
+    argmin.
+
+    With ``mesh=None`` (the default) ``plan`` is the single-device
+    capacity argument unchanged.  With a mesh, ``plan`` returns a
+    :class:`~repro.plan.sharded.ShardedSchedule`: the op's partition
+    candidates (:meth:`_shard_candidates`, e.g. batch/stack for conv,
+    psum/ring for matmul) are each planned locally on their per-device
+    shapes, their mesh-total words split into HBM and interconnect, and
+    the candidate with the fewest total modeled words wins — the paper's
+    capacity argument, extended with a mesh axis.  ``strategy=`` pins one
+    candidate the way ``block_*`` pins pin a block.  A single-device mesh
+    degenerates to today's Schedule inside a trivial wrapper.
+    """
+
+    machine: MachineModel = TPU_V5E
+    mesh: MeshSpec | None = None
+    shard_axis: str = "model"
+    strategy: str | None = None
+
+    def plan(self, **shape):
+        if self.mesh is None:
+            return self.plan_local(**shape)
+        return self.plan_sharded(**shape)
+
+    def plan_local(self, **shape) -> Schedule:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    @property
+    def shard_group(self) -> int:
+        """Extent of the partitioned mesh axis (1 when the mesh lacks it —
+        the degenerate replicated case)."""
+        if self.mesh is None or self.shard_axis not in self.mesh.axis_names:
+            return 1
+        return self.mesh.axis_size(self.shard_axis)
+
+    def _shard_candidates(self, group: int, **shape) -> list[ShardCandidate]:
+        """Partitionings this op can run; overridden per planner.  The
+        base offers only full replication, so any op degenerates safely."""
+        del group, shape
+        return [ShardCandidate(strategy="single", local_shape={}, partition=())]
+
+    def plan_sharded(self, **shape) -> ShardedSchedule:
+        assert self.mesh is not None, "plan_sharded needs a mesh-bound planner"
+        group = self.shard_group
+        local_planner = dataclasses.replace(self, mesh=None, strategy=None)
+        # A 1-wide shard group has nothing to partition: every strategy
+        # degenerates to "single", so a pin is satisfied vacuously (the
+        # promised single-device degeneracy of sharded call sites).
+        pin = self.strategy if group > 1 else None
+        best = None
+        for cand in self._shard_candidates(group, **shape):
+            if pin is not None and cand.strategy != pin:
+                continue
+            local = local_planner.plan(**{**shape, **cand.local_shape})
+            if cand.hbm_override is not None:
+                loads, stores = cand.hbm_override
+            else:
+                loads, stores = group * local.loads, group * local.stores
+            macs = (cand.macs_override if cand.macs_override is not None
+                    else group * local.macs)
+            ss = ShardedSchedule(
+                schedule=local, mesh=self.mesh, axis=self.shard_axis,
+                strategy=cand.strategy, partition=cand.partition,
+                hbm_loads=loads, hbm_stores=stores,
+                ici_words=cand.ici_words, macs=macs,
+            )
+            if best is None or ss.modeled_words < best.modeled_words:
+                best = ss
+        if best is None:
+            raise ValueError(
+                f"no {self.strategy!r} partitioning of {self.op!r} over mesh "
+                f"axis {self.shard_axis!r} (group={group}) fits shapes {shape}")
+        return best
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +161,7 @@ def conv_strip_words(
 
 
 @dataclasses.dataclass(frozen=True)
-class ConvPlanner:
+class ConvPlanner(ShardablePlanner):
     """Picks (block_h, block_do, block_di) for the strip-tiled conv kernel.
 
     Candidate strips are H_O and its power-of-two fractions (rounded up to
@@ -88,9 +169,12 @@ class ConvPlanner:
     whose working set fits is considered; the (strip, stack) pair with the
     fewest modeled words wins, ties toward taller strips (less halo
     re-streaming) — the paper's Delta_O argument, two-dimensional.
+
+    On a mesh the forward conv shards as pure data parallelism: "batch"
+    (each device convolves batch/P images) or "stack" (each device owns
+    D_O/P output slices), no interconnect words either way.
     """
 
-    machine: MachineModel = TPU_V5E
     op: ClassVar[str] = "conv2d"
 
     _BDO_CAP: ClassVar[int] = 2048
@@ -135,7 +219,29 @@ class ConvPlanner:
         bdo = _align_down((budget - fixed) // per_bdo, lane) if budget > fixed else 0
         return min(bdo, self._BDO_CAP, round_up(d_out, lane))
 
-    def plan(
+    def _shard_candidates(self, group: int, *, d_out: int, batch: int = 1,
+                          **shape) -> list[ShardCandidate]:
+        # "single" (replicated compute) is never cheaper than a partition
+        # that applies — and with sharded inputs it would need an unmodeled
+        # all-gather — so it is only the fallback when nothing divides.
+        del shape
+        ax = self.shard_axis
+        rep4 = (None, None, None, None)
+        cands = []
+        if group > 1 and batch % group == 0:
+            cands.append(ShardCandidate(
+                "batch", {"batch": batch // group},
+                ((ax, None, None, None), rep4, (None,),
+                 (ax, None, None, None))))
+        if group > 1 and d_out % group == 0:
+            cands.append(ShardCandidate(
+                "stack", {"d_out": d_out // group},
+                (rep4, (None, None, None, ax), (ax,),
+                 (None, None, None, ax))))
+        return cands or [
+            ShardCandidate("single", {}, (rep4, rep4, (None,), rep4))]
+
+    def plan_local(
         self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int, d_out: int,
         in_bytes: int = 2, block_di: int | None = None, pool: int = 1,
         batch: int = 1, padding: int | None = None,
@@ -236,7 +342,7 @@ class ConvPlanner:
 
 
 @dataclasses.dataclass(frozen=True)
-class ConvDgradPlanner:
+class ConvDgradPlanner(ShardablePlanner):
     """Plans the conv backward-data (dgrad) kernel.
 
     dX is a stride-1 strip conv over the S-dilated gradient with spatially
@@ -249,10 +355,21 @@ class ConvDgradPlanner:
     bounds the forward Delta_O).
     """
 
-    machine: MachineModel = TPU_V5E
     op: ClassVar[str] = "conv2d_dgrad"
 
-    def plan(
+    def _shard_candidates(self, group: int, *, batch: int = 1,
+                          **shape) -> list[ShardCandidate]:
+        del shape
+        ax = self.shard_axis
+        rep4 = (None, None, None, None)
+        cands = []
+        if group > 1 and batch % group == 0:  # dX shards with the batch
+            cands.append(ShardCandidate(
+                "batch", {"batch": batch // group},
+                ((ax, None, None, None), rep4, (ax, None, None, None))))
+        return cands or [ShardCandidate("single", {}, (rep4, rep4, rep4))]
+
+    def plan_local(
         self, *, H_O: int, W_O: int, F: int, S: int = 1, P: int = 0,
         d_in: int, d_out: int, in_bytes: int = 2, batch: int = 1,
         H_I: int | None = None, W_I: int | None = None,
@@ -300,16 +417,20 @@ def conv_wgrad_words(
 
 
 @dataclasses.dataclass(frozen=True)
-class ConvWgradPlanner:
+class ConvWgradPlanner(ShardablePlanner):
     """Picks (block_h, block_do, block_di) for the wgrad accumulation
     kernel: dW[ky, kx] += X_strip^T @ dY_strip over the (batch, strip)
     grid.  The resident output stack is the F^2 * block_di * block_do f32
     accumulator; the input and gradient strips stream through.  The same
     two-dimensional search as the forward planner: strip candidates are
     H_O and its power-of-two fractions, the largest fitting lane-aligned
-    gradient stack per strip, fewest modeled words wins."""
+    gradient stack per strip, fewest modeled words wins.
 
-    machine: MachineModel = TPU_V5E
+    On a mesh, "batch" shards the *contraction* (each device accumulates a
+    private dW over batch/P images), so the sharded plan charges the Alg-4
+    tree reduction of the F^2 x D_I x D_O gradient as ici_words.
+    """
+
     op: ClassVar[str] = "conv2d_wgrad"
 
     _BDO_CAP: ClassVar[int] = 2048
@@ -345,7 +466,20 @@ class ConvWgradPlanner:
         bdo = _align_down((budget - fixed) // per_bdo, lane) if budget > fixed else 0
         return min(bdo, self._BDO_CAP, round_up(d_out, lane))
 
-    def plan(
+    def _shard_candidates(self, group: int, *, F: int, d_in: int, d_out: int,
+                          batch: int = 1, **shape) -> list[ShardCandidate]:
+        del shape
+        ax = self.shard_axis
+        rep4 = (None, None, None, None)
+        cands = []
+        if group > 1 and batch % group == 0:
+            cands.append(ShardCandidate(
+                "batch", {"batch": batch // group},
+                ((ax, None, None, None), (ax, None, None, None), rep4),
+                ici_words=ccr.tree_reduce_words(group, F * F * d_in * d_out)))
+        return cands or [ShardCandidate("single", {}, (rep4, rep4, rep4))]
+
+    def plan_local(
         self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int,
         d_out: int, in_bytes: int = 2, batch: int = 1,
         padding: int | None = None, H_I: int | None = None,
@@ -432,7 +566,7 @@ class ConvWgradPlanner:
 
 
 @dataclasses.dataclass(frozen=True)
-class MatmulPlanner:
+class MatmulPlanner(ShardablePlanner):
     """Picks (block_m, block_n, block_k) for the FC matmul kernel.
 
     block_m/block_k sit at MXU-friendly sizes; block_n — the Delta_O
@@ -440,9 +574,15 @@ class MatmulPlanner:
     f32 accumulator) exhausts the budget: the Alg 5 strategy verbatim.  On
     MANTICORE (streams uncharged, lane 1) the same rule is exactly
     ``ccr.alg45_max_stack``: block_n <= 768 (sp) / 384 (dp) at batch 32.
+
+    On a mesh two multi-device dataflows compete: "psum" (Alg 4 — K
+    sharded, private partial outputs tree-reduced; ``ccr.fc_psum_traffic``)
+    and "ring" (Alg 3 — K-sharded X permuted around the ring while each
+    device keeps its full-K weight columns; ``ccr.ring_traffic``, every X
+    word loaded from main memory exactly once).  Fewest total modeled
+    words (HBM + ICI) wins; ``strategy=`` pins one.
     """
 
-    machine: MachineModel = TPU_V5E
     op: ClassVar[str] = "matmul"
 
     _BN_CAP: ClassVar[int] = 2048
@@ -453,7 +593,32 @@ class MatmulPlanner:
         stream = (bm * bk + bk * bn) * in_bytes * 2 if self.machine.charge_stream_blocks else 0
         return stream + bm * bn * acc_word
 
-    def plan(
+    def _shard_candidates(self, group: int, *, m: int, n: int, k: int,
+                          **shape) -> list[ShardCandidate]:
+        del shape
+        ax = self.shard_axis
+        rep2 = (None, None)
+        cands = []
+        if group > 1 and m % group == 0:  # data parallelism over the rows
+            cands.append(ShardCandidate(
+                "batch", {"m": m // group},
+                ((ax, None), rep2, (ax, None))))
+        if group > 1 and k % group == 0:
+            cands.append(ShardCandidate(
+                "psum", {"k": k // group},
+                ((None, ax), (ax, None), rep2),
+                ici_words=ccr.tree_reduce_words(group, m * n)))
+        if group > 1 and k % group == 0 and n % group == 0:
+            ring = ccr.ring_traffic(m=m, n=n, k=k, devices=group)
+            cands.append(ShardCandidate(
+                "ring", {"n": n // group},
+                ((None, ax), (None, ax), (None, ax)),
+                ici_words=ring.intercluster,
+                hbm_override=(ring.main_loads, ring.main_stores),
+                macs_override=ring.macs))
+        return cands or [ShardCandidate("single", {}, (rep2, rep2, rep2))]
+
+    def plan_local(
         self, *, m: int, n: int, k: int, in_bytes: int = 2,
         block_m: int | None = None, block_n: int | None = None,
         block_k: int | None = None,
@@ -507,7 +672,7 @@ def _relabel_matmul(inner: Schedule, op: str, names: dict[str, str]) -> Schedule
 
 
 @dataclasses.dataclass(frozen=True)
-class MatmulDxPlanner:
+class MatmulDxPlanner(ShardablePlanner):
     """Plans dX = dY @ W^T for the FC layer.
 
     A matmul whose resident output stack is the K (input-feature) dimension
@@ -517,13 +682,25 @@ class MatmulDxPlanner:
     into forward names: ``block_k`` is the output stack (the Delta_O
     analogue, 768/384 on MANTICORE at batch 32), ``block_n`` the streamed
     contraction step.  Kwargs are the *forward* shapes (x: [m, k],
-    w: [k, n], dY: [m, n]).
+    w: [k, n], dY: [m, n]).  On a mesh, dX shards with the batch (no
+    collective — each device back-propagates its own rows).
     """
 
-    machine: MachineModel = TPU_V5E
     op: ClassVar[str] = "matmul_dx"
 
-    def plan(
+    def _shard_candidates(self, group: int, *, m: int,
+                          **shape) -> list[ShardCandidate]:
+        del shape
+        ax = self.shard_axis
+        rep2 = (None, None)
+        cands = []
+        if group > 1 and m % group == 0:
+            cands.append(ShardCandidate(
+                "batch", {"m": m // group},
+                ((ax, None), rep2, (ax, None))))
+        return cands or [ShardCandidate("single", {}, (rep2, rep2, rep2))]
+
+    def plan_local(
         self, *, m: int, n: int, k: int, in_bytes: int = 2,
         block_m: int | None = None, block_n: int | None = None,
         block_k: int | None = None,
@@ -538,17 +715,30 @@ class MatmulDxPlanner:
 
 
 @dataclasses.dataclass(frozen=True)
-class MatmulDwPlanner:
+class MatmulDwPlanner(ShardablePlanner):
     """Plans dW = X^T @ dY for the FC layer: output [k, n] tiles resident
     while the M (batch) dimension streams as the contraction.  Delegates to
     :class:`MatmulPlanner` on ``(k, n, m)``; ``block_m`` is the streamed
     contraction step in the relabeled schedule.  Kwargs are the *forward*
-    shapes."""
+    shapes.  On a mesh, "batch" shards the contraction — each device
+    accumulates a private dW over its rows, tree-reduced as ici_words."""
 
-    machine: MachineModel = TPU_V5E
     op: ClassVar[str] = "matmul_dw"
 
-    def plan(
+    def _shard_candidates(self, group: int, *, m: int, n: int, k: int,
+                          **shape) -> list[ShardCandidate]:
+        del shape
+        ax = self.shard_axis
+        rep2 = (None, None)
+        cands = []
+        if group > 1 and m % group == 0:
+            cands.append(ShardCandidate(
+                "batch", {"m": m // group},
+                ((ax, None), (ax, None), rep2),
+                ici_words=ccr.tree_reduce_words(group, k * n)))
+        return cands or [ShardCandidate("single", {}, (rep2, rep2, rep2))]
+
+    def plan_local(
         self, *, m: int, n: int, k: int, in_bytes: int = 2,
         block_m: int | None = None, block_n: int | None = None,
         block_k: int | None = None,
@@ -568,7 +758,7 @@ class MatmulDwPlanner:
 
 
 @dataclasses.dataclass(frozen=True)
-class AttentionPlanner:
+class AttentionPlanner(ShardablePlanner):
     """Picks (block_q, block_kv) for the flash-attention kernel.
 
     The q block with its f32 accumulator and (m, l) statistics is the
@@ -579,7 +769,6 @@ class AttentionPlanner:
     (clamped to the rounded sequence, as the old wrapper did).
     """
 
-    machine: MachineModel = TPU_V5E
     op: ClassVar[str] = "flash_attention"
 
     _SUBLANE: ClassVar[int] = 8
@@ -607,7 +796,7 @@ class AttentionPlanner:
             lo = max(0, -(-(q0 - window + 2 - bkv) // bkv))
         return max(0, hi - lo + 1)
 
-    def plan(
+    def plan_local(
         self, *, seq_q: int, seq_kv: int, head_dim: int,
         n_q_heads: int = 1, n_kv_heads: int = 1, batch: int = 1,
         in_bytes: int = 4, block_q: int | None = None,
@@ -670,11 +859,21 @@ PLANNERS: dict[str, type] = {
 }
 
 
-def planner_for(op: str, machine: MachineModel = TPU_V5E) -> Planner:
-    """The registered planner for an op name, bound to a machine."""
+def planner_for(op: str, machine: MachineModel = TPU_V5E, mesh=None,
+                shard_axis: str = "model",
+                strategy: str | None = None) -> Planner:
+    """The registered planner for an op name, bound to a machine — and,
+    when ``mesh`` is given (a MeshSpec, jax Mesh, dict or (name, size)
+    pairs), to a mesh: its ``plan`` then emits a ShardedSchedule whose
+    partitioning over ``shard_axis`` is chosen by modeled words (or pinned
+    with ``strategy=``)."""
+    from repro.plan.sharded import mesh_spec
+
     try:
         cls = PLANNERS[op]
     except KeyError:
         raise KeyError(f"no planner registered for op {op!r}; "
                        f"known: {sorted(PLANNERS)}") from None
-    return cls(machine)
+    if mesh is None:
+        return cls(machine)
+    return cls(machine, mesh_spec(mesh), shard_axis, strategy)

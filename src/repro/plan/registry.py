@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core.machine import TPU_V5E, MachineModel
 from repro.plan.planners import Planner, planner_for, round_up
 from repro.plan.schedule import Schedule
+from repro.plan.sharded import ShardedSchedule, local_schedule, mesh_spec
 
 # ---------------------------------------------------------------------------
 # Shared boilerplate
@@ -121,9 +122,17 @@ class PallasOp:
     shape_args: Callable[..., dict[str, Any]]
     impl: Callable[..., jax.Array]
     reference: Callable[..., jax.Array] | None = None
+    # Multi-device execution of a ShardedSchedule's strategy (shard_map
+    # dataflow); ops without one still *plan* sharded, they just can't
+    # execute the collective strategies through the registry.
+    sharded_impl: Callable[..., jax.Array] | None = None
 
-    def planner_for(self, machine: MachineModel = TPU_V5E) -> Planner:
-        return self.planner(machine)
+    def planner_for(self, machine: MachineModel = TPU_V5E, mesh=None,
+                    shard_axis: str = "model",
+                    strategy: str | None = None) -> Planner:
+        if mesh is None:
+            return self.planner(machine)
+        return self.planner(machine, mesh_spec(mesh), shard_axis, strategy)
 
     def plan(self, *arrays, machine: MachineModel = TPU_V5E, **params) -> Schedule:
         """Plan from concrete operands (shapes/dtypes only are read).
@@ -131,17 +140,53 @@ class PallasOp:
         shape = self.shape_args(*arrays, **params)
         return _cached_plan(self.planner(machine), tuple(sorted(shape.items())))
 
+    def plan_sharded(
+        self, *arrays, mesh, machine: MachineModel = TPU_V5E,
+        axis: str = "model", strategy: str | None = None, **params,
+    ) -> ShardedSchedule:
+        """Plan from concrete operands against a ``(machine, mesh)`` pair:
+        the returned ShardedSchedule carries the device partitioning and
+        the HBM/ICI word split (cached like :meth:`plan`)."""
+        shape = self.shape_args(*arrays, **params)
+        planner = self.planner_for(machine, mesh, axis, strategy)
+        return _cached_plan(planner, tuple(sorted(shape.items())))
+
     def __call__(
-        self, *arrays, schedule: Schedule | None = None,
+        self, *arrays, schedule: Schedule | ShardedSchedule | None = None,
         machine: MachineModel = TPU_V5E, interpret: bool | None = None,
         out_dtype=None, **params,
     ) -> jax.Array:
         interpret = default_interpret(interpret)
         out_dtype = out_dtype or arrays[0].dtype
+        schedule = local_schedule(schedule)  # degenerate sharded plans run local
         if schedule is None:
             schedule = self.plan(*arrays, machine=machine, **params)
         return self.impl(
             *arrays, schedule=schedule, out_dtype=out_dtype,
+            interpret=interpret, **params,
+        )
+
+    def sharded(
+        self, *arrays, schedule: ShardedSchedule, mesh,
+        interpret: bool | None = None, out_dtype=None, **params,
+    ) -> jax.Array:
+        """Execute a ShardedSchedule's multi-device strategy on a live
+        ``jax.sharding.Mesh``: the registered ``sharded_impl`` builds the
+        shard_map dataflow (psum tree / ring permutes / data parallelism)
+        from the schedule's partition — call sites never hand-wire specs.
+        The "single" strategy (and any 1-wide shard group) falls back to
+        the plain per-device impl."""
+        if schedule.strategy == "single" or schedule.devices == 1:
+            return self(*arrays, schedule=schedule.schedule,
+                        interpret=interpret, out_dtype=out_dtype, **params)
+        if self.sharded_impl is None:
+            raise NotImplementedError(
+                f"op {self.name!r} registered no sharded_impl; strategy "
+                f"{schedule.strategy!r} cannot execute through the registry")
+        interpret = default_interpret(interpret)
+        out_dtype = out_dtype or arrays[0].dtype
+        return self.sharded_impl(
+            *arrays, schedule=schedule, mesh=mesh, out_dtype=out_dtype,
             interpret=interpret, **params,
         )
 
@@ -170,11 +215,11 @@ _PROVIDERS = {
 
 def pallas_op(
     name: str, *, planner: type, shape_args: Callable, impl: Callable,
-    reference: Callable | None = None,
+    reference: Callable | None = None, sharded_impl: Callable | None = None,
 ) -> PallasOp:
     """Register a kernel behind the plan layer (returns the op handle)."""
     op = PallasOp(name=name, planner=planner, shape_args=shape_args,
-                  impl=impl, reference=reference)
+                  impl=impl, reference=reference, sharded_impl=sharded_impl)
     _OPS[name] = op
     return op
 

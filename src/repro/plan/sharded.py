@@ -1,0 +1,196 @@
+"""`ShardedSchedule`: device partitioning as a planner *output*.
+
+PRs 2-3 made the paper's capacity argument a single `repro.plan` layer for
+every forward and backward kernel — but only within one device.  The
+multi-cluster half of the paper (Alg 3's ring reuse of input depth slices,
+Alg 4's tree reduction of private FC outputs) stayed hand-wired at call
+sites.  This module closes that gap: a planner handed a ``(MachineModel,
+MeshSpec)`` pair emits a :class:`ShardedSchedule` — a per-device
+:class:`~repro.plan.schedule.Schedule` plus the mesh shape, the chosen
+partitioning of every operand, and the modeled words split into per-mesh
+main-memory (``hbm_*``) and interconnect (``ici_words``) counts — so
+``core/ring.py``'s ring and ``fc_layer_sharded``'s psum are *consumed*
+from the plan, not re-derived at each call site.
+
+Conventions:
+
+  * ``hbm_loads``/``hbm_stores`` are **shard-group totals**: summed over
+    the ``devices`` of the partitioned mesh axis.  Every strategy here is
+    device-symmetric, so per-device counts are the totals divided by
+    ``devices``.  Other mesh axes replicate the plan — a caller spreading
+    it over an orthogonal axis (e.g. model-parallel replicas of a
+    data-sharded conv) multiplies the totals itself.
+  * ``ici_words`` is the shard-group-total interconnect traffic:
+    ring-permute words for the "ring" strategy, the Alg-4 tree-reduction
+    words for the "psum"/batch-contraction strategies, zero for pure
+    data/stack parallelism.
+  * A **single-device mesh degenerates exactly**: the wrapped ``schedule``
+    equals the meshless planner's Schedule, ``hbm_* == schedule.loads/
+    stores`` and ``ici_words == 0`` (pinned in tests/test_plan.py).
+
+Like `Schedule`, everything here is frozen and hashable so sharded plans
+ride through ``jax.jit`` static arguments and the registry's plan cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import ccr
+from repro.core.machine import MachineModel
+from repro.plan.schedule import Schedule
+
+# Per-operand partition entries: one tuple per operand (outputs last), one
+# entry per array dimension — ``None`` (replicated) or the mesh axis name.
+Partition = tuple[tuple[str | None, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Hashable description of a device mesh (names and sizes only).
+
+    The plan layer never touches concrete jax devices: a MeshSpec is to
+    ``jax.sharding.Mesh`` what a Schedule is to a ``pallas_call`` — the
+    model side.  Build one from a live mesh with :func:`mesh_spec`.
+    """
+
+    axes: tuple[tuple[str, int], ...]
+
+    def __post_init__(self):
+        for _, n in self.axes:
+            if n <= 0:
+                raise ValueError(f"mesh axis sizes must be positive: {self.axes}")
+
+    @property
+    def devices(self) -> int:
+        n = 1
+        for _, s in self.axes:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        for k, s in self.axes:
+            if k == name:
+                return s
+        raise KeyError(f"mesh {self.axes} has no axis {name!r}")
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(k for k, _ in self.axes)
+
+
+def mesh_spec(mesh) -> MeshSpec:
+    """Normalize a mesh-like value into a :class:`MeshSpec`.
+
+    Accepts a MeshSpec (pass-through), a ``jax.sharding.Mesh`` (or anything
+    with a ``.shape`` name->size mapping), a dict, or an iterable of
+    ``(name, size)`` pairs.
+    """
+    if isinstance(mesh, MeshSpec):
+        return mesh
+    shape = getattr(mesh, "shape", mesh)
+    if hasattr(shape, "items"):
+        return MeshSpec(axes=tuple((str(k), int(v)) for k, v in shape.items()))
+    return MeshSpec(axes=tuple((str(k), int(v)) for k, v in shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSchedule:
+    """One planned execution of one kernel across a device mesh.
+
+    ``schedule`` is the per-device local Schedule (its blocks drive the
+    local ``pallas_call``); ``partition`` records how every operand (and
+    the output, last) is split over ``axis``; ``strategy`` names the
+    multi-device dataflow the registry's sharded impl executes.
+    """
+
+    schedule: Schedule  # the per-device local schedule
+    mesh: MeshSpec
+    axis: str  # the partitioned mesh axis ("model", "data", ...)
+    strategy: str  # "single" | "batch" | "stack" | "psum" | "ring"
+    partition: Partition
+    hbm_loads: int  # shard-group-total main-memory words loaded
+    hbm_stores: int  # shard-group-total main-memory words stored
+    ici_words: int = 0  # shard-group-total interconnect words moved
+    macs: int = 0  # shard-group-total multiply-accumulates
+
+    # -- derived accounting ----------------------------------------------
+
+    @property
+    def op(self) -> str:
+        return self.schedule.op
+
+    @property
+    def devices(self) -> int:
+        """Extent of the partitioned axis — the shard group every word
+        total is summed over (NOT the whole mesh: orthogonal axes
+        replicate this plan)."""
+        if self.axis not in self.mesh.axis_names:
+            return 1
+        return self.mesh.axis_size(self.axis)
+
+    @property
+    def hbm_words(self) -> int:
+        return self.hbm_loads + self.hbm_stores
+
+    @property
+    def modeled_words(self) -> int:
+        """All modeled words, on- and off-mesh — the argmin quantity."""
+        return self.hbm_words + self.ici_words
+
+    def per_device(self, words: int) -> int:
+        """Shard-group total -> per-device words (strategies are
+        symmetric across the group)."""
+        return words // self.devices
+
+    @property
+    def traffic(self) -> ccr.Traffic:
+        """The paper's accounting: HBM words are main-memory traffic, ICI
+        words are inter-cluster traffic (so ``.ccr`` / ``.ccr_offchip``
+        reproduce the Sec. 2.3.4 style on/off-chip split directly)."""
+        return ccr.Traffic(macs=self.macs, main_loads=self.hbm_loads,
+                           main_stores=self.hbm_stores,
+                           intercluster=self.ici_words)
+
+    def fits(self, machine: MachineModel, streams: int = 2) -> bool:
+        """Per-device working set vs the machine budget (Sec. 2.2.2)."""
+        return self.schedule.fits(machine, streams)
+
+    def block(self, name: str, default: int | None = None) -> int:
+        return self.schedule.block(name, default)
+
+
+def local_schedule(s) -> Schedule | None:
+    """The per-device Schedule of either schedule flavor (``None`` passes
+    through) — the unwrap every kernel wrapper and layer uses so explicit
+    ``schedule=`` arguments accept both."""
+    if s is None or isinstance(s, Schedule):
+        return s
+    if isinstance(s, ShardedSchedule):
+        return s.schedule
+    raise TypeError(f"expected Schedule or ShardedSchedule, got {type(s)!r}")
+
+
+def partition_specs(sharded: ShardedSchedule):
+    """Lower a ShardedSchedule's partition into ``jax.sharding
+    .PartitionSpec`` objects, ``(*operand_specs, out_spec)`` — the single
+    place plan-layer partitions become shard_map/pjit specs."""
+    from jax.sharding import PartitionSpec as P
+
+    return tuple(P(*entry) for entry in sharded.partition)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCandidate:
+    """One partitioning a planner considers: which strategy, how the local
+    (per-device) shapes shrink, how operands split, and what the mesh pays
+    in interconnect words.  ``hbm_override`` replaces the default
+    ``devices * local_schedule.modeled`` accounting (the ring's reuse means
+    its HBM words are *not* the local plan's words)."""
+
+    strategy: str
+    local_shape: dict
+    partition: Partition
+    ici_words: int = 0
+    hbm_override: tuple[int, int] | None = None  # (loads, stores) totals
+    macs_override: int | None = None

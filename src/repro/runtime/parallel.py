@@ -26,6 +26,23 @@ class ParallelCtx:
     dp_axes: tuple[str, ...] = ("data",)
     tp_axis: str = "model"
 
+    def plan_mesh(self):
+        """This context's mesh as a hashable ``repro.plan.MeshSpec`` — the
+        handle the mesh-aware planners take, so launchers and the runtime
+        resolve ShardedSchedules from the same mesh they execute on."""
+        from repro.plan import mesh_spec
+
+        return mesh_spec(self.mesh)
+
+    def sharded_shardings(self, sharded) -> tuple[NamedSharding, ...]:
+        """Lower a ShardedSchedule's partition (operands..., output) into
+        NamedShardings on this context's mesh — the uniform bridge from
+        planner output to pjit/shard_map placement."""
+        from repro.plan import partition_specs
+
+        return tuple(NamedSharding(self.mesh, sp)
+                     for sp in partition_specs(sharded))
+
     @property
     def dp_size(self) -> int:
         n = 1

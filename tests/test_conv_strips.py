@@ -13,9 +13,7 @@ from repro.core import ccr
 from repro.core import schedule_sim as sim
 from repro.core.conv_layer import conv_block, conv_layer, traffic
 from repro.core.machine import MANTICORE
-from repro.kernels.conv2d import (
-    choose_schedule, conv2d, conv2d_fused_ref, conv2d_ref,
-)
+from repro.kernels.conv2d import conv2d, conv2d_fused_ref, conv2d_ref
 
 TOLS = {jnp.float32: dict(rtol=1e-5, atol=1e-5), jnp.bfloat16: dict(rtol=1e-2, atol=1e-2)}
 
@@ -60,7 +58,7 @@ class TestBatchedStripKernel:
         _close(got, conv2d_ref(x, f, stride=S, padding=P))
 
     def test_chooser_defaults_parity(self):
-        """With no blocks given, choose_schedule picks (block_h, Delta_O)."""
+        """With no blocks given, ConvPlanner picks (block_h, Delta_O)."""
         rng = np.random.default_rng(7)
         x = _rand(rng, (2, 16, 16, 8))
         f = _rand(rng, (5, 5, 8, 16))
@@ -198,12 +196,11 @@ class TestStripTrafficModel:
             in_bytes=4, block_di=128,
         )
         hb, bdo = sched.block("block_h"), sched.block("block_do")
-        assert (hb, bdo) == choose_schedule(  # deprecated shim == planner
-            32, 32, 3, 1, 128, 256, in_bytes=4, block_di=128
-        )
         assert hb % 1 == 0 and bdo % 128 == 0
         assert sched.fits(TPU_V5E)
         # a plane too large for VMEM at any stack forces a partial strip
-        hb2, _ = choose_schedule(4096, 4096, 3, 1, 128, 256, in_bytes=4,
-                                 block_di=512)
-        assert hb2 < 4096
+        sched2 = ConvPlanner(TPU_V5E).plan(
+            H_O=4096, W_O=4096, F=3, S=1, d_in=128, d_out=256,
+            in_bytes=4, block_di=512,
+        )
+        assert sched2.block("block_h") < 4096

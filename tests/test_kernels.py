@@ -9,7 +9,7 @@ from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels.conv2d import conv2d, conv2d_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.matmul import choose_blocks, fc_matmul, fc_matmul_ref
+from repro.kernels.matmul import fc_matmul, fc_matmul_ref
 
 TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-4), jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
 
@@ -42,8 +42,11 @@ class TestMatmulKernel:
 
     def test_block_chooser_respects_vmem(self):
         from repro.core.machine import TPU_V5E
+        from repro.plan import MatmulPlanner
 
-        bm, bn, bk = choose_blocks(4096, 16384, 8192, in_bytes=2)
+        s = MatmulPlanner(TPU_V5E).plan(m=4096, n=16384, k=8192, in_bytes=2)
+        bm, bn, bk = (s.block("block_m"), s.block("block_n"),
+                      s.block("block_k"))
         working = (bm * bk + bk * bn) * 2 * 2 + bm * bn * 4
         assert working <= TPU_V5E.usable_for_working_set(2)
         assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0

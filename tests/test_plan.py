@@ -1,11 +1,13 @@
-"""The repro.plan scheduling layer (DESIGN.md Sec. 3).
+"""The repro.plan scheduling layer (DESIGN.md Secs. 3 and 5).
 
 Covers the ISSUE acceptance criteria: planner picks are lane-aligned and
 fit the machine budget; ConvPlanner reproduces the paper's Delta_O <= 24/12
-on MANTICORE (core/ccr.py parity) and the pre-plan choose_schedule/
-choose_blocks picks on TPU_V5E; planner-emitted modeled words equal
-ccr.alg2_strip_traffic on the strip schedule; and an explicit Schedule
-round-trips through conv2d/fc_matmul.
+on MANTICORE (core/ccr.py parity) and the recorded pre-plan chooser picks
+on TPU_V5E; planner-emitted modeled words equal ccr.alg2_strip_traffic on
+the strip schedule; an explicit Schedule round-trips through
+conv2d/fc_matmul; and the mesh-aware planners' ShardedSchedules pin their
+HBM/ICI word split against the executed schedule_sim walkers, with the
+1-device mesh degenerating to today's Schedules exactly.
 """
 
 import jax.numpy as jnp
@@ -14,16 +16,22 @@ import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import ccr
+from repro.core import schedule_sim as sim
 from repro.core.machine import MANTICORE, TPU_V5E, word_bytes
-from repro.kernels.conv2d import choose_schedule, conv2d, conv2d_ref
-from repro.kernels.matmul import choose_blocks, fc_matmul, fc_matmul_ref
+from repro.kernels.conv2d import conv2d, conv2d_ref
+from repro.kernels.matmul import fc_matmul, fc_matmul_ref
 from repro.plan import (
     AttentionPlanner,
     ConvPlanner,
+    ConvWgradPlanner,
+    MatmulDwPlanner,
     MatmulPlanner,
+    MeshSpec,
     Planner,
     Schedule,
+    ShardedSchedule,
     get_op,
+    local_schedule,
     planner_for,
     registered_ops,
     to_roofline,
@@ -136,9 +144,6 @@ class TestTpuParity:
             )
             assert (sched.block("block_h"), sched.block("block_do")) == want
             assert sched.fits(TPU_V5E)
-            # ... and the deprecated shim is the planner.
-            assert choose_schedule(H_O, W_O, F, S, di, do, in_bytes=ib,
-                                   block_di=bdi, pool=pool) == want
 
     def test_matmul_planner_reproduces_old_picks(self):
         for (m, n, k, ib), want in self.OLD_MM_PICKS.items():
@@ -146,7 +151,6 @@ class TestTpuParity:
             got = (sched.block("block_m"), sched.block("block_n"),
                    sched.block("block_k"))
             assert got == want
-            assert choose_blocks(m, n, k, in_bytes=ib) == want
 
 
 # ---------------------------------------------------------------------------
@@ -400,3 +404,181 @@ class TestExplicitScheduleRoundtrip:
         a = cnn.forward(cfg, params, images)
         b = cnn.forward(cfg, params, images, schedules=scheds)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Sharded planning: partitioning as a planner output (DESIGN.md Sec. 5)
+# ---------------------------------------------------------------------------
+
+# The paper's running shapes on the 16-cluster L2 quadrant.
+QUAD16 = MeshSpec((("cluster", 16),))
+MESH4 = MeshSpec((("model", 4),))
+MESH1 = MeshSpec((("model", 1),))
+FC_SHAPE = dict(m=32, n=4096, k=25088, in_bytes=4)  # FC6-like, B=32
+
+
+class TestShardedPlans:
+    def test_one_device_mesh_degenerates_to_schedule(self):
+        """A 1-device mesh must reproduce today's pinned Schedules exactly
+        (wrapped in a trivial ShardedSchedule)."""
+        base = ConvPlanner(MANTICORE).plan(
+            H_O=32, W_O=32, F=3, S=1, d_in=128, d_out=128,
+            in_bytes=4, padding=1, H_I=32, W_I=32, block_h=32)
+        ss = ConvPlanner(MANTICORE, MESH1).plan(
+            H_O=32, W_O=32, F=3, S=1, d_in=128, d_out=128,
+            in_bytes=4, padding=1, H_I=32, W_I=32, block_h=32)
+        assert isinstance(ss, ShardedSchedule)
+        assert ss.schedule == base and local_schedule(ss) == base
+        assert ss.strategy == "single" and ss.devices == 1
+        assert ss.block("block_do") == 24  # the paper's Delta_O, unchanged
+        assert (ss.hbm_loads, ss.hbm_stores) == (base.loads, base.stores)
+        assert ss.ici_words == 0 and ss.macs == base.macs
+        assert ss.modeled_words == base.modeled_words
+
+        mb = MatmulPlanner(TPU_V5E).plan(**FC_SHAPE)
+        ms = MatmulPlanner(TPU_V5E, MESH1).plan(**FC_SHAPE)
+        assert ms.schedule == mb and ms.ici_words == 0
+        assert ms.hbm_words == mb.modeled_words
+
+    def test_one_device_strategy_pin_degenerates(self):
+        """Pinning psum/ring on a 1-wide group degenerates to single —
+        sharded call sites must keep working on one device."""
+        for pin in ("psum", "ring"):
+            ss = MatmulPlanner(TPU_V5E, MESH1, "model", pin).plan(**FC_SHAPE)
+            assert ss.strategy == "single" and ss.ici_words == 0
+
+    def test_manticore_quadrant_picks_ring(self):
+        """On the paper's 16-cluster quadrant the argmin picks Alg 3's
+        ring: its reuse converts ~1/3 of the psum strategy's main-memory
+        words into neighbour hops — the Sec. 2.3 story, now a planner
+        decision.  Counts pinned against ccr.ring_traffic."""
+        ss = MatmulPlanner(MANTICORE, QUAD16, "cluster").plan(**FC_SHAPE)
+        assert ss.strategy == "ring"
+        assert ss.axis == "cluster" and ss.devices == 16
+        t = ccr.ring_traffic(m=32, n=4096, k=25088, devices=16)
+        assert (ss.hbm_loads, ss.hbm_stores) == (t.main_loads, t.main_stores)
+        assert ss.ici_words == t.intercluster == 15 * 32 * 25088
+        assert ss.macs == t.macs
+        # vs the pinned psum alternative: ring moves fewer total words.
+        ps = MatmulPlanner(MANTICORE, QUAD16, "cluster", "psum").plan(**FC_SHAPE)
+        assert ps.strategy == "psum"
+        assert ss.modeled_words < ps.modeled_words
+        assert ss.hbm_words < ps.hbm_words  # the reuse is an HBM saving
+        # partitioning is part of the plan: X K-sharded, W N-sharded, out
+        # N-sharded for the ring; K/K/replicated for the psum.
+        assert ss.partition == ((None, "cluster"), (None, "cluster"),
+                                (None, "cluster"))
+        assert ps.partition == ((None, "cluster"), ("cluster", None),
+                                (None, None))
+
+    def test_ring_words_equal_executed_walk(self):
+        """modeled == simulated for the ring, at several mesh widths."""
+        for devices in (2, 4, 16):
+            mesh = MeshSpec((("model", devices),))
+            ss = MatmulPlanner(MANTICORE, mesh, "model", "ring").plan(
+                m=8, n=64, k=128, in_bytes=4)
+            w = sim.simulate_ring(m=8, n=64, k=128, devices=devices)
+            assert ss.hbm_loads == w.main_loads
+            assert ss.hbm_stores == w.main_stores
+            assert ss.ici_words == w.intercluster
+            assert ss.macs == w.macs
+
+    def test_psum_words_equal_executed_walk(self):
+        ss = MatmulPlanner(TPU_V5E, MESH4, "model", "psum").plan(
+            m=37, n=300, k=512, in_bytes=4)
+        bd = ss.schedule.block_dict()
+        w = sim.simulate_fc_psum(
+            m=37, n=300, k=128, devices=4, block_m=bd["block_m"],
+            block_n=bd["block_n"], block_k=bd["block_k"])
+        # NB the walker takes the *local* k (the planner planned k/4).
+        assert ss.hbm_loads == w.main_loads
+        assert ss.hbm_stores == w.main_stores
+        assert ss.ici_words == w.intercluster == ccr.tree_reduce_words(4, 37 * 300)
+
+    def test_sharded_conv_words_equal_executed_walk(self):
+        """The conv "batch" partition: mesh totals equal the per-device
+        strip walks summed (and the unsharded words — pure data
+        parallelism moves no extra HBM word)."""
+        s = ccr.ConvShape(W_I=32, D_I=16, D_O=32, F=3, S=1, P=1)
+        ss = ConvPlanner(MANTICORE, MeshSpec((("data", 4),)), "data").plan(
+            H_O=32, W_O=32, F=3, S=1, d_in=16, d_out=32, in_bytes=4,
+            padding=1, H_I=32, W_I=32, block_h=8, batch=8)
+        assert ss.strategy == "batch"
+        stack = ss.block("block_do")
+        w = sim.simulate_sharded_conv_strip(s, stack, 8, devices=4,
+                                            strategy="batch", batch=8)
+        t = ccr.conv_sharded_traffic(s, stack, 8, devices=4,
+                                     strategy="batch", batch=8)
+        assert (ss.hbm_loads, ss.hbm_stores) == (w.main_loads, w.main_stores)
+        assert (t.main_loads, t.main_stores) == (w.main_loads, w.main_stores)
+        assert ss.ici_words == 0
+        # == the unsharded schedule's words (data parallelism is free in
+        # HBM terms; the win is 4x the bandwidth).
+        base = ConvPlanner(MANTICORE).plan(
+            H_O=32, W_O=32, F=3, S=1, d_in=16, d_out=32, in_bytes=4,
+            padding=1, H_I=32, W_I=32, block_h=8, batch=8)
+        assert ss.hbm_words == base.modeled_words
+
+    def test_sharded_wgrad_charges_gradient_allreduce(self):
+        """Data-parallel wgrad accumulates private dW per device: the
+        sharded plan must charge the Alg-4 tree reduction as ici_words and
+        one private dW store per device."""
+        ss = ConvWgradPlanner(TPU_V5E, MeshSpec((("data", 4),)), "data").plan(
+            H_O=8, W_O=8, F=3, d_in=8, d_out=16, in_bytes=4, batch=8,
+            padding=1, H_I=8, W_I=8)
+        assert ss.strategy == "batch"
+        assert ss.ici_words == ccr.tree_reduce_words(4, 3 * 3 * 8 * 16)
+        local = ss.schedule
+        assert ss.hbm_stores == 4 * local.stores  # private dW per device
+        dw = MatmulDwPlanner(TPU_V5E, MeshSpec((("data", 4),)), "data").plan(
+            m=32, n=64, k=128, in_bytes=4)
+        assert dw.strategy == "batch"
+        assert dw.ici_words == ccr.tree_reduce_words(4, 128 * 64)
+
+    def test_sharded_schedule_traffic_and_fits(self):
+        ss = MatmulPlanner(MANTICORE, QUAD16, "cluster").plan(**FC_SHAPE)
+        t = ss.traffic
+        assert isinstance(t, ccr.Traffic)
+        assert t.main_words == ss.hbm_words and t.intercluster == ss.ici_words
+        assert t.ccr_offchip > t.ccr  # ring traffic is mostly on-chip
+        assert ss.fits(MANTICORE) == ss.schedule.fits(MANTICORE)
+
+    def test_plan_sharded_through_registry(self):
+        """PallasOp.plan_sharded resolves the same cached ShardedSchedule
+        the planner emits, from concrete operands."""
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (8, 64))
+        w = _rand(rng, (64, 40))
+        op = get_op("matmul")
+        ss = op.plan_sharded(x, w, mesh=MESH4, axis="model", strategy="ring")
+        assert isinstance(ss, ShardedSchedule) and ss.strategy == "ring"
+        ss2 = op.plan_sharded(x, w, mesh=MESH4, axis="model", strategy="ring")
+        assert ss is ss2  # the plan cache covers sharded plans too
+        # and a dict-shaped mesh resolves identically
+        ss3 = op.plan_sharded(x, w, mesh={"model": 4}, axis="model",
+                              strategy="ring")
+        assert ss3 == ss
+
+    def test_cnn_sharded_plan_training(self):
+        """models/cnn.plan_training(mesh=) returns ShardedSchedules whose
+        forward entries move no ICI words while wgrad/dw charge the
+        gradient all-reduce; the 1-device mesh reproduces the meshless
+        plans exactly."""
+        from repro.configs.base import ModelConfig
+        from repro.models import cnn
+
+        cfg = ModelConfig(name="t", family="cnn", n_layers=2, d_model=4,
+                          d_ff=16, vocab=10)
+        mesh = MeshSpec((("data", 4),))
+        scheds = cnn.plan_training(cfg, batch=8, mesh=mesh)
+        assert all(isinstance(s, ShardedSchedule) for s in scheds.values())
+        for name, s in scheds.items():
+            if name.endswith(".wgrad") or name.endswith(".dw"):
+                assert s.ici_words > 0, name  # gradient all-reduce
+            elif name.startswith("conv") and "." not in name:
+                assert s.strategy == "batch" and s.ici_words == 0, name
+            elif "." not in name:  # FC forward: planner-chosen dataflow
+                assert s.strategy in ("batch", "psum", "ring"), name
+        base = cnn.plan_training(cfg, batch=8)
+        one = cnn.plan_training(cfg, batch=8, mesh=MeshSpec((("data", 1),)))
+        assert {k: s.schedule for k, s in one.items()} == base
