@@ -520,11 +520,89 @@ SECTIONS = {
     "roofline": bench_roofline,
 }
 
+# Which sections feed each committed baseline (conv_bwd and fc_bwd merge
+# into one file) — the --check regression gate walks this map.
+BASELINES = {
+    "BENCH_conv.json": ("conv_fused",),
+    "BENCH_fc.json": ("fc_matmul",),
+    "BENCH_bwd.json": ("conv_bwd", "fc_bwd"),
+    "BENCH_shard.json": ("fc_sharded",),
+}
+
+# Modeled-word regressions above this gate a CI failure; wall-time moves
+# are report-only (CI runners are too noisy to gate on).
+CHECK_TOLERANCE = 0.10
+
+
+def _word_metrics(derived: str) -> dict[str, int]:
+    """The modeled-word metrics of one ``derived`` cell: every integer
+    ``key=value`` token whose key names a word count (``*_words``,
+    ``hbm*``/``ici*`` splits).  More words is always worse."""
+    out = {}
+    for tok in derived.split(";"):
+        key, _, val = tok.partition("=")
+        if not val or not val.lstrip("-").isdigit():
+            continue
+        if key.endswith("words") or key in (
+                "hbm", "ici", "hbm4", "ici4", "psum_hbm", "psum_ici"):
+            out[key] = int(val)
+    return out
+
+
+def check(baseline_files) -> int:
+    """Compare current runs against the committed baselines: fail (return
+    the failure count) on modeled-word regressions > CHECK_TOLERANCE;
+    report timing deltas without gating.  The CI bench-regression step is
+    ``benchmarks/run.py --check BENCH_*.json``."""
+    failures = 0
+    for path in baseline_files:
+        fname = os.path.basename(path)
+        sections = BASELINES.get(fname)
+        if sections is None:
+            print(f"check:{fname},0.0,SKIP:no sections registered")
+            continue
+        with open(os.path.join(os.path.dirname(__file__), "..", fname)) as fh:
+            base = json.load(fh)
+        rows = [r for s in sections for r in SECTIONS[s]()]
+        for name, us, derived in rows:
+            if name not in base:
+                print(f"check:{name},{us:.1f},NEW:not in {fname}")
+                continue
+            want = base[name]
+            base_words = _word_metrics(want.get("derived", ""))
+            now_words = _word_metrics(derived)
+            verdicts = []
+            for key, now in sorted(now_words.items()):
+                was = base_words.get(key)
+                if was is None or was <= 0:
+                    continue
+                ratio = now / was
+                if ratio > 1.0 + CHECK_TOLERANCE:
+                    failures += 1
+                    verdicts.append(f"REGRESSION:{key}={now}vs{was}"
+                                    f"({ratio:.2f}x)")
+                elif now != was:
+                    verdicts.append(f"changed:{key}={now}vs{was}")
+            base_us = want.get("us_per_call") or 0.0
+            dt = (f"t={us / base_us:.2f}x" if base_us > 1e-9
+                  else "t=report-only")
+            print(f"check:{name},{us:.1f},{dt};"
+                  f"{';'.join(verdicts) or 'words-ok'}")
+    print(f"check:summary,0.0,failures={failures};"
+          f"tolerance={CHECK_TOLERANCE:.0%}")
+    return failures
+
 
 def main() -> None:
     global _FORCE_BASELINE
-    args = [a for a in sys.argv[1:] if a != "--write-baseline"]
-    _FORCE_BASELINE = "--write-baseline" in sys.argv[1:]
+    argv = sys.argv[1:]
+    if "--check" in argv:
+        files = [a for a in argv if a != "--check"]
+        files = files or sorted(BASELINES)
+        print("name,us_per_call,derived")
+        sys.exit(1 if check(files) else 0)
+    args = [a for a in argv if a != "--write-baseline"]
+    _FORCE_BASELINE = "--write-baseline" in argv
     only = args[0] if args else None
     print("name,us_per_call,derived")
     for name, fn in SECTIONS.items():

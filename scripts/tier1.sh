@@ -1,27 +1,36 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
-# Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [--dist-smoke] [extra pytest args...]
-#   --bench-smoke  additionally run one tiny planner+kernel case per
-#                  registered op in interpret mode (benchmarks/run.py smoke)
-#   --grad-smoke   run ONLY the gradient parity harness's fast subset
-#                  (tests/test_backward_plan.py TestGradSmoke) and exit
-#   --dist-smoke   run ONLY the sharded-parity subset (ShardedSchedule
-#                  planning pins + the forced 4-device host-mesh execution
-#                  tests, which set XLA_FLAGS=--xla_force_host_platform_
-#                  device_count=4 in their subprocesses) and exit
+# Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [--dist-smoke]
+#                         [--autotune-smoke] [extra pytest args...]
+#   --bench-smoke     additionally run one tiny planner+kernel case per
+#                     registered op in interpret mode (benchmarks/run.py smoke)
+#   --grad-smoke      run ONLY the gradient parity harness's fast subset
+#                     (tests/test_backward_plan.py TestGradSmoke) and exit
+#   --dist-smoke      run ONLY the sharded-parity subset (ShardedSchedule
+#                     planning pins + the forced 4-device host-mesh execution
+#                     tests, which set XLA_FLAGS=--xla_force_host_platform_
+#                     device_count=4 in their subprocesses) and exit
+#   --autotune-smoke  run ONLY the measured-time autotuner smoke and exit:
+#                     tune one tiny conv cell and one FC cell in interpret
+#                     mode against a tmpdir cache and assert both winners
+#                     replay from it (python -m repro.plan.autotune --smoke)
 # The default invocation runs the grad-smoke subset first, so backward
-# regressions fail fast before the full suite spins up.
+# regressions fail fast before the full suite spins up.  The CI matrix
+# (.github/workflows/ci.yml) runs each stage as its own fast-fail job.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 BENCH_SMOKE=0
 GRAD_SMOKE_ONLY=0
 DIST_SMOKE_ONLY=0
-while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" || "${1:-}" == "--dist-smoke" ]]; do
+AUTOTUNE_SMOKE_ONLY=0
+while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" \
+        || "${1:-}" == "--dist-smoke" || "${1:-}" == "--autotune-smoke" ]]; do
   case "$1" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --grad-smoke) GRAD_SMOKE_ONLY=1 ;;
     --dist-smoke) DIST_SMOKE_ONLY=1 ;;
+    --autotune-smoke) AUTOTUNE_SMOKE_ONLY=1 ;;
   esac
   shift
 done
@@ -40,8 +49,24 @@ run_dist_smoke() {
     tests/test_distributed.py -k "sharded or ring"
 }
 
+run_autotune_smoke() {
+  # Winners land in (and replay from) a throwaway cache: the smoke must
+  # prove persistence without touching the user's real cache file.
+  local tmp
+  tmp="$(mktemp -d)"
+  trap 'rm -rf "$tmp"' RETURN
+  REPRO_AUTOTUNE_CACHE="$tmp/autotune.json" \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.plan.autotune --smoke
+}
+
 if [[ "$GRAD_SMOKE_ONLY" == 1 ]]; then
   run_grad_smoke
+  exit 0
+fi
+
+if [[ "$AUTOTUNE_SMOKE_ONLY" == 1 ]]; then
+  run_autotune_smoke
   exit 0
 fi
 

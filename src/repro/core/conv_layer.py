@@ -213,7 +213,7 @@ def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip",
 def plan(
     x_shape, f_shape, *, stride=1, padding=0, pool=1, in_bytes=4,
     machine=None, strategy="strip", mesh=None, shard_axis="data",
-    shard_strategy=None,
+    shard_strategy=None, autotune=None,
 ):
     """Plan this layer without running it: the Schedule the kernel would
     use for operands of these shapes (report `.modeled_words` next to
@@ -221,10 +221,12 @@ def plan(
     the mesh-aware planner returns a ShardedSchedule — the device
     partitioning ("batch" or "stack" data parallelism over
     ``shard_axis``, pinnable with ``shard_strategy=``) plus the HBM/ICI
-    word split; a single-device mesh degenerates to today's Schedule."""
+    word split; a single-device mesh degenerates to today's Schedule.
+    ``autotune`` ("off" | "cache-only" | "tune", default the process
+    policy) lets a measured winner for this cell override the argmin."""
     from repro.core.machine import TPU_V5E
     from repro.kernels.conv2d.ops import _fused_pool, conv_out_extent
-    from repro.plan import planner_for
+    from repro.plan import autotune as at
 
     machine = machine or TPU_V5E
     batched = len(x_shape) == 4
@@ -236,17 +238,17 @@ def plan(
     fused = _fused_pool(H_O, W_O, pool)
     block_do = 1 if strategy == "alg1" else None
     block_h = H_O if strategy in ("alg2", "alg3") else None
-    return planner_for("conv2d", machine, mesh, shard_axis,
-                       shard_strategy).plan(
+    return at.resolve("conv2d", dict(
         H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
         in_bytes=in_bytes, pool=fused, batch=B, padding=padding,
         H_I=H, W_I=W, block_do=block_do, block_h=block_h,
-    )
+    ), machine=machine, mesh=mesh, axis=shard_axis,
+        strategy=shard_strategy, policy=autotune)
 
 
 def plan_bwd(
     x_shape, f_shape, *, stride=1, padding=0, in_bytes=4, machine=None,
-    mesh=None, shard_axis="data",
+    mesh=None, shard_axis="data", autotune=None,
 ) -> dict:
     """Backward-pass Schedules for this layer's shapes: the dgrad and
     wgrad kernels ``jax.grad`` will run, plus the pre-epilogue recompute
@@ -257,10 +259,12 @@ def plan_bwd(
     the XLA fallback) return only the plannable subset — no "dgrad" key.
     With ``mesh=`` every entry is a ShardedSchedule: dgrad and the
     recompute shard with the batch (no collective), while the sharded
-    wgrad charges the Alg-4 tree reduction of dW as ici_words.
+    wgrad charges the Alg-4 tree reduction of dW as ici_words.  The
+    backward cells autotune through the same ``autotune=`` policy as the
+    forward (each op is its own cache cell).
     """
     from repro.kernels.conv2d.ops import conv_out_extent
-    from repro.plan import planner_for
+    from repro.plan import autotune as at
 
     machine = machine or _BWD_MACHINE
     batched = len(x_shape) == 4
@@ -269,18 +273,25 @@ def plan_bwd(
     F, d_out = f_shape[0], f_shape[3]
     H_O = conv_out_extent(H, padding, F, stride)
     W_O = conv_out_extent(W, padding, F, stride)
+
+    def res(op, **shape):
+        return at.resolve(op, shape, machine=machine, mesh=mesh,
+                          axis=shard_axis, policy=autotune)
+
     out = {
-        "wgrad": planner_for("conv2d_wgrad", machine, mesh, shard_axis).plan(
+        "wgrad": res(
+            "conv2d_wgrad",
             H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
             in_bytes=in_bytes, batch=B, padding=padding, H_I=H, W_I=W),
-        "recompute": planner_for("conv2d", machine, mesh, shard_axis).plan(
+        "recompute": res(
+            "conv2d",
             H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
             in_bytes=in_bytes, pool=1, batch=B, padding=padding,
             H_I=H, W_I=W),
     }
     if padding <= F - 1:
-        out["dgrad"] = planner_for("conv2d_dgrad", machine, mesh,
-                                   shard_axis).plan(
+        out["dgrad"] = res(
+            "conv2d_dgrad",
             H_O=H_O, W_O=W_O, F=F, S=stride, P=padding, d_in=d_in,
             d_out=d_out, in_bytes=in_bytes, batch=B, H_I=H, W_I=W)
     return out

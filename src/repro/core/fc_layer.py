@@ -85,41 +85,47 @@ def _fc_m(x_shape) -> int:
 
 
 def plan(x_shape, w_shape, *, in_bytes=4, machine=None, mesh=None,
-         shard_axis="model", strategy=None):
+         shard_axis="model", strategy=None, autotune=None):
     """Plan this layer without running it (see conv_layer.plan).  With
     ``mesh=`` the returned ShardedSchedule also carries the device
-    partitioning and the HBM/ICI word split."""
+    partitioning and the HBM/ICI word split.  ``autotune=`` lets a
+    measured winner for this cell override the modeled argmin."""
     from repro.core.machine import TPU_V5E
-    from repro.plan import planner_for
+    from repro.plan import autotune as at
 
     k, n = w_shape
-    p = planner_for("matmul", machine or TPU_V5E, mesh, shard_axis, strategy)
-    return p.plan(m=_fc_m(x_shape), n=n, k=k, in_bytes=in_bytes)
+    return at.resolve(
+        "matmul", dict(m=_fc_m(x_shape), n=n, k=k, in_bytes=in_bytes),
+        machine=machine or TPU_V5E, mesh=mesh, axis=shard_axis,
+        strategy=strategy, policy=autotune)
 
 
 def plan_bwd(x_shape, w_shape, *, in_bytes=4, machine=None, mesh=None,
-             shard_axis="data") -> dict:
+             shard_axis="data", autotune=None) -> dict:
     """Backward-pass Schedules for this layer's shapes: the dX and dW
     kernels ``jax.grad`` will run.  Pass back via ``bwd_schedules=`` to
     pin the blocking.  With ``mesh=`` both come back as ShardedSchedules
     (dX shards with the batch; dW additionally charges the Alg-4 tree
-    reduction of the weight gradient as ici_words)."""
-    from repro.plan import planner_for
+    reduction of the weight gradient as ici_words).  Both cells honor the
+    ``autotune=`` policy like the forward."""
+    from repro.plan import autotune as at
 
     machine = machine or _BWD_MACHINE
     m = _fc_m(x_shape)
     k, n = w_shape
+    shape = dict(m=m, n=n, k=k, in_bytes=in_bytes)
     return {
-        "dx": planner_for("matmul_dx", machine, mesh, shard_axis).plan(
-            m=m, n=n, k=k, in_bytes=in_bytes),
-        "dw": planner_for("matmul_dw", machine, mesh, shard_axis).plan(
-            m=m, n=n, k=k, in_bytes=in_bytes),
+        "dx": at.resolve("matmul_dx", shape, machine=machine, mesh=mesh,
+                         axis=shard_axis, policy=autotune),
+        "dw": at.resolve("matmul_dw", shape, machine=machine, mesh=mesh,
+                         axis=shard_axis, policy=autotune),
     }
 
 
 def fc_layer_sharded(x, w, mesh, axis: str = "model",
                      schedule: ShardedSchedule | None = None,
-                     strategy: str | None = "psum"):
+                     strategy: str | None = "psum",
+                     machine=None, autotune=None):
     """The FC layer across a mesh axis, partitioned by the planner.
 
     x: [M, K]; w: [K, N]; returns the global [M, N].  The default pins the
@@ -129,11 +135,16 @@ def fc_layer_sharded(x, w, mesh, axis: str = "model",
     ``schedule`` (from :func:`plan` with ``mesh=``) overrides planning
     entirely.  Execution goes through the ``matmul`` op's registered
     sharded impl — the shard_map specs come from ``schedule.partition``.
+    Under an active ``autotune`` policy (argument or process-wide), a
+    measured winner cached for this ``(op, shapes, machine, mesh)`` cell
+    silently replaces the modeled pick.
     """
     op = get_op("matmul")
     if schedule is None:
         schedule = op.plan_sharded(x, w, mesh=mesh, axis=axis,
-                                   strategy=strategy)
+                                   strategy=strategy,
+                                   machine=machine or TPU_V5E,
+                                   autotune=autotune)
     return op.sharded(x, w, schedule=schedule, mesh=mesh)
 
 

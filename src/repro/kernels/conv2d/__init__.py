@@ -8,3 +8,9 @@ from repro.kernels.conv2d.bwd import (
 )
 from repro.kernels.conv2d.ops import conv2d, conv2d_op
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref
+
+__all__ = [
+    "conv2d", "conv2d_dgrad", "conv2d_dgrad_ref", "conv2d_fused_ref",
+    "conv2d_op", "conv2d_ref", "conv2d_wgrad", "conv2d_wgrad_ref",
+    "dgrad_op", "maxpool_ref", "wgrad_op",
+]

@@ -1,2 +1,4 @@
 from repro.kernels.flash_attention.ops import attention_op, flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention_op", "attention_ref", "flash_attention"]

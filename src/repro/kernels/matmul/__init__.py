@@ -8,3 +8,8 @@ from repro.kernels.matmul.bwd import (
 )
 from repro.kernels.matmul.ops import fc_matmul, matmul_op
 from repro.kernels.matmul.ref import fc_matmul_ref
+
+__all__ = [
+    "dw_op", "dx_op", "fc_matmul", "fc_matmul_ref", "matmul_dw",
+    "matmul_dw_ref", "matmul_dx", "matmul_dx_ref", "matmul_op",
+]

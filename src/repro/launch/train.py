@@ -18,7 +18,6 @@ restores the checkpoint with the new shardings.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 
@@ -71,7 +70,24 @@ def main() -> None:
                     help="cnn: run the planned Pallas forward AND backward "
                          "kernels (dgrad/wgrad conv, dX/dW matmul) in the "
                          "train step instead of the XLA reference path")
+    ap.add_argument("--autotune", default="off",
+                    choices=["off", "cache-only", "tune"],
+                    help="schedule resolution policy: cached measured-time "
+                         "winners override the planners' modeled argmin "
+                         "('tune' additionally measures top-k candidates on "
+                         "a cache miss; see repro.plan.autotune)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="autotune winner-cache file (default: "
+                         "$REPRO_AUTOTUNE_CACHE or ~/.cache/repro/"
+                         "autotune.json)")
     args = ap.parse_args()
+
+    if args.autotune != "off" or args.autotune_cache:
+        from repro.plan import autotune as at
+
+        at.set_policy(args.autotune, args.autotune_cache)
+        print(f"autotune: policy={args.autotune} "
+              f"cache={at.get_cache().path} ({len(at.get_cache())} cells)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     tcfg = TrainConfig(
@@ -166,7 +182,8 @@ def main() -> None:
         # partitioning plus the step's words split HBM vs interconnect
         # (the sharded wgrad/dw entries carry the gradient all-reduce).
         splan = cnn.plan_training(cfg, args.batch, mesh=ctx.plan_mesh(),
-                                  shard_axis=dp_axes[-1])
+                                  shard_axis=dp_axes[-1],
+                                  autotune=args.autotune)
         hbm = sum(s.hbm_words for s in splan.values())
         ici = sum(s.ici_words for s in splan.values())
         print(f"sharded plan: {len(splan)} kernels | modeled step words "

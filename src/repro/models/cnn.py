@@ -8,7 +8,6 @@ Config reuse: ``n_layers`` = conv stages, ``d_model`` = base channel width
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -116,7 +115,8 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
 
 
 def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
-                 machine=None, mesh=None, shard_axis: str = "data") -> dict:
+                 machine=None, mesh=None, shard_axis: str = "data",
+                 autotune=None) -> dict:
     """Plan every kernel launch of :func:`forward` without running it.
 
     Returns {stage name: Schedule} — pass back in via ``schedules=`` to pin
@@ -126,6 +126,8 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     stages shard the batch over ``shard_axis``, the FC stages pick their
     psum/ring/single dataflow by modeled words) — ``forward`` consumes
     either flavor, a 1-device mesh reproducing today's plans exactly.
+    ``autotune=`` ("cache-only"/"tune") resolves every stage through the
+    measured-winner cache (repro.plan.autotune) before the argmin.
     """
     from repro.core import conv_layer as cl
     from repro.core import fc_layer as fl
@@ -135,16 +137,18 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
         if name.startswith("conv"):
             out[name] = cl.plan(x_shape, w_shape, stride=1, padding=F // 2,
                                 pool=2, in_bytes=in_bytes, machine=machine,
-                                mesh=mesh, shard_axis=shard_axis)
+                                mesh=mesh, shard_axis=shard_axis,
+                                autotune=autotune)
         else:
             out[name] = fl.plan(x_shape, w_shape, in_bytes=in_bytes,
                                 machine=machine, mesh=mesh,
-                                shard_axis=shard_axis)
+                                shard_axis=shard_axis, autotune=autotune)
     return out
 
 
 def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
-                  machine=None, mesh=None, shard_axis: str = "data") -> dict:
+                  machine=None, mesh=None, shard_axis: str = "data",
+                  autotune=None) -> dict:
     """:func:`plan_forward` plus every backward kernel ``jax.grad`` runs:
     "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" for conv stages,
     "<stage>.dx"/"<stage>.dw" for FC stages.  Pass the result via
@@ -152,22 +156,23 @@ def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     kernels; sum ``.modeled_words`` for the step's modeled HBM traffic.
     With ``mesh=`` the wgrad/dw entries additionally charge the gradient
     all-reduce (Alg 4's tree reduction) as ``ici_words`` — the modeled
-    cost of data-parallel training, split HBM vs interconnect.
+    cost of data-parallel training, split HBM vs interconnect.  The
+    backward stages resolve through the same ``autotune=`` policy.
     """
     from repro.core import conv_layer as cl
     from repro.core import fc_layer as fl
 
     out = plan_forward(cfg, batch, in_bytes=in_bytes, machine=machine,
-                       mesh=mesh, shard_axis=shard_axis)
+                       mesh=mesh, shard_axis=shard_axis, autotune=autotune)
     for name, x_shape, w_shape in _stage_geometry(cfg, batch):
         if name.startswith("conv"):
             bwd = cl.plan_bwd(x_shape, w_shape, stride=1, padding=F // 2,
                               in_bytes=in_bytes, machine=machine, mesh=mesh,
-                              shard_axis=shard_axis)
+                              shard_axis=shard_axis, autotune=autotune)
         else:
             bwd = fl.plan_bwd(x_shape, w_shape, in_bytes=in_bytes,
                               machine=machine, mesh=mesh,
-                              shard_axis=shard_axis)
+                              shard_axis=shard_axis, autotune=autotune)
         for k, s in bwd.items():
             out[f"{name}.{k}"] = s
     return out

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import layers as ll
 from repro.models.module import ParamDef
 
 CHUNK = 128

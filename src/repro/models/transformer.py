@@ -8,7 +8,6 @@ per-layer scalars (window, theta), not as distinct HLO.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ f32 gradients.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

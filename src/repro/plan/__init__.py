@@ -45,6 +45,11 @@ from repro.plan.sharded import (
     mesh_spec,
     partition_specs,
 )
+# The autotuner (repro.plan.autotune: tune/resolve/set_policy/AutotuneCache)
+# is deliberately NOT imported here: it is its own CLI entry point
+# (`python -m repro.plan.autotune`), and importing it from the package
+# __init__ would shadow that runpy execution.  Import the submodule
+# directly: ``from repro.plan import autotune``.
 
 __all__ = [
     "AttentionPlanner",

@@ -1,0 +1,604 @@
+"""Measured-time Schedule autotuning with a persistent per-cell cache.
+
+The planners' argmin is a *model*: modeled main-memory words under the
+paper's capacity argument.  This module closes the ROADMAP's
+"autotuning search over Schedules" item by adding the measured-time mode
+on top of it (the standard closing move of kernel schedulers — AutoTVM's
+search, Triton's ``@autotune`` — cf. PAPERS.md):
+
+  * every planner exposes its enumeration (``Planner.candidates()`` —
+    the blocking ladder locally, one locally-argmin'd ShardedSchedule per
+    partition strategy on a mesh);
+  * :func:`tune` synthesizes operands for any registered ``pallas_op``
+    from planner shapes, times the top-k candidates (interpret mode off
+    TPU, real ``jax.block_until_ready`` timing on TPU; warmup +
+    median-of-n), and records the winner in a JSON cache keyed by the
+    ``(op, shapes, dtype, machine, mesh)`` cell — a schema-versioned,
+    hash-stable key, so separate processes and CI runs share winners;
+  * :func:`resolve` is the policy-aware schedule resolution every call
+    site uses: ``"off"`` is the plain modeled argmin, ``"cache-only"``
+    replays a cached winner (never times — safe under ``jax.jit``
+    tracing and on CI), ``"tune"`` measures on a miss and caches.
+
+Cached winners are *rebuilt through the planner* (strategy + blocks
+pinned), so their model fields (loads/stores/vmem_bytes) stay exact and
+the layers' ``fits()`` gating and XLA fallbacks are untouched — a tuned
+schedule is just a different point of the same enumeration.
+
+Timing protocol for multi-device candidates without a live mesh (e.g. the
+paper's 16-cluster MANTICORE quadrant on a CPU host): each strategy times
+its *per-device proxy* — the local kernel on partition-sliced operands
+(the ring times one K-chunk step and multiplies by P, since its resident
+X shard permutes P times) — plus the modeled interconnect time
+``ici_words * word / machine.link_bw``.  With a live ``run_mesh`` whose
+devices exist (forced host devices, a TPU slice), the registered
+``sharded_impl`` is executed and timed for real.
+
+CLI: ``python -m repro.plan.autotune --smoke`` (the tier1.sh
+--autotune-smoke gate) or ``--op matmul --shape m=32,n=4096,k=25088
+--machine manticore --mesh cluster=16``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+import warnings
+
+import jax
+import numpy as np
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.plan.planners import planner_for
+from repro.plan.schedule import Schedule
+from repro.plan.sharded import MeshSpec, ShardedSchedule, local_schedule, mesh_spec
+
+# Bump to invalidate every cached winner (key derivation, record layout,
+# or timing-protocol changes all warrant it).
+SCHEMA_VERSION = 1
+
+POLICIES = ("off", "cache-only", "tune")
+
+_POLICY = os.environ.get("REPRO_AUTOTUNE", "off")
+_CACHE_PATH: str | None = None  # None -> env / default, resolved lazily
+_CACHES: dict[str, "AutotuneCache"] = {}
+_TUNING = False  # reentrancy guard: never autotune inside a tuning run
+
+
+def default_cache_path() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+def set_policy(policy: str, cache_path: str | None = None) -> None:
+    """Set the process-wide autotune policy (and optionally the cache
+    file) — what ``launch/train.py --autotune`` calls.  Explicit
+    ``autotune=`` arguments at call sites override it per call."""
+    global _POLICY, _CACHE_PATH
+    if policy not in POLICIES:
+        raise ValueError(f"autotune policy must be one of {POLICIES}, "
+                         f"got {policy!r}")
+    _POLICY = policy
+    if cache_path is not None:
+        _CACHE_PATH = cache_path
+
+
+def get_policy() -> str:
+    return _POLICY
+
+
+def get_cache(path: str | None = None) -> "AutotuneCache":
+    """The process-wide cache for ``path`` (default: the configured /
+    env-derived location); one instance per file."""
+    path = path or _CACHE_PATH or default_cache_path()
+    if path not in _CACHES:
+        _CACHES[path] = AutotuneCache(path)
+    return _CACHES[path]
+
+
+# ---------------------------------------------------------------------------
+# Cache key: the (op, shapes, dtype, machine, mesh) cell
+# ---------------------------------------------------------------------------
+
+
+def _canonical_shape(shape: dict) -> list:
+    """Sorted ``[name, value]`` pairs with unset (None) knobs dropped —
+    two processes asking the same planner question hash identically."""
+    return [[k, v] for k, v in sorted(shape.items()) if v is not None]
+
+
+def cache_key(
+    op: str, shape: dict, dtype, machine: MachineModel,
+    mesh: MeshSpec | None = None, axis: str = "model",
+    strategy: str | None = None,
+) -> tuple[str, str]:
+    """``(readable, digest)`` for one autotuning cell.  ``readable`` is a
+    canonical JSON encoding of ``(schema, op, shapes, dtype, machine,
+    mesh, axis, strategy)``; ``digest`` is its sha256 — stable across
+    processes and machines (only named model objects enter the key)."""
+    ms = mesh_spec(mesh) if mesh is not None else None
+    cell = [
+        SCHEMA_VERSION, op, _canonical_shape(shape), str(np.dtype(dtype)),
+        machine.name,
+        None if ms is None else [[a, int(s)] for a, s in ms.axes],
+        axis if ms is not None else None,
+        strategy,
+    ]
+    readable = json.dumps(cell, sort_keys=False, separators=(",", ":"))
+    return readable, hashlib.sha256(readable.encode()).hexdigest()
+
+
+class AutotuneCache:
+    """Persistent JSON winner cache: ``{"schema": N, "entries": {digest:
+    {"key": readable, "strategy": ..., "blocks": {...}, "us": ...}}}``.
+
+    A corrupted or schema-mismatched file is treated as empty (the
+    modeled argmin remains correct without it); writes are atomic
+    (tmp + rename) and merge with the on-disk state so concurrent
+    processes lose at most their own last winner."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.generation = 0
+        self._entries: dict[str, dict] | None = None
+        self._memo: dict[str, Schedule | ShardedSchedule] = {}
+
+    # -- persistence ------------------------------------------------------
+
+    def _read_disk(self) -> dict[str, dict]:
+        try:
+            with open(self.path) as fh:
+                data = json.load(fh)
+            if not isinstance(data, dict) or data.get("schema") != SCHEMA_VERSION:
+                return {}
+            entries = data.get("entries")
+            return entries if isinstance(entries, dict) else {}
+        except FileNotFoundError:
+            return {}
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError, ValueError) as e:
+            warnings.warn(f"autotune cache {self.path!r} unreadable ({e}); "
+                          "treating as empty", stacklevel=3)
+            return {}
+
+    def load(self) -> dict[str, dict]:
+        if self._entries is None:
+            self._entries = self._read_disk()
+        return self._entries
+
+    def reload(self) -> None:
+        self._entries = None
+        self._memo.clear()
+        self.generation += 1
+
+    # -- access -----------------------------------------------------------
+
+    def get(self, digest: str) -> dict | None:
+        return self.load().get(digest)
+
+    def put(self, digest: str, readable: str, record: dict) -> None:
+        entries = {**self._read_disk(), **self.load()}
+        entries[digest] = {"key": readable, **record}
+        self._entries = entries
+        self._memo.clear()
+        self.generation += 1
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as fh:
+            json.dump({"schema": SCHEMA_VERSION, "entries": entries}, fh,
+                      indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self.load())
+
+
+# ---------------------------------------------------------------------------
+# Operand synthesis: planner shapes -> concrete arrays for timing
+# ---------------------------------------------------------------------------
+
+
+def _dtype_for(dtype, in_bytes) -> np.dtype:
+    if dtype is not None:
+        return np.dtype(dtype)
+    import jax.numpy as jnp
+
+    table = {2: np.dtype(jnp.bfloat16), 8: np.dtype(np.float64)}
+    return table.get(in_bytes, np.dtype(np.float32))
+
+
+def _conv_input_extent(out: int, F: int, S: int, P: int) -> int:
+    return (out - 1) * S + F - 2 * P
+
+
+def synthesize(op: str, shape: dict, dtype) -> tuple[tuple, dict]:
+    """Concrete ``(arrays, call_params)`` for one op's planner shapes —
+    what :func:`tune` times candidates on.  Contents are random but
+    deterministic; only shapes/dtypes matter to the measurement."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+
+    def arr(*dims):
+        return jnp.asarray(rng.standard_normal(dims).astype(np.float32),
+                           jnp.dtype(dtype))
+
+    if op in ("conv2d", "conv2d_dgrad", "conv2d_wgrad"):
+        F, S = shape["F"], shape.get("S", 1)
+        P = shape.get("padding", shape.get("P", 0)) or 0
+        B = shape.get("batch", 1)
+        H_O, W_O = shape["H_O"], shape["W_O"]
+        d_in, d_out = shape["d_in"], shape["d_out"]
+        H_I = shape.get("H_I") or _conv_input_extent(H_O, F, S, P)
+        W_I = shape.get("W_I") or _conv_input_extent(W_O, F, S, P)
+        if op == "conv2d":
+            pool = shape.get("pool", 1) or 1
+            # The planner's H_O/W_O describe the pre-pool plane; the
+            # traffic model stores pooled outputs, so time the fused form.
+            return ((arr(B, H_I, W_I, d_in), arr(F, F, d_in, d_out),
+                     arr(d_out)),
+                    dict(stride=S, padding=P, relu=pool > 1, pool=pool))
+        if op == "conv2d_dgrad":
+            return ((arr(B, H_O, W_O, d_out), arr(F, F, d_in, d_out)),
+                    dict(stride=S, padding=P, out_hw=(H_I, W_I)))
+        return ((arr(B, H_I, W_I, d_in), arr(B, H_O, W_O, d_out)),
+                dict(F=F, stride=S, padding=P))
+
+    if op in ("matmul", "matmul_dx", "matmul_dw"):
+        m, n, k = shape["m"], shape["n"], shape["k"]
+        if op == "matmul":
+            return (arr(m, k), arr(k, n)), {}
+        if op == "matmul_dx":  # dX = dY @ W^T
+            return (arr(m, n), arr(k, n)), {}
+        return (arr(m, k), arr(m, n)), {}  # dW = X^T @ dY
+
+    if op == "flash_attention":
+        B = shape.get("batch", 1)
+        Hq, Hkv = shape.get("n_q_heads", 1), shape.get("n_kv_heads", 1)
+        Sq, Skv, D = shape["seq_q"], shape["seq_kv"], shape["head_dim"]
+        return ((arr(B, Hq, Sq, D), arr(B, Hkv, Skv, D), arr(B, Hkv, Skv, D)),
+                dict(causal=shape.get("causal", True),
+                     window=shape.get("window")))
+
+    raise KeyError(f"autotune has no operand synthesizer for op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
+
+def _measure(fn, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall microseconds of ``fn`` (compile excluded via warmup)."""
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _proxy_operands(op: str, ss: ShardedSchedule, arrays: tuple):
+    """``(operands, seq, schedule)`` of a sharded candidate's per-device
+    proxy (no live mesh).  Default: slice every operand dim partitioned
+    on the schedule's axis (one device's shard — psum/batch/stack run
+    their whole local work in one call) under the local schedule.  The
+    ring is special: its resident X shard permutes P times, so the proxy
+    is a single (K/P, N/P) chunk step repeated ``devices`` times — with
+    ``block_k`` clamped to the chunk, because the ring's local schedule
+    is planned against the *full* K extent and an unclamped block would
+    pad the K/P chunk back up to block_k, inflating the measurement."""
+    P = ss.devices
+    local = ss.schedule
+    if ss.strategy == "ring" and op == "matmul":
+        x, w = arrays
+        k_step = max(1, x.shape[1] // P)
+        local = local.evolve(block_k=min(local.block("block_k"), k_step))
+        return (x[:, :k_step], w[:k_step, : max(1, w.shape[1] // P)]), P, local
+    out = []
+    for a, part in zip(arrays, ss.partition):
+        idx = [slice(None)] * a.ndim
+        for d, ax in enumerate(part[: a.ndim]):
+            if ax == ss.axis:
+                idx[d] = slice(0, max(1, a.shape[d] // P))
+        out.append(a[tuple(idx)])
+    return tuple(out), 1, local
+
+
+def _time_candidate(op, arrays, params, cand, machine: MachineModel,
+                    run_mesh, iters: int, warmup: int) -> float:
+    """Wall-time one candidate (see the module docstring's protocol)."""
+    local = local_schedule(cand)
+    sharded = isinstance(cand, ShardedSchedule)
+    if sharded and cand.devices > 1 and cand.strategy != "single":
+        if run_mesh is not None and op.sharded_impl is not None:
+            return _measure(
+                lambda: op.sharded(*arrays, schedule=cand, mesh=run_mesh,
+                                   **params),
+                iters, warmup)
+        proxy, seq, proxy_sched = _proxy_operands(op.name, cand, arrays)
+        word = arrays[0].dtype.itemsize
+        ici_us = cand.ici_words * word / machine.link_bw * 1e6
+        us = _measure(lambda: op(*proxy, schedule=proxy_sched, **params),
+                      iters, warmup)
+        return us * seq + ici_us
+    return _measure(lambda: op(*arrays, schedule=local, **params),
+                    iters, warmup)
+
+
+def _label(cand) -> str:
+    blocks = dict(local_schedule(cand).blocks)
+    if isinstance(cand, ShardedSchedule):
+        return f"{cand.strategy}:{blocks}"
+    return str(blocks)
+
+
+# ---------------------------------------------------------------------------
+# tune / lookup / resolve
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneReport:
+    """One :func:`tune` outcome: the winning schedule, what was measured
+    (``(label, us, modeled_words)`` rows, empty on a cache replay), and
+    whether it came from the cache without timing."""
+
+    key: str
+    schedule: Schedule | ShardedSchedule
+    measurements: tuple
+    cached: bool
+
+
+def _rebuild(op: str, shape: dict, rec: dict, machine: MachineModel,
+             mesh, axis: str):
+    """Reconstruct a cached winner through the planner: strategy + block
+    pins re-planned so every model field is exact (not deserialized)."""
+    blocks = {str(k): int(v) for k, v in rec.get("blocks", {}).items()}
+    strategy = rec.get("strategy")
+    planner = planner_for(op, machine, mesh, axis,
+                          strategy if mesh is not None else None)
+    return planner.plan(**{**shape, **blocks})
+
+
+def tune(
+    op, *, machine: MachineModel = TPU_V5E, mesh=None, axis: str = "model",
+    strategy: str | None = None, topk: int = 4, iters: int = 3,
+    warmup: int = 1, dtype=None, cache: AutotuneCache | None = None,
+    run_mesh=None, force: bool = False, **shape,
+) -> TuneReport:
+    """Measure the top-``topk`` candidate Schedules of one cell and cache
+    the winner.
+
+    ``op`` is a registered ``pallas_op`` name (or handle); ``**shape``
+    are its planner's keyword shapes (what ``PallasOp.shape_args``
+    produces).  Candidates come from ``planner.candidates()`` ranked by
+    modeled words; a cached winner short-circuits unless ``force=``.
+    ``run_mesh`` (a live ``jax.sharding.Mesh``) executes multi-device
+    strategies for real; without one they time through the per-device
+    proxy protocol.  Returns a :class:`TuneReport`.
+    """
+    global _TUNING
+    from repro.plan.registry import get_op
+
+    opo = get_op(op) if isinstance(op, str) else op
+    if cache is None:  # NB: an empty cache is falsy (len 0) but valid
+        cache = get_cache()
+    ms = mesh_spec(mesh) if mesh is not None else None
+    dt = _dtype_for(dtype, shape.get("in_bytes"))
+    readable, digest = cache_key(opo.name, shape, dt, machine, ms, axis,
+                                 strategy)
+    if not force:
+        rec = cache.get(digest)
+        if rec is not None:
+            return TuneReport(
+                key=digest,
+                schedule=_rebuild(opo.name, shape, rec, machine, ms, axis),
+                measurements=tuple(tuple(m) for m in rec.get("measured", ())),
+                cached=True)
+
+    planner = planner_for(opo.name, machine, ms, axis, strategy)
+    cands = planner.candidates(**shape)[: max(1, topk)]
+    arrays, params = synthesize(opo.name, shape, dt)
+    measured, timed = [], []
+    _TUNING = True
+    try:
+        for c in cands:
+            us = _time_candidate(opo, arrays, params, c, machine, run_mesh,
+                                 iters, warmup)
+            measured.append((_label(c), us, c.modeled_words))
+            timed.append((us, c))
+    finally:
+        _TUNING = False
+    us, winner = min(timed, key=lambda t: t[0])
+    record = {
+        "op": opo.name,
+        "strategy": winner.strategy if isinstance(winner, ShardedSchedule)
+        else None,
+        "blocks": dict(local_schedule(winner).blocks),
+        "us": us,
+        "modeled_words": winner.modeled_words,
+        "measured": [list(m) for m in measured],
+    }
+    cache.put(digest, readable, record)
+    return TuneReport(key=digest, schedule=winner,
+                      measurements=tuple(measured), cached=False)
+
+
+def lookup(
+    op: str, shape: dict, *, machine: MachineModel = TPU_V5E, mesh=None,
+    axis: str = "model", strategy: str | None = None,
+    cache: AutotuneCache | None = None, dtype=None,
+) -> Schedule | ShardedSchedule | None:
+    """The cached winner of one cell, rebuilt through the planner — or
+    ``None`` on a miss.  Never times anything (``cache-only`` safe)."""
+    if cache is None:  # NB: an empty cache is falsy (len 0) but valid
+        cache = get_cache()
+    ms = mesh_spec(mesh) if mesh is not None else None
+    dt = _dtype_for(dtype, shape.get("in_bytes"))
+    _, digest = cache_key(op, shape, dt, machine, ms, axis, strategy)
+    memo = cache._memo
+    if digest in memo:
+        return memo[digest]
+    rec = cache.get(digest)
+    if rec is None:
+        return None
+    try:
+        sched = _rebuild(op, shape, rec, machine, ms, axis)
+    except Exception as e:  # a stale pin the planner now rejects
+        warnings.warn(f"autotune cache entry for {op!r} unusable ({e}); "
+                      "falling back to the modeled argmin", stacklevel=2)
+        return None
+    memo[digest] = sched
+    return sched
+
+
+def tuned_schedule(
+    op: str, shape: dict, *, machine: MachineModel = TPU_V5E, mesh=None,
+    axis: str = "model", strategy: str | None = None,
+    policy: str | None = None, cache: AutotuneCache | None = None,
+    dtype=None,
+) -> Schedule | ShardedSchedule | None:
+    """The autotune override for one resolution, or ``None`` when the
+    modeled argmin should stand: policy "off" (or reentrant tuning) is
+    always ``None``; "cache-only" is lookup-only; "tune" measures on a
+    miss (synthesized operands — safe even while tracing, since the
+    timing runs eagerly on its own arrays) but never raises."""
+    pol = policy or _POLICY
+    if pol == "off" or _TUNING:
+        return None
+    if pol not in POLICIES:
+        raise ValueError(f"autotune policy must be one of {POLICIES}, "
+                         f"got {pol!r}")
+    got = lookup(op, shape, machine=machine, mesh=mesh, axis=axis,
+                 strategy=strategy, cache=cache, dtype=dtype)
+    if got is not None or pol == "cache-only":
+        return got
+    try:
+        return tune(op, machine=machine, mesh=mesh, axis=axis,
+                    strategy=strategy, cache=cache, dtype=dtype,
+                    **shape).schedule
+    except Exception as e:
+        warnings.warn(f"autotuning {op!r} failed ({e}); falling back to "
+                      "the modeled argmin", stacklevel=2)
+        return None
+
+
+def resolve(
+    op: str, shape: dict, *, machine: MachineModel = TPU_V5E, mesh=None,
+    axis: str = "model", strategy: str | None = None,
+    policy: str | None = None, cache: AutotuneCache | None = None,
+    dtype=None,
+) -> Schedule | ShardedSchedule:
+    """Policy-aware schedule resolution (what every ``plan`` helper and
+    the op registry route through): a cached/measured winner when the
+    policy provides one, else the planner's modeled argmin."""
+    got = tuned_schedule(op, shape, machine=machine, mesh=mesh, axis=axis,
+                         strategy=strategy, policy=policy, cache=cache,
+                         dtype=dtype)
+    if got is not None:
+        return got
+    return planner_for(op, machine, mesh, axis, strategy).plan(**shape)
+
+
+# ---------------------------------------------------------------------------
+# CLI: the tier1.sh --autotune-smoke gate and ad-hoc cell tuning
+# ---------------------------------------------------------------------------
+
+
+def _smoke() -> int:
+    """Tune one tiny conv cell and one FC cell (interpret mode) against
+    a throwaway cache (a configured cache — $REPRO_AUTOTUNE_CACHE or
+    --cache — is honored, but is *cleared of the smoke cells first* so
+    the tune-then-replay assertion stays idempotent), then assert both
+    winners replay from it.  Never touches the default user cache."""
+    import tempfile
+
+    if _CACHE_PATH or os.environ.get("REPRO_AUTOTUNE_CACHE"):
+        cache = get_cache()
+    else:
+        cache = AutotuneCache(os.path.join(tempfile.mkdtemp(), "autotune.json"))
+    cells = [
+        ("conv2d", dict(H_O=8, W_O=8, F=3, S=1, d_in=8, d_out=16,
+                        in_bytes=4, padding=1, batch=2, pool=2)),
+        ("matmul", dict(m=16, n=256, k=64, in_bytes=4)),
+    ]
+    print("op,us,cached,blocks")
+    for op, shape in cells:
+        first = tune(op, topk=3, iters=1, warmup=1, cache=cache,
+                     force=True, **shape)
+        replay = tune(op, topk=3, iters=1, warmup=1, cache=cache, **shape)
+        assert not first.cached and replay.cached, (
+            f"{op}: expected tune-then-replay, got cached="
+            f"{first.cached},{replay.cached}")
+        a, b = local_schedule(first.schedule), local_schedule(replay.schedule)
+        assert a.blocks == b.blocks and a.grid == b.grid, (
+            f"{op}: cache replay diverged: {a} vs {b}")
+        for label, us, words in first.measurements:
+            print(f"{op}:{label},{us:.1f},False,words={words}")
+        print(f"{op}:winner,{dict(b.blocks)},True,"
+              f"replayed_from={cache.path}")
+    print(f"autotune smoke ok ({len(cache)} cached cells)")
+    return 0
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.core.machine import MACHINES
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny conv+fc tune against the configured cache; "
+                         "assert the winners replay (CI gate)")
+    ap.add_argument("--op", default=None, help="registered pallas_op name")
+    ap.add_argument("--shape", default="",
+                    help="comma-separated planner shapes, e.g. "
+                         "m=32,n=4096,k=25088")
+    ap.add_argument("--machine", default="tpu_v5e", choices=sorted(MACHINES))
+    ap.add_argument("--mesh", default=None,
+                    help="mesh axes, e.g. cluster=16 (model-side MeshSpec)")
+    ap.add_argument("--axis", default=None,
+                    help="partitioned mesh axis (default: first --mesh axis)")
+    ap.add_argument("--topk", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--cache", default=None, help="cache file override")
+    ap.add_argument("--force", action="store_true", help="re-measure")
+    args = ap.parse_args(argv)
+
+    if args.cache:
+        set_policy(_POLICY if _POLICY in POLICIES else "off", args.cache)
+    if args.smoke:
+        return _smoke()
+    if not args.op:
+        ap.error("--op (or --smoke) required")
+    shape = {}
+    for tok in filter(None, args.shape.split(",")):
+        k, _, v = tok.partition("=")
+        shape[k.strip()] = int(v)
+    mesh = axis = None
+    if args.mesh:
+        pairs = [tok.partition("=") for tok in args.mesh.split(",")]
+        mesh = MeshSpec(tuple((k, int(v)) for k, _, v in pairs))
+        axis = args.axis or mesh.axes[0][0]
+    rep = tune(args.op, machine=MACHINES[args.machine], mesh=mesh,
+               axis=axis or "model", topk=args.topk, iters=args.iters,
+               warmup=args.warmup, force=args.force, **shape)
+    print(f"cell {rep.key[:16]} cached={rep.cached}")
+    for label, us, words in rep.measurements:
+        print(f"  {label}: {us:.1f}us modeled_words={words}")
+    w = rep.schedule
+    strat = w.strategy if isinstance(w, ShardedSchedule) else "local"
+    print(f"winner [{strat}] {dict(local_schedule(w).blocks)} -> "
+          f"{get_cache().path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,6 +38,21 @@ def _align_down(x: int, m: int) -> int:
     return x // m * m
 
 
+def _strip_ladder(H_O: int, floor: int) -> list[int]:
+    """Strip-height candidates: H_O and its power-of-two fractions, rounded
+    up to ``floor`` granularity, tallest first — the same ladder every
+    conv-family plan_local searches."""
+    cands, k = [], 1
+    while True:
+        hb = round_up(-(-H_O // k), floor)
+        if not cands or hb < cands[-1]:
+            cands.append(hb)
+        if hb <= floor:
+            break
+        k *= 2
+    return cands
+
+
 @runtime_checkable
 class Planner(Protocol):
     """The planner contract: shapes in, one best Schedule out (a
@@ -79,6 +94,70 @@ class ShardablePlanner:
 
     def plan_local(self, **shape) -> Schedule:  # pragma: no cover - abstract
         raise NotImplementedError
+
+    # -- candidate enumeration (the argmin's search space, exposed) -------
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """The single-device Schedules the argmin chooses between, one per
+        point of the op's tunable ladder (each completed to its best
+        remaining blocking).  The base planner has a one-point space; ops
+        with a real search override this.  Used by ``candidates()`` and
+        the measured-time autotuner (repro.plan.autotune)."""
+        return [self.plan_local(**shape)]
+
+    def _ladder_candidates(self, name: str, floor: int, **shape) -> list[Schedule]:
+        """Halving ladder over one block kwarg: the argmin's pick, then
+        ``floor``-aligned halvings down to ``floor`` — each re-planned so
+        the remaining blocks adapt.  An explicit pin collapses the ladder."""
+        base = self.plan_local(**shape)
+        if shape.get(name) is not None:
+            return [base]
+        out, seen = [], set()
+        v = base.block(name)
+        while True:
+            s = self.plan_local(**{**shape, name: v})
+            if s.blocks not in seen and s.fits(self.machine):
+                out.append(s)
+                seen.add(s.blocks)
+            if v <= floor:
+                break
+            v = max(floor, _align_down(v // 2, floor) or floor)
+        return out or [base]
+
+    def candidates(self, **shape) -> list:
+        """Every (Sharded)Schedule the planner's argmin considers, sorted
+        by modeled words (the plan() winner first).  Meshless planners
+        enumerate the local blocking ladder; mesh-bound planners enumerate
+        one locally-argmin'd ShardedSchedule per partition strategy
+        (psum vs ring vs batch/stack...), honoring a ``strategy=`` pin —
+        the search space the measured-time autotuner benchmarks."""
+        if self.mesh is None:
+            cands = self.local_candidates(**shape)
+        elif self.shard_group == 1:
+            cands = [self.plan_sharded(**shape)]
+        else:
+            pin = self.strategy
+            strategies = []
+            for c in self._shard_candidates(self.shard_group, **shape):
+                if c.strategy not in strategies and (pin is None
+                                                     or c.strategy == pin):
+                    strategies.append(c.strategy)
+            if not strategies:
+                # An unsatisfiable pin: raise the argmin's informative
+                # error rather than returning an empty enumeration.
+                self.plan_sharded(**shape)
+                raise AssertionError("plan_sharded must raise here")
+            cands = [dataclasses.replace(self, strategy=st).plan_sharded(**shape)
+                     for st in strategies]
+        out, seen = [], set()
+        for s in sorted(cands, key=lambda s: s.modeled_words):
+            key = (getattr(s, "strategy", None), s.grid
+                   if isinstance(s, Schedule) else s.schedule.grid,
+                   s.blocks if isinstance(s, Schedule) else s.schedule.blocks)
+            if key not in seen:
+                seen.add(key)
+                out.append(s)
+        return out
 
     @property
     def shard_group(self) -> int:
@@ -282,15 +361,7 @@ class ConvPlanner(ShardablePlanner):
             if block_h is not None:
                 cands = [clamp_h(block_h)]
             else:
-                cands = []
-                k = 1
-                while True:
-                    hb = round_up(-(-H_O // k), pool)
-                    if not cands or hb < cands[-1]:
-                        cands.append(hb)
-                    if hb <= pool:
-                        break
-                    k *= 2
+                cands = _strip_ladder(H_O, pool)
             budget = m.usable_for_working_set(streams=2)
             best = None
             for hb in cands:
@@ -334,6 +405,20 @@ class ConvPlanner(ShardablePlanner):
             vmem_bytes=self._vmem_bytes(hb, bdo, bdi, W_O, W_stream, F, S, in_bytes),
             machine=m.name,
         )
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """One candidate per strip height of the two-dimensional search
+        (each completed to its best fitting stack), tallest first."""
+        if shape.get("block_h") is not None:
+            return [self.plan_local(**shape)]
+        pool = shape.get("pool") or 1
+        out, seen = [], set()
+        for hb in _strip_ladder(shape["H_O"], pool):
+            s = self.plan_local(**{**shape, "block_h": hb})
+            if s.blocks not in seen and s.fits(self.machine):
+                out.append(s)
+                seen.add(s.blocks)
+        return out or [self.plan_local(**shape)]
 
 
 # ---------------------------------------------------------------------------
@@ -391,6 +476,23 @@ class ConvDgradPlanner(ShardablePlanner):
             block_h=block_h, block_do=block_do, block_di=block_di,
         )
         return dataclasses.replace(inner, op=self.op)
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """Strip ladder over the dX extent (the transposed geometry's
+        output plane), each delegated through the forward search."""
+        if shape.get("block_h") is not None:
+            return [self.plan_local(**shape)]
+        F, S, P = shape["F"], shape.get("S", 1), shape.get("P", 0)
+        H_I = shape.get("H_I")
+        if H_I is None:
+            H_I = (shape["H_O"] - 1) * S + 1 + 2 * (F - 1 - P) - F + 1
+        out, seen = [], set()
+        for hb in _strip_ladder(H_I, 1):
+            s = self.plan_local(**{**shape, "block_h": hb})
+            if s.blocks not in seen and s.fits(self.machine):
+                out.append(s)
+                seen.add(s.blocks)
+        return out or [self.plan_local(**shape)]
 
 
 def conv_wgrad_words(
@@ -505,16 +607,8 @@ class ConvWgradPlanner(ShardablePlanner):
         if block_h is not None and block_do is not None:
             hb, bdo = block_h, block_do
         else:
-            cands = [block_h] if block_h is not None else []
-            if not cands:
-                k = 1
-                while True:
-                    hb = -(-H_O // k)
-                    if not cands or hb < cands[-1]:
-                        cands.append(hb)
-                    if hb <= 1:
-                        break
-                    k *= 2
+            cands = ([block_h] if block_h is not None
+                     else _strip_ladder(H_O, 1))
             budget = m.usable_for_working_set(streams=2)
             best = None
             for hb in cands:
@@ -558,6 +652,19 @@ class ConvWgradPlanner(ShardablePlanner):
                                         in_bytes),
             machine=m.name,
         )
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """One candidate per gradient-strip height, each with its best
+        fitting gradient stack — the wgrad argmin's search space."""
+        if shape.get("block_h") is not None:
+            return [self.plan_local(**shape)]
+        out, seen = [], set()
+        for hb in _strip_ladder(shape["H_O"], 1):
+            s = self.plan_local(**{**shape, "block_h": hb})
+            if s.blocks not in seen and s.fits(self.machine):
+                out.append(s)
+                seen.add(s.blocks)
+        return out or [self.plan_local(**shape)]
 
 
 # ---------------------------------------------------------------------------
@@ -658,6 +765,11 @@ class MatmulPlanner(ShardablePlanner):
             machine=mm.name,
         )
 
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """Halving ladder over block_n — the Delta_O output stack the
+        capacity argument maximizes (the budget max, then halves)."""
+        return self._ladder_candidates("block_n", self.machine.lane, **shape)
+
 
 # ---------------------------------------------------------------------------
 # Matmul backward: dX = G @ W^T and dW = X^T @ G
@@ -713,6 +825,11 @@ class MatmulDxPlanner(ShardablePlanner):
             "block_m": "block_m", "block_n": "block_k", "block_k": "block_n",
         })
 
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """Halving ladder over block_k — dX's resident output stack (the
+        forward role of the transposed Delta_O)."""
+        return self._ladder_candidates("block_k", self.machine.lane, **shape)
+
 
 @dataclasses.dataclass(frozen=True)
 class MatmulDwPlanner(ShardablePlanner):
@@ -750,6 +867,11 @@ class MatmulDwPlanner(ShardablePlanner):
         return _relabel_matmul(inner, self.op, {
             "block_m": "block_k", "block_n": "block_n", "block_k": "block_m",
         })
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """Halving ladder over block_n — the streamed half of dW's
+        resident [block_k, block_n] accumulator tile."""
+        return self._ladder_candidates("block_n", self.machine.lane, **shape)
 
 
 # ---------------------------------------------------------------------------
@@ -846,6 +968,27 @@ class AttentionPlanner(ShardablePlanner):
             vmem_bytes=self._vmem_bytes(bq, bkv, head_dim, in_bytes),
             machine=self.machine.name,
         )
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """The argmin's (block_q, block_kv) pick plus the sublane-aligned
+        halvings of each — the small 2-D neighbourhood the downward
+        capacity rule walks."""
+        if (shape.get("block_q") is not None
+                or shape.get("block_kv") is not None):
+            return [self.plan_local(**shape)]
+        base = self.plan_local(**shape)
+        bq, bkv = base.block("block_q"), base.block("block_kv")
+        sub = self._SUBLANE
+        out, seen = [base], {base.blocks}
+        for q2, kv2 in ((bq, bkv // 2), (bq // 2, bkv), (bq // 2, bkv // 2)):
+            if q2 < sub or kv2 < sub:
+                continue
+            s = self.plan_local(**{**shape, "block_q": round_up(q2, sub),
+                                   "block_kv": round_up(kv2, sub)})
+            if s.blocks not in seen and s.fits(self.machine):
+                out.append(s)
+                seen.add(s.blocks)
+        return out
 
 
 PLANNERS: dict[str, type] = {

@@ -134,33 +134,49 @@ class PallasOp:
             return self.planner(machine)
         return self.planner(machine, mesh_spec(mesh), shard_axis, strategy)
 
-    def plan(self, *arrays, machine: MachineModel = TPU_V5E, **params) -> Schedule:
+    def plan(self, *arrays, machine: MachineModel = TPU_V5E,
+             autotune: str | None = None, **params) -> Schedule:
         """Plan from concrete operands (shapes/dtypes only are read).
-        Cached per (planner, shapes): eager call loops re-plan for free."""
+        Cached per (planner, shapes): eager call loops re-plan for free.
+        ``autotune`` overrides the process policy for this resolution —
+        under "cache-only"/"tune" a measured winner beats the argmin."""
         shape = self.shape_args(*arrays, **params)
+        tuned = _tuned(self.name, shape, machine, None, "model", None,
+                       autotune, arrays[0].dtype)
+        if tuned is not None:
+            return tuned
         return _cached_plan(self.planner(machine), tuple(sorted(shape.items())))
 
     def plan_sharded(
         self, *arrays, mesh, machine: MachineModel = TPU_V5E,
-        axis: str = "model", strategy: str | None = None, **params,
+        axis: str = "model", strategy: str | None = None,
+        autotune: str | None = None, **params,
     ) -> ShardedSchedule:
         """Plan from concrete operands against a ``(machine, mesh)`` pair:
         the returned ShardedSchedule carries the device partitioning and
-        the HBM/ICI word split (cached like :meth:`plan`)."""
+        the HBM/ICI word split (cached like :meth:`plan`; a tuned winner
+        for the ``(op, shapes, machine, mesh)`` cell overrides the
+        modeled psum-vs-ring-vs-batch pick)."""
         shape = self.shape_args(*arrays, **params)
+        tuned = _tuned(self.name, shape, machine, mesh_spec(mesh), axis,
+                       strategy, autotune, arrays[0].dtype)
+        if tuned is not None:
+            return tuned
         planner = self.planner_for(machine, mesh, axis, strategy)
         return _cached_plan(planner, tuple(sorted(shape.items())))
 
     def __call__(
         self, *arrays, schedule: Schedule | ShardedSchedule | None = None,
         machine: MachineModel = TPU_V5E, interpret: bool | None = None,
-        out_dtype=None, **params,
+        out_dtype=None, autotune: str | None = None, **params,
     ) -> jax.Array:
         interpret = default_interpret(interpret)
         out_dtype = out_dtype or arrays[0].dtype
         schedule = local_schedule(schedule)  # degenerate sharded plans run local
         if schedule is None:
-            schedule = self.plan(*arrays, machine=machine, **params)
+            schedule = local_schedule(
+                self.plan(*arrays, machine=machine, autotune=autotune,
+                          **params))
         return self.impl(
             *arrays, schedule=schedule, out_dtype=out_dtype,
             interpret=interpret, **params,
@@ -196,6 +212,19 @@ def _cached_plan(planner: Planner, shape_items: tuple) -> Schedule:
     """Planners are frozen dataclasses and shape kwargs are hashable ints,
     so identical (planner, shapes) pairs return the memoized Schedule."""
     return planner.plan(**dict(shape_items))
+
+
+def _tuned(name, shape, machine, mesh, axis, strategy, policy, dtype):
+    """The measured-time override for one schedule resolution (see
+    repro.plan.autotune), or ``None`` when the modeled argmin stands —
+    policy "off" short-circuits before the autotuner is even imported."""
+    from repro.plan import autotune as _at
+
+    if (policy or _at.get_policy()) == "off":
+        return None
+    return _at.tuned_schedule(name, shape, machine=machine, mesh=mesh,
+                              axis=axis, strategy=strategy, policy=policy,
+                              dtype=dtype)
 
 
 _OPS: dict[str, PallasOp] = {}

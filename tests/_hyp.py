@@ -6,6 +6,9 @@ at collection time instead of blowing up the whole module import — so the
 non-property tests in a file keep running on minimal environments.
 """
 
+# Re-exports (the shim's whole API — keeps F401 quiet on the real branch).
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

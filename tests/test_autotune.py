@@ -1,0 +1,384 @@
+"""Measured-time Schedule autotuning (repro.plan.autotune; DESIGN.md
+Sec. 6): cache-key stability across processes, schema-version
+invalidation, policy semantics (cache-only never times; corrupt caches
+fall back to the modeled argmin), candidate enumeration, and the spy
+tests asserting a cached winner is what the kernels actually execute —
+including ``fc_layer_sharded`` on the forced 4-device host mesh and the
+paper's FC6 cell over the 16-cluster MANTICORE quadrant."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.machine import MANTICORE, TPU_V5E
+from repro.plan import MeshSpec, ShardedSchedule, local_schedule, planner_for
+from repro.plan import autotune as at
+from repro.plan.registry import _OPS, get_op
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FC6 = dict(m=32, n=4096, k=25088, in_bytes=4)  # the paper's FC6 cell
+QUAD = MeshSpec((("cluster", 16),))  # one MANTICORE L2 quadrant
+TINY_MM = dict(m=16, n=256, k=64, in_bytes=4)
+TINY_CONV = dict(H_O=8, W_O=8, F=3, S=1, d_in=8, d_out=16, in_bytes=4,
+                 padding=1, batch=2, pool=2)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Never let a test read or write the user's real winner cache."""
+    monkeypatch.setattr(at, "_CACHE_PATH", str(tmp_path / "global.json"))
+    monkeypatch.setattr(at, "_POLICY", "off")
+
+
+@pytest.fixture
+def cache(tmp_path):
+    return at.AutotuneCache(str(tmp_path / "autotune.json"))
+
+
+def _fake_measure(times):
+    """A deterministic stopwatch: pops the next scripted microsecond
+    value instead of running the kernel (so policy tests never compile)."""
+    seq = list(times)
+
+    def m(fn, iters=3, warmup=1):
+        del fn, iters, warmup
+        return seq.pop(0)
+
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Cache key
+# ---------------------------------------------------------------------------
+
+
+_KEY_SCRIPT = """
+import sys
+sys.path.insert(0, {root!r} + "/src")
+from repro.core.machine import MANTICORE
+from repro.plan import MeshSpec
+from repro.plan import autotune as at
+readable, digest = at.cache_key(
+    "matmul", dict(m=32, n=4096, k=25088, in_bytes=4, block_n=None),
+    "float32", MANTICORE, MeshSpec((("cluster", 16),)), "cluster", None)
+print(digest)
+"""
+
+
+class TestCacheKey:
+    def test_stable_across_processes(self):
+        """The digest is a pure function of the cell: two fresh
+        interpreters agree with each other and with this process."""
+        digests = [
+            subprocess.run([sys.executable, "-c",
+                            _KEY_SCRIPT.format(root=ROOT)],
+                           capture_output=True, text=True, check=True,
+                           timeout=120).stdout.strip()
+            for _ in range(2)
+        ]
+        _, here = at.cache_key(
+            "matmul", dict(m=32, n=4096, k=25088, in_bytes=4, block_n=None),
+            "float32", MANTICORE, QUAD, "cluster", None)
+        assert digests[0] == digests[1] == here
+
+    def test_none_valued_knobs_do_not_split_cells(self):
+        """Unset block pins are dropped from the canonical form — the
+        registry's shape_args (which always carries block_*=None keys)
+        and a bare shape dict hash to the same cell."""
+        _, a = at.cache_key("matmul", dict(TINY_MM), "float32", TPU_V5E)
+        _, b = at.cache_key("matmul", dict(TINY_MM, block_n=None, block_m=None),
+                            "float32", TPU_V5E)
+        assert a == b
+
+    def test_discriminates_every_key_component(self):
+        base = ("matmul", dict(TINY_MM), "float32", TPU_V5E, None, "model",
+                None)
+        variants = [
+            ("matmul_dx", dict(TINY_MM), "float32", TPU_V5E, None, "model", None),
+            ("matmul", dict(TINY_MM, m=32), "float32", TPU_V5E, None, "model", None),
+            ("matmul", dict(TINY_MM), "bfloat16", TPU_V5E, None, "model", None),
+            ("matmul", dict(TINY_MM), "float32", MANTICORE, None, "model", None),
+            ("matmul", dict(TINY_MM), "float32", TPU_V5E, QUAD, "cluster", None),
+            ("matmul", dict(TINY_MM), "float32", TPU_V5E, QUAD, "cluster", "psum"),
+        ]
+        _, d0 = at.cache_key(*base)
+        for v in variants:
+            assert at.cache_key(*v)[1] != d0, v
+
+    def test_schema_version_enters_the_key(self, monkeypatch):
+        _, d0 = at.cache_key("matmul", dict(TINY_MM), "float32", TPU_V5E)
+        monkeypatch.setattr(at, "SCHEMA_VERSION", at.SCHEMA_VERSION + 1)
+        _, d1 = at.cache_key("matmul", dict(TINY_MM), "float32", TPU_V5E)
+        assert d0 != d1
+
+
+# ---------------------------------------------------------------------------
+# Cache file semantics
+# ---------------------------------------------------------------------------
+
+
+class TestCacheFile:
+    def test_winner_persists_and_replays(self, cache, monkeypatch):
+        monkeypatch.setattr(at, "_measure", _fake_measure([3.0, 1.0, 2.0] * 4))
+        rep = at.tune("matmul", cache=cache, topk=3, **TINY_MM)
+        assert not rep.cached and os.path.exists(cache.path)
+        # A fresh instance (fresh process, same file) replays the winner.
+        fresh = at.AutotuneCache(cache.path)
+        rep2 = at.tune("matmul", cache=fresh, topk=3, **TINY_MM)
+        assert rep2.cached
+        assert rep2.schedule.blocks == rep.schedule.blocks
+        assert rep2.schedule.grid == rep.schedule.grid
+
+    def test_schema_mismatch_invalidates_file(self, cache, monkeypatch):
+        monkeypatch.setattr(at, "_measure", _fake_measure([1.0] * 8))
+        at.tune("matmul", cache=cache, topk=2, **TINY_MM)
+        with open(cache.path) as fh:
+            data = json.load(fh)
+        data["schema"] = at.SCHEMA_VERSION - 1  # a past layout
+        with open(cache.path, "w") as fh:
+            json.dump(data, fh)
+        fresh = at.AutotuneCache(cache.path)
+        assert len(fresh) == 0
+        assert at.lookup("matmul", dict(TINY_MM), cache=fresh) is None
+
+    def test_corrupt_file_is_empty_not_fatal(self, cache, monkeypatch):
+        with open(cache.path, "w") as fh:
+            fh.write("{definitely not json")
+        with pytest.warns(UserWarning, match="unreadable"):
+            assert at.lookup("matmul", dict(TINY_MM), cache=cache) is None
+        # resolve still answers — with the modeled argmin.
+        s = at.resolve("matmul", dict(TINY_MM), policy="cache-only",
+                       cache=at.AutotuneCache(cache.path))
+        assert s == planner_for("matmul", TPU_V5E).plan(**TINY_MM)
+        # ...and tuning over the corpse rewrites a valid file.
+        monkeypatch.setattr(at, "_measure", _fake_measure([1.0] * 8))
+        rewrite = at.AutotuneCache(cache.path)
+        with pytest.warns(UserWarning, match="unreadable"):
+            rep = at.tune("matmul", cache=rewrite, topk=2, **TINY_MM)
+        assert not rep.cached
+        with open(cache.path) as fh:
+            assert json.load(fh)["schema"] == at.SCHEMA_VERSION
+
+    def test_cache_only_never_times(self, cache, monkeypatch):
+        """The cache-only policy must be side-effect free: no kernel ever
+        launches, a miss just yields the planner's argmin."""
+        def boom(fn, iters=3, warmup=1):
+            raise AssertionError("cache-only policy measured a candidate")
+
+        monkeypatch.setattr(at, "_measure", boom)
+        s = at.resolve("matmul", dict(TINY_MM), policy="cache-only",
+                       cache=cache)
+        assert s == planner_for("matmul", TPU_V5E).plan(**TINY_MM)
+        assert len(cache) == 0 and not os.path.exists(cache.path)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+
+class TestCandidates:
+    def test_local_first_candidate_is_the_argmin(self):
+        for op, shape in (("conv2d", TINY_CONV), ("matmul", TINY_MM),
+                          ("conv2d_wgrad", {k: v for k, v in TINY_CONV.items()
+                                            if k != "pool"}),
+                          ("matmul_dx", TINY_MM), ("matmul_dw", TINY_MM)):
+            p = planner_for(op, TPU_V5E)
+            cands = p.candidates(**shape)
+            assert cands, op
+            assert cands[0].blocks == p.plan(**shape).blocks, op
+            words = [c.modeled_words for c in cands]
+            assert words == sorted(words), op
+            assert all(c.fits(TPU_V5E) for c in cands), op
+
+    def test_quadrant_enumerates_the_strategies(self):
+        p = planner_for("matmul", MANTICORE, QUAD, "cluster")
+        cands = p.candidates(**FC6)
+        strategies = [c.strategy for c in cands]
+        assert set(strategies) >= {"ring", "psum", "batch"}
+        # The modeled argmin (the ring on this cell, DESIGN.md Sec. 5)
+        # ranks first; a strategy pin collapses the enumeration.
+        assert strategies[0] == p.plan(**FC6).strategy == "ring"
+        pinned = planner_for("matmul", MANTICORE, QUAD, "cluster",
+                             "psum").candidates(**FC6)
+        assert [c.strategy for c in pinned] == ["psum"]
+
+
+# ---------------------------------------------------------------------------
+# Tuned winners reach the kernels
+# ---------------------------------------------------------------------------
+
+
+class TestWinnerExecution:
+    def test_tuned_winner_reaches_the_kernel(self, cache, monkeypatch):
+        """Spy on the matmul op's impl: under cache-only policy the
+        schedule handed to the kernel is the *measured* winner, not the
+        modeled argmin (scripted times make a non-argmin candidate win)."""
+        argmin = planner_for("matmul", TPU_V5E).plan(**TINY_MM)
+        n = len(planner_for("matmul", TPU_V5E).candidates(**TINY_MM))
+        assert n >= 2, "need a real choice for this test"
+        # Scripted stopwatch: candidates get faster down the ranking, so
+        # the LAST (most-words) candidate wins.
+        monkeypatch.setattr(at, "_measure",
+                            _fake_measure([float(n - i) for i in range(n)]))
+        rep = at.tune("matmul", cache=cache, topk=n, **TINY_MM)
+        assert rep.schedule.blocks != argmin.blocks
+
+        monkeypatch.setattr(at, "_CACHE_PATH", cache.path)
+        op = get_op("matmul")
+        seen = {}
+        orig = op.impl
+
+        def spy_impl(*arrays, schedule, **kw):
+            seen["schedule"] = schedule
+            return orig(*arrays, schedule=schedule, **kw)
+
+        monkeypatch.setitem(_OPS, "matmul",
+                            dataclasses.replace(op, impl=spy_impl))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((64, 256)), jnp.float32)
+        out = _OPS["matmul"](x, w, autotune="cache-only")
+        assert seen["schedule"].blocks == rep.schedule.blocks
+        assert seen["schedule"].blocks != argmin.blocks
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(x) @ np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_backward_cells_tune_and_replay(self, cache, monkeypatch):
+        """The backward ops go through the same path: dgrad/dx cells tune,
+        cache, and fc plan_bwd resolves the cached winners."""
+        monkeypatch.setattr(at, "_measure", _fake_measure([2.0, 1.0] * 20))
+        for op, shape in (("matmul_dx", TINY_MM), ("matmul_dw", TINY_MM),
+                          ("conv2d_dgrad",
+                           dict(H_O=8, W_O=8, F=3, S=1, P=1, d_in=8,
+                                d_out=16, in_bytes=4, batch=2))):
+            rep = at.tune(op, cache=cache, topk=2, **shape)
+            rep2 = at.tune(op, cache=cache, topk=2, **shape)
+            assert rep2.cached and rep2.schedule.blocks == rep.schedule.blocks
+
+        from repro.core import fc_layer as fl
+
+        monkeypatch.setattr(at, "_CACHE_PATH", cache.path)
+        bwd = fl.plan_bwd((16, 64), (64, 256), autotune="cache-only")
+        want_dx = at.lookup("matmul_dx", dict(TINY_MM), cache=cache)
+        assert bwd["dx"].blocks == want_dx.blocks
+
+    def test_plan_helpers_off_policy_unchanged(self):
+        """autotune=None/off keeps every plan helper byte-identical to
+        the planner argmin (the no-autotune contract)."""
+        from repro.core import conv_layer as cl
+
+        x_shape, f_shape = (2, 8, 8, 8), (3, 3, 8, 16)
+        a = cl.plan(x_shape, f_shape, padding=1, pool=2)
+        b = cl.plan(x_shape, f_shape, padding=1, pool=2, autotune="off")
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# The paper's FC6 cell over the MANTICORE quadrant (acceptance)
+# ---------------------------------------------------------------------------
+
+
+class TestQuadrantTuning:
+    def test_fc6_measures_psum_and_ring_and_caches(self, cache):
+        """tune() on FC6 over the 16-cluster quadrant really times both
+        the Alg-4 psum and Alg-3 ring dataflows (per-device proxy: no
+        16-device host here) and its winner replays from the cache."""
+        rep = at.tune("matmul", machine=MANTICORE, mesh=QUAD, axis="cluster",
+                      topk=3, iters=1, warmup=0, cache=cache, **FC6)
+        assert not rep.cached
+        kinds = {label.split(":")[0] for label, _, _ in rep.measurements}
+        assert {"psum", "ring"} <= kinds
+        assert all(us > 0 for _, us, _ in rep.measurements)
+        assert isinstance(rep.schedule, ShardedSchedule)
+
+        rep2 = at.tune("matmul", machine=MANTICORE, mesh=QUAD, axis="cluster",
+                       topk=3, iters=1, warmup=0, cache=cache, **FC6)
+        assert rep2.cached
+        assert rep2.schedule.strategy == rep.schedule.strategy
+        assert rep2.schedule.schedule.blocks == rep.schedule.schedule.blocks
+        # ...and resolution under cache-only hands back the same winner.
+        got = at.resolve("matmul", dict(FC6), machine=MANTICORE, mesh=QUAD,
+                         axis="cluster", policy="cache-only", cache=cache)
+        assert got.strategy == rep.schedule.strategy
+
+
+SHARDED_SPY = """
+import sys
+sys.path.insert(0, {root!r} + "/src")
+import dataclasses
+import numpy as np
+import jax.numpy as jnp
+from repro.core.fc_layer import fc_layer_sharded
+from repro.core.machine import TPU_V5E
+from repro.core.shard_compat import make_auto_mesh
+from repro.plan import MeshSpec, planner_for
+from repro.plan import autotune as at
+from repro.plan.registry import _OPS, get_op
+
+M, K, N = 8, 64, 32
+shape = dict(m=M, n=N, k=K, in_bytes=4)
+spec = MeshSpec((("model", 4),))
+cache = at.AutotuneCache({cache!r})
+
+# Scripted stopwatch: the LAST-ranked strategy wins, so the cached winner
+# provably differs from the modeled argmin the planner would re-derive.
+cands = planner_for("matmul", TPU_V5E, spec, "model").candidates(**shape)
+assert len(cands) >= 2, cands
+times = [float(len(cands) - i) for i in range(len(cands))]
+at._measure = lambda fn, iters=3, warmup=1: times.pop(0)
+rep = at.tune("matmul", mesh=spec, axis="model", topk=len(cands),
+              cache=cache, **shape)
+assert not rep.cached
+assert rep.schedule.strategy == cands[-1].strategy
+assert rep.schedule.strategy != cands[0].strategy
+
+# Next run: cache-only policy, live 4-device mesh, spy on the sharded impl.
+at.set_policy("cache-only", {cache!r})
+op = get_op("matmul")
+seen = {{}}
+orig = op.sharded_impl
+def spy(*arrays, schedule, **kw):
+    seen["schedule"] = schedule
+    return orig(*arrays, schedule=schedule, **kw)
+_OPS["matmul"] = dataclasses.replace(op, sharded_impl=spy)
+
+mesh = make_auto_mesh((4,), ("model",))
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+with mesh:
+    out = fc_layer_sharded(x, w, mesh, axis="model", strategy=None)
+got = seen["schedule"]
+assert got.strategy == rep.schedule.strategy, (got.strategy,
+                                               rep.schedule.strategy)
+assert got.schedule.blocks == rep.schedule.schedule.blocks
+np.testing.assert_allclose(np.asarray(out),
+                           np.asarray(x) @ np.asarray(w),
+                           rtol=1e-4, atol=1e-4)
+print("executed", got.strategy)
+"""
+
+
+def test_fc_layer_sharded_executes_cached_winner(tmp_path):
+    """End to end on a forced 4-device host mesh (subprocess, like
+    tests/test_distributed.py): tune the cell, then a fresh
+    ``fc_layer_sharded`` run under cache-only policy hands the *cached*
+    winner — not the modeled argmin — to the registry's sharded impl."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    script = SHARDED_SPY.format(root=ROOT,
+                                cache=str(tmp_path / "autotune.json"))
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "executed" in r.stdout

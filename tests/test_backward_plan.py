@@ -46,8 +46,6 @@ from repro.plan import (
     ConvWgradPlanner,
     MatmulDwPlanner,
     MatmulDxPlanner,
-    Schedule,
-    get_op,
     with_reference_vjp,
 )
 

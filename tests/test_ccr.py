@@ -4,7 +4,6 @@ Sections referenced: 2.1.2, 2.1.4, 2.2.2, 2.2.4, 2.3.2, 2.3.4, 3.1.2,
 3.1.4, 3.2.2, 3.2.4.
 """
 
-import math
 
 import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim

@@ -1,6 +1,5 @@
 """System-invariant property tests (hypothesis)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
