@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
 # Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [--dist-smoke]
-#                         [--autotune-smoke] [extra pytest args...]
+#                         [--autotune-smoke] [--fault-smoke]
+#                         [extra pytest args...]
 #   --bench-smoke     additionally run one tiny planner+kernel case per
 #                     registered op in interpret mode (benchmarks/run.py smoke)
 #   --grad-smoke      run ONLY the gradient parity harness's fast subset
@@ -14,6 +15,15 @@
 #                     tune one tiny conv cell and one FC cell in interpret
 #                     mode against a tmpdir cache and assert both winners
 #                     replay from it (python -m repro.plan.autotune --smoke)
+#   --fault-smoke     run ONLY the elastic fault-tolerance suite and exit:
+#                     seeded chaos runs (tests/test_chaos.py) — injected
+#                     host death at step k on a forced multi-device
+#                     subprocess mesh, assert the run recovers without
+#                     operator input (mesh shrinks, ShardedSchedules
+#                     re-planned for the new MeshSpec, resume from the
+#                     last committed checkpoint, post-recovery losses
+#                     bit-for-bit vs a no-failure run), plus corrupt-chunk
+#                     fallback and non-finite-loss rollback
 # The default invocation runs the grad-smoke subset first, so backward
 # regressions fail fast before the full suite spins up.  The CI matrix
 # (.github/workflows/ci.yml) runs each stage as its own fast-fail job.
@@ -24,13 +34,16 @@ BENCH_SMOKE=0
 GRAD_SMOKE_ONLY=0
 DIST_SMOKE_ONLY=0
 AUTOTUNE_SMOKE_ONLY=0
+FAULT_SMOKE_ONLY=0
 while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" \
-        || "${1:-}" == "--dist-smoke" || "${1:-}" == "--autotune-smoke" ]]; do
+        || "${1:-}" == "--dist-smoke" || "${1:-}" == "--autotune-smoke" \
+        || "${1:-}" == "--fault-smoke" ]]; do
   case "$1" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --grad-smoke) GRAD_SMOKE_ONLY=1 ;;
     --dist-smoke) DIST_SMOKE_ONLY=1 ;;
     --autotune-smoke) AUTOTUNE_SMOKE_ONLY=1 ;;
+    --fault-smoke) FAULT_SMOKE_ONLY=1 ;;
   esac
   shift
 done
@@ -60,8 +73,22 @@ run_autotune_smoke() {
     python -m repro.plan.autotune --smoke
 }
 
+run_fault_smoke() {
+  # The elastic-recovery gate: seeded chaos (kill-at-step-k in a forced
+  # multi-device subprocess, corrupt chunk, non-finite loss) must recover
+  # without operator input and resume from the last committed checkpoint
+  # on the shrunk mesh.
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    tests/test_chaos.py
+}
+
 if [[ "$GRAD_SMOKE_ONLY" == 1 ]]; then
   run_grad_smoke
+  exit 0
+fi
+
+if [[ "$FAULT_SMOKE_ONLY" == 1 ]]; then
+  run_fault_smoke
   exit 0
 fi
 

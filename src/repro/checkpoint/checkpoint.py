@@ -13,21 +13,52 @@ reassembled lazily from its chunks (np.memmap) inside
 ``jax.make_array_from_callback``, so each device only materializes its own
 slice.  This is the restart path for elastic re-meshing after node failure
 (runtime/fault_tolerance.py).
+
+Integrity: every chunk's sha256 (of the on-disk ``.npy`` bytes) is recorded
+in ``index.json`` and re-checked on restore, so a torn write from a host
+that died mid-flush surfaces as :class:`CheckpointCorruptError` instead of
+silently restoring garbage — :func:`restore_latest` then falls back to the
+previous committed step (logged, never silent).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
 import os
 import re
 import shutil
 import threading
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A chunk file is missing, torn, or fails its sha256 digest."""
+
+
+class CheckpointMismatchError(CheckpointError):
+    """The checkpoint's tree doesn't match the abstract tree being
+    restored (missing leaf or shape mismatch) — unlike a bare ``assert``
+    this survives ``python -O``."""
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _leaf_paths(tree):
@@ -71,7 +102,9 @@ def save(ckpt_dir: str, step: int, tree, n_chunks: int = 1) -> str:
                 part = arr
             fn = _fname(path, ci)
             np.save(os.path.join(tmp, fn), part)
-            chunks.append({"file": fn, "offset": off, "rows": int(len(idx)) if arr.ndim else 1})
+            chunks.append({"file": fn, "offset": off,
+                           "rows": int(len(idx)) if arr.ndim else 1,
+                           "sha256": _sha256_file(os.path.join(tmp, fn))})
             off += len(idx) if arr.ndim else 1
         index["leaves"][path] = {
             "shape": list(arr.shape),
@@ -90,24 +123,76 @@ def save(ckpt_dir: str, step: int, tree, n_chunks: int = 1) -> str:
     return final
 
 
-def save_async(ckpt_dir: str, step: int, tree, n_chunks: int = 1) -> threading.Thread:
+@dataclasses.dataclass
+class AsyncSave:
+    """Handle for a background save.  ``join()`` re-raises anything the
+    writer thread hit (a silently-dropped IO error here means the next
+    restore finds no checkpoint where the trainer believes one exists)."""
+
+    step: int
+    _thread: threading.Thread
+    _exc: list = dataclasses.field(default_factory=list)
+    path: str | None = None
+
+    def join(self, timeout: float | None = None) -> str | None:
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"save of step {self.step} still running")
+        if self._exc:
+            raise self._exc[0]
+        return self.path
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+
+def save_async(ckpt_dir: str, step: int, tree, n_chunks: int = 1) -> AsyncSave:
     """Device-get on the caller thread (cheap on CPU; on TPU this is the
-    copy-out), file IO on a background thread."""
+    copy-out), file IO on a background thread.  The returned handle's
+    ``join()`` re-raises background failures instead of swallowing them."""
     host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, n_chunks))
+    handle = AsyncSave(step=step, _thread=None)  # type: ignore[arg-type]
+
+    def _run():
+        try:
+            handle.path = save(ckpt_dir, step, host_tree, n_chunks)
+        except BaseException as e:  # re-raised from join()
+            handle._exc.append(e)
+
+    t = threading.Thread(target=_run, daemon=True)
+    handle._thread = t
     t.start()
-    return t
+    return handle
+
+
+def _committed(ckpt_dir: str, d: str) -> bool:
+    """A step dir counts only if COMMIT exists AND index.json parses — a
+    COMMIT with an unreadable index (partial rename, disk fault) must not
+    be offered as the resume point."""
+    if not os.path.exists(os.path.join(ckpt_dir, d, "COMMIT")):
+        return False
+    try:
+        with open(os.path.join(ckpt_dir, d, "index.json")) as f:
+            json.load(f)
+        return True
+    except (OSError, json.JSONDecodeError):
+        return False
+
+
+def committed_steps(ckpt_dir: str) -> list[int]:
+    """All restorable steps, ascending (COMMIT present, index readable)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d)) and _committed(ckpt_dir, d)
+    )
 
 
 def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    best = None
-    for d in os.listdir(ckpt_dir):
-        m = re.fullmatch(r"step_(\d+)", d)
-        if m and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT")):
-            best = max(best or -1, int(m.group(1)))
-    return best
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def _read_leaf(step_dir: str, meta: dict, np_dtype) -> np.ndarray:
@@ -141,11 +226,44 @@ def _read_leaf(step_dir: str, meta: dict, np_dtype) -> np.ndarray:
     return read
 
 
-def restore(ckpt_dir: str, step: int, abstract_tree, shardings=None):
+def verify_step(ckpt_dir: str, step: int) -> None:
+    """Check every chunk of a committed step against its recorded sha256.
+    Raises :class:`CheckpointCorruptError` on a missing/torn/corrupt chunk
+    (chunks written before digests existed are skipped)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:07d}")
+    try:
+        with open(os.path.join(step_dir, "index.json")) as f:
+            index = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"step {step}: unreadable index.json ({e})")
+    for path, meta in index["leaves"].items():
+        for ch in meta["chunks"]:
+            fpath = os.path.join(step_dir, ch["file"])
+            if not os.path.exists(fpath):
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {path!r} chunk {ch['file']} missing")
+            want = ch.get("sha256")
+            if want is None:
+                continue  # pre-digest checkpoint
+            got = _sha256_file(fpath)
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {path!r} chunk {ch['file']} failed "
+                    f"sha256 verification (torn or corrupt write): "
+                    f"recorded {want[:12]}…, found {got[:12]}…")
+
+
+def restore(ckpt_dir: str, step: int, abstract_tree, shardings=None,
+            verify: bool = True):
     """Restore onto the given abstract tree (ShapeDtypeStructs).  With
     ``shardings`` (matching pytree of jax.sharding.Sharding), each device
-    reads only its slice — reshard-on-restore."""
+    reads only its slice — reshard-on-restore.  ``verify`` (default) checks
+    every chunk's sha256 first, so a torn write raises
+    :class:`CheckpointCorruptError` up front instead of feeding garbage
+    into devices mid-reassembly."""
     step_dir = os.path.join(ckpt_dir, f"step_{step:07d}")
+    if verify:
+        verify_step(ckpt_dir, step)
     with open(os.path.join(step_dir, "index.json")) as f:
         index = json.load(f)
 
@@ -155,8 +273,16 @@ def restore(ckpt_dir: str, step: int, abstract_tree, shardings=None):
 
     out = {}
     for path, aval in flat_abs:
+        if path not in leaves_meta:
+            raise CheckpointMismatchError(
+                f"step {step}: leaf {path!r} not in checkpoint "
+                f"(has {sorted(leaves_meta)[:8]}…)")
         meta = leaves_meta[path]
-        assert tuple(meta["shape"]) == tuple(aval.shape), (path, meta["shape"], aval.shape)
+        if tuple(meta["shape"]) != tuple(aval.shape):
+            raise CheckpointMismatchError(
+                f"step {step}: leaf {path!r} shape mismatch — checkpoint "
+                f"holds {tuple(meta['shape'])}, restore target expects "
+                f"{tuple(aval.shape)}")
         np_dtype = jnp.dtype(aval.dtype)
         reader = _read_leaf(step_dir, meta, np_dtype)
         if path in flat_shard and flat_shard[path] is not None:
@@ -171,6 +297,27 @@ def restore(ckpt_dir: str, step: int, abstract_tree, shardings=None):
     leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
     ordered = [out[p] for p, _ in flat_abs]
     return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def restore_latest(ckpt_dir: str, abstract_tree, shardings=None,
+                   verify: bool = True):
+    """Restore the newest *intact* committed step: integrity failures on
+    the latest step fall back to the previous committed one (and so on),
+    each fallback logged via ``warnings.warn`` — never silent, never an
+    unhandled corrupt read.  Returns ``(tree, step)`` or ``(None, None)``
+    when no restorable checkpoint exists.  Mismatch errors (wrong tree
+    shape) are NOT absorbed: older steps would mismatch identically, and
+    masking them would hide a real caller bug."""
+    for step in reversed(committed_steps(ckpt_dir)):
+        try:
+            return restore(ckpt_dir, step, abstract_tree, shardings,
+                           verify=verify), step
+        except (CheckpointCorruptError, OSError, json.JSONDecodeError) as e:
+            warnings.warn(
+                f"checkpoint step {step} in {ckpt_dir} is corrupt "
+                f"({e}); falling back to the previous committed step",
+                stacklevel=2)
+    return None, None
 
 
 def retain(ckpt_dir: str, keep: int = 3) -> None:

@@ -1,5 +1,5 @@
 """Production training launcher: config -> mesh -> sharded state -> data ->
-train loop with checkpoints, heartbeats, straggler watchdog, resume.
+elastic train loop with checkpoints, heartbeats, straggler watchdog, resume.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
         --steps 50 --mesh 1x1 --ckpt /tmp/run1
@@ -10,16 +10,21 @@ train loop with checkpoints, heartbeats, straggler watchdog, resume.
 On a real multi-host TPU slice the same entrypoint runs under
 ``jax.distributed.initialize()`` with ``--mesh 16x16`` / ``--mesh 2x16x16``;
 on this CPU container use ``--mesh 1x1`` (or 2x4 under forced host
-devices).  Elastic restart: if the monitor finds stale hosts, the launcher
-recomputes the mesh from survivors (fault_tolerance.shrink_mesh_shape) and
-restores the checkpoint with the new shardings.
+devices).  Elastic restart (DESIGN.md Sec. 7): on a detected host failure
+the loop aborts the step, shrinks the mesh to the survivors
+(fault_tolerance.shrink_mesh_shape — the model/TP extent is preserved),
+re-plans every ShardedSchedule against the new MeshSpec (autotune
+cache-only on the degraded cell, modeled argmin on miss), restores the
+last *intact* committed checkpoint with the new shardings, and resumes —
+bounded by --max-recoveries.  ``--chaos "kill@5,corrupt@4,nan@7"``
+injects deterministic seeded faults to exercise exactly that path
+(runtime/chaos.py; scripts/tier1.sh --fault-smoke).
 """
 
 from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +41,10 @@ from repro.models.module import abstract_params, init_params, param_specs
 from repro.models.registry import batch_shard_specs, get_family
 from repro.optim import adamw
 from repro.runtime import train as tr
-from repro.runtime.fault_tolerance import Heartbeat, Monitor, StragglerWatchdog
+from repro.runtime.chaos import ChaosConfig, ChaosMonkey
+from repro.runtime.fault_tolerance import (
+    Heartbeat, Monitor, StragglerWatchdog, shrink_mesh_shape,
+)
 from repro.runtime.parallel import ParallelCtx
 from repro.launch.specs import fsdp_specs
 
@@ -80,6 +88,18 @@ def main() -> None:
                     help="autotune winner-cache file (default: "
                          "$REPRO_AUTOTUNE_CACHE or ~/.cache/repro/"
                          "autotune.json)")
+    ap.add_argument("--chaos", default=None,
+                    help="seeded fault injection, e.g. "
+                         "'kill@5,straggle@3x0.2,corrupt@4,nan@7x3' "
+                         "(runtime/chaos.py)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--max-recoveries", type=int, default=3,
+                    help="consecutive elastic recoveries before giving up")
+    ap.add_argument("--recovery-backoff", type=float, default=0.0,
+                    help="base seconds between recoveries (doubles each)")
+    ap.add_argument("--nonfinite-patience", type=int, default=3,
+                    help="consecutive non-finite losses skipped before "
+                         "rolling back to the last good checkpoint")
     args = ap.parse_args()
 
     if args.autotune != "off" or args.autotune_cache:
@@ -98,19 +118,13 @@ def main() -> None:
         planned_kernels=args.planned_kernels,
     )
 
-    shape, axes = parse_mesh(args.mesh)
-    n_dev = int(np.prod(shape))
-    if n_dev > len(jax.devices()):
+    shape0, axes = parse_mesh(args.mesh)
+    n_dev_full = int(np.prod(shape0))
+    if n_dev_full > len(jax.devices()):
         raise SystemExit(
-            f"mesh {args.mesh} needs {n_dev} devices, have {len(jax.devices())} "
+            f"mesh {args.mesh} needs {n_dev_full} devices, have {len(jax.devices())} "
             "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
         )
-    from repro.core.shard_compat import make_auto_mesh
-
-    mesh = make_auto_mesh(shape, axes)
-    dp_axes = tuple(a for a in axes if a != "model")
-    ctx = ParallelCtx(mesh=mesh, dp_axes=dp_axes, tp_axis="model")
-    print(f"mesh {dict(mesh.shape)} | arch {cfg.name} | {tcfg.compute_dtype} compute")
 
     # The cnn family (the paper's own domain) has no LM-style family
     # module; its param_defs / forward live in models/cnn.py and the loss
@@ -120,33 +134,8 @@ def main() -> None:
             else get_family(cfg.family).param_defs(cfg))
     aparams = abstract_params(defs, jnp.dtype(tcfg.param_dtype))
     n_params = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(aparams))
-    print(f"params: {n_params/1e6:.1f}M")
-
-    use_sharding = n_dev > 1
-    specs = param_specs(defs)
-    pspecs = fsdp_specs(specs, aparams, ctx) if use_sharding else None
-
-    params = init_params(defs, jax.random.PRNGKey(tcfg.seed),
-                         jnp.dtype(tcfg.param_dtype))
-    state = tr.init_state(cfg, tcfg, params)
-
-    # Resume (reshard-on-restore: works even if the mesh changed).
-    start = 0
-    if args.ckpt:
-        last = ckpt.latest_step(args.ckpt)
-        if last is not None:
-            astate = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
-            shardings = None
-            if use_sharding:
-                sstate = tr.TrainState(
-                    params=pspecs,
-                    opt=adamw.AdamWState(step=P(), m=pspecs, v=pspecs),
-                    err=None if state.err is None else pspecs)
-                shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), sstate)
-            state = ckpt.restore(args.ckpt, last, astate, shardings)
-            start = last + 1
-            print(f"resumed from step {last} ({args.ckpt})")
+    print(f"params: {n_params/1e6:.1f}M | arch {cfg.name} "
+          f"| {tcfg.compute_dtype} compute")
 
     # Data: one shard per data-parallel host group (single process here).
     if cfg.family == "cnn":
@@ -157,71 +146,120 @@ def main() -> None:
         source = SyntheticSource(cfg.vocab, args.seq, args.batch,
                                  ShardInfo(0, 1), seed=tcfg.seed)
 
-    step_fn = tr.make_train_step(cfg, tcfg, parallel=ctx if use_sharding else None,
-                                 grad_specs=pspecs)
-    if use_sharding:
-        sstate = tr.TrainState(
-            params=jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs),
-            opt=adamw.AdamWState(
-                step=NamedSharding(mesh, P()),
-                m=jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs),
-                v=jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs)),
-            err=None)
-        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-        # The family registry owns the batch sharding spec (cnn shards its
-        # image batch, token families their token batch) — no family
-        # branching in the launcher.
-        bspec = {k: NamedSharding(mesh, s)
-                 for k, s in batch_shard_specs(cfg, dp).items()}
-        step_fn = jax.jit(step_fn, in_shardings=(sstate, bspec))
-    else:
-        step_fn = jax.jit(step_fn)
+    def build(n_devices: int | None) -> tr.ElasticRun:
+        """One incarnation of the run for a device count: mesh, sharded
+        step_fn, re-planned ShardedSchedules, state restored from the last
+        intact committed checkpoint.  ``None`` = initial full mesh; an
+        explicit count = elastic recovery onto the survivors."""
+        degraded = n_devices is not None
+        n_dev = n_dev_full if n_devices is None else n_devices
+        if n_dev == n_dev_full:
+            shape = shape0
+        else:
+            shape = shrink_mesh_shape(
+                n_dev, model=shape0[-1],
+                pod=shape0[0] if len(shape0) == 3 else None)
+        from repro.core.shard_compat import make_auto_mesh
 
-    if cfg.family == "cnn" and use_sharding:
-        # The mesh-aware planners' model of this run: every stage's device
-        # partitioning plus the step's words split HBM vs interconnect
-        # (the sharded wgrad/dw entries carry the gradient all-reduce).
-        splan = cnn.plan_training(cfg, args.batch, mesh=ctx.plan_mesh(),
-                                  shard_axis=dp_axes[-1],
-                                  autotune=args.autotune)
-        hbm = sum(s.hbm_words for s in splan.values())
-        ici = sum(s.ici_words for s in splan.values())
-        print(f"sharded plan: {len(splan)} kernels | modeled step words "
-              f"hbm={hbm} ici={ici}")
+        mesh = make_auto_mesh(shape, axes)
+        dp_axes = tuple(a for a in axes if a != "model")
+        ctx = ParallelCtx(mesh=mesh, dp_axes=dp_axes, tp_axis="model")
+        print(f"mesh {dict(mesh.shape)} ({n_dev} devices"
+              f"{', degraded' if degraded else ''})")
 
-    hb = wd = mon = None
-    if args.ckpt:
-        os.makedirs(os.path.join(args.ckpt, "hb"), exist_ok=True)
-        hb = Heartbeat(f"host{jax.process_index()}", os.path.join(args.ckpt, "hb"))
-        mon = Monitor(os.path.join(args.ckpt, "hb"), timeout=600)
-    wd = StragglerWatchdog(factor=3.0)
+        use_sharding = n_dev > 1
+        specs = param_specs(defs)
+        pspecs = fsdp_specs(specs, aparams, ctx) if use_sharding else None
 
-    with mesh:
-        for i in range(start, args.steps):
-            t0 = time.time()
-            batch = {k: jnp.asarray(v) for k, v in source(i).items()}
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
-            if hb:
-                hb.beat(i)
-            if wd.observe(dt):
-                print(f"  [watchdog] step {i} straggled ({dt:.2f}s)")
-            if mon and i % 50 == 0 and mon.stale_hosts():
-                print(f"  [monitor] stale hosts: {mon.stale_hosts()} — "
-                      "on a real slice the launcher would re-mesh + restore here")
-            if i % args.log_every == 0 or i == args.steps - 1:
-                print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
-                      f"gnorm {float(metrics['grad_norm']):.3f}  "
-                      f"lr {float(metrics['lr']):.2e}  {dt:.2f}s")
-            if args.ckpt and i and i % args.ckpt_every == 0:
-                ckpt.save(args.ckpt, i, state, n_chunks=max(1, min(8, n_dev)))
+        params = init_params(defs, jax.random.PRNGKey(tcfg.seed),
+                             jnp.dtype(tcfg.param_dtype))
+        state = tr.init_state(cfg, tcfg, params)
+
+        # Resume from the newest *intact* committed step (corrupt steps
+        # fall back with a logged warning — reshard-on-restore works even
+        # if the mesh changed).
+        start = 0
+        shardings = None
+        if use_sharding:
+            sstate = tr.TrainState(
+                params=pspecs,
+                opt=adamw.AdamWState(step=P(), m=pspecs, v=pspecs),
+                err=None if state.err is None else pspecs)
+            shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), sstate)
+        if args.ckpt:
+            astate = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            restored, last = ckpt.restore_latest(args.ckpt, astate, shardings)
+            if restored is not None:
+                state, start = restored, last + 1
+                print(f"resumed from step {last} ({args.ckpt})")
+
+        if cfg.family == "cnn" and use_sharding:
+            # Re-plan the full schedule set against THIS mesh: the
+            # mesh-aware planners' model of the run (the ring/psum argmin
+            # can flip at the new device count).  A degraded (recovery)
+            # build resolves autotune cache-only — never measure while
+            # recovering; a cache miss falls back to the modeled argmin.
+            from repro.plan import validate_sharded_plan
+            from repro.plan.autotune import recovery_policy
+
+            tune = recovery_policy(args.autotune) if degraded else args.autotune
+            splan = cnn.plan_training(cfg, args.batch, mesh=ctx.plan_mesh(),
+                                      shard_axis=dp_axes[-1], autotune=tune)
+            validate_sharded_plan(splan, ctx.plan_mesh())
+            hbm = sum(s.hbm_words for s in splan.values())
+            ici = sum(s.ici_words for s in splan.values())
+            print(f"sharded plan: {len(splan)} kernels | modeled step words "
+                  f"hbm={hbm} ici={ici}")
+
+        step_fn = tr.make_train_step(
+            cfg, tcfg, parallel=ctx if use_sharding else None,
+            grad_specs=pspecs)
+        if use_sharding:
+            dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            # The family registry owns the batch sharding spec (cnn shards
+            # its image batch, token families their token batch) — no
+            # family branching in the launcher.
+            bspec = {k: NamedSharding(mesh, s)
+                     for k, s in batch_shard_specs(cfg, dp).items()}
+            step_fn = jax.jit(step_fn, in_shardings=(shardings, bspec))
+        else:
+            step_fn = jax.jit(step_fn)
+
+        hb = mon = save = None
+        if args.ckpt:
+            os.makedirs(os.path.join(args.ckpt, "hb"), exist_ok=True)
+            hb = Heartbeat(f"host{jax.process_index()}",
+                           os.path.join(args.ckpt, "hb"))
+            mon = Monitor(os.path.join(args.ckpt, "hb"), timeout=600)
+
+            def save(step, st):
+                ckpt.save(args.ckpt, step, st, n_chunks=max(1, min(8, n_dev)))
                 ckpt.retain(args.ckpt, keep=3)
 
+        return tr.ElasticRun(
+            step_fn=step_fn, state=state, start=start, n_devices=n_dev,
+            mesh=mesh, save=save, ckpt_dir=args.ckpt,
+            ckpt_every=args.ckpt_every if args.ckpt else 0,
+            devices_per_host=shape0[-1], heartbeat=hb, monitor=mon,
+            watchdog=StragglerWatchdog(factor=3.0),
+            log_every=args.log_every)
+
+    chaos = None
+    if args.chaos:
+        ccfg = ChaosConfig.parse(args.chaos, seed=args.chaos_seed)
+        chaos = ChaosMonkey(ccfg, devices_per_host=shape0[-1])
+        print(f"chaos: {ccfg} (seed {ccfg.seed})")
+
+    policy = tr.RecoveryPolicy(max_recoveries=args.max_recoveries,
+                               backoff_seconds=args.recovery_backoff,
+                               nonfinite_patience=args.nonfinite_patience)
+    state, history = tr.run_elastic(build, source, args.steps,
+                                    policy=policy, chaos=chaos)
     if args.ckpt:
-        ckpt.save(args.ckpt, args.steps - 1, state,
-                  n_chunks=max(1, min(8, n_dev)))
         print(f"final checkpoint: step {args.steps - 1}")
+    print(f"done: {len(history)} steps executed, "
+          f"final loss {history[-1]['loss']:.4f}" if history else "done")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ from repro.plan.sharded import (
     local_schedule,
     mesh_spec,
     partition_specs,
+    validate_sharded_plan,
 )
 # The autotuner (repro.plan.autotune: tune/resolve/set_policy/AutotuneCache)
 # is deliberately NOT imported here: it is its own CLI entry point
@@ -81,5 +82,6 @@ __all__ = [
     "planner_for",
     "registered_ops",
     "to_roofline",
+    "validate_sharded_plan",
     "with_reference_vjp",
 ]

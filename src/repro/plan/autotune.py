@@ -90,6 +90,20 @@ def get_policy() -> str:
     return _POLICY
 
 
+def recovery_policy(policy: str | None = None) -> str:
+    """The resolution policy for re-planning on a *degraded* (shrunk) mesh
+    during failure recovery: never spend recovery time measuring — a
+    session that autotunes ("tune"/"cache-only") resolves the new cells
+    cache-only (the shrunk MeshSpec keys a different cell, so a miss falls
+    back to the planner's modeled argmin inside ``resolve``), while an
+    "off" session stays off.  Recovery latency is bounded either way."""
+    pol = policy if policy is not None else _POLICY
+    if pol not in POLICIES:
+        raise ValueError(f"autotune policy must be one of {POLICIES}, "
+                         f"got {pol!r}")
+    return "off" if pol == "off" else "cache-only"
+
+
 def get_cache(path: str | None = None) -> "AutotuneCache":
     """The process-wide cache for ``path`` (default: the configured /
     env-derived location); one instance per file."""

@@ -78,6 +78,49 @@ class MeshSpec:
     def axis_names(self) -> tuple[str, ...]:
         return tuple(k for k, _ in self.axes)
 
+    def with_axis(self, name: str, size: int) -> "MeshSpec":
+        """A copy with one axis resized (elastic re-mesh: the data axis
+        shrinks to the survivors, everything else is untouched)."""
+        if name not in self.axis_names:
+            raise KeyError(f"mesh {self.axes} has no axis {name!r}")
+        return MeshSpec(axes=tuple(
+            (k, size if k == name else s) for k, s in self.axes))
+
+    def shrink_to(self, n_devices: int,
+                  preserve: tuple[str, ...] = ("model",)) -> "MeshSpec":
+        """The largest mesh of the same axes fitting ``n_devices``
+        survivors, preserving the extent of every ``preserve`` axis (TP
+        groups must stay intact — runtime/fault_tolerance.py's restart
+        protocol).  Non-preserved axes shrink outermost-first: an axis
+        whose extent no longer divides the survivors collapses to 1 and
+        the innermost non-preserved axis absorbs the rest (mirrors
+        ``shrink_mesh_shape``'s (pod, data, model) behavior)."""
+        keep = 1
+        for k, s in self.axes:
+            if k in preserve:
+                keep *= s
+        if n_devices <= 0 or n_devices % keep:
+            raise ValueError(
+                f"survivors ({n_devices}) not divisible by preserved axes "
+                f"{[(k, s) for k, s in self.axes if k in preserve]}")
+        rest = n_devices // keep
+        free = [k for k in self.axis_names if k not in preserve]
+        if not free:
+            if rest != 1:
+                raise ValueError(
+                    f"all axes preserved but {rest} spare devices")
+            return self
+        sizes = dict(self.axes)
+        new = dict(self.axes)
+        for k in free[:-1]:
+            if rest % sizes[k] == 0 and sizes[k] <= rest:
+                new[k] = sizes[k]
+            else:
+                new[k] = 1
+            rest //= new[k]
+        new[free[-1]] = rest
+        return MeshSpec(axes=tuple((k, new[k]) for k in self.axis_names))
+
 
 def mesh_spec(mesh) -> MeshSpec:
     """Normalize a mesh-like value into a :class:`MeshSpec`.
@@ -178,6 +221,36 @@ def partition_specs(sharded: ShardedSchedule):
     from jax.sharding import PartitionSpec as P
 
     return tuple(P(*entry) for entry in sharded.partition)
+
+
+def validate_sharded_plan(schedules: dict, mesh, machine: MachineModel | None = None) -> int:
+    """Assert a plan set (e.g. ``cnn.plan_training(mesh=...)``) is valid
+    for ``mesh`` — the recovery gate after an elastic re-mesh: every entry
+    is a ShardedSchedule planned against exactly this MeshSpec, its
+    partitioned axis exists, and (with ``machine``) its per-device working
+    set fits.  Raises ValueError naming the offending stage; returns the
+    number of schedules checked."""
+    ms = mesh_spec(mesh)
+    for name, s in schedules.items():
+        if not isinstance(s, ShardedSchedule):
+            raise ValueError(
+                f"{name}: expected a ShardedSchedule for mesh {ms.axes}, "
+                f"got {type(s).__name__} (re-plan did not thread mesh=?)")
+        if s.mesh != ms:
+            raise ValueError(
+                f"{name}: planned for mesh {s.mesh.axes}, not {ms.axes} — "
+                "stale plan from before the re-mesh")
+        if s.axis not in ms.axis_names:
+            raise ValueError(
+                f"{name}: partitioned axis {s.axis!r} not in mesh "
+                f"{ms.axes}")
+        if min(s.hbm_loads, s.hbm_stores, s.ici_words) < 0:
+            raise ValueError(f"{name}: negative modeled words")
+        if machine is not None and not s.fits(machine):
+            raise ValueError(
+                f"{name}: per-device working set exceeds {machine.name} "
+                f"vmem on mesh {ms.axes}")
+    return len(schedules)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,32 +40,49 @@ class Heartbeat:
         os.replace(tmp, path)
 
 
+class HostFailure(RuntimeError):
+    """A host (data-parallel group) died mid-run.  The elastic loop
+    (runtime/train.py run_elastic) catches this, shrinks the mesh to the
+    survivors, re-plans every ShardedSchedule, and restores the last
+    committed checkpoint with the new shardings."""
+
+    def __init__(self, dead: list[str], survivors: int):
+        super().__init__(f"dead hosts {dead}; {survivors} devices survive")
+        self.dead = list(dead)
+        self.survivors = survivors
+
+
 class Monitor:
     def __init__(self, dir: str, timeout: float = 60.0):
         self.dir, self.timeout = dir, timeout
 
-    def stale_hosts(self, now: float | None = None) -> list[str]:
-        now = now if now is not None else time.time()
-        stale = []
-        for fn in sorted(os.listdir(self.dir)):
-            if not fn.startswith("hb_"):
-                continue
+    def _read(self, fn: str) -> dict | None:
+        """One heartbeat, or None if unreadable.  A host that dies mid-write
+        leaves a torn/empty hb_*.json — that's evidence of failure, so it
+        must read as *stale*, never crash the coordinator with a
+        JSONDecodeError."""
+        try:
             with open(os.path.join(self.dir, fn)) as f:
                 hb = json.load(f)
-            if now - hb["time"] > self.timeout:
-                stale.append(fn[3:-5])
-        return stale
+            if not isinstance(hb.get("time"), (int, float)):
+                return None
+            return hb
+        except (OSError, json.JSONDecodeError, AttributeError):
+            return None
+
+    def _hosts(self, now: float | None):
+        now = now if now is not None else time.time()
+        for fn in sorted(os.listdir(self.dir)):
+            if fn.startswith("hb_") and fn.endswith(".json"):
+                hb = self._read(fn)
+                alive = hb is not None and now - hb["time"] <= self.timeout
+                yield fn[3:-5], alive
+
+    def stale_hosts(self, now: float | None = None) -> list[str]:
+        return [h for h, alive in self._hosts(now) if not alive]
 
     def live_hosts(self, now: float | None = None) -> list[str]:
-        now = now if now is not None else time.time()
-        live = []
-        for fn in sorted(os.listdir(self.dir)):
-            if fn.startswith("hb_"):
-                with open(os.path.join(self.dir, fn)) as f:
-                    hb = json.load(f)
-                if now - hb["time"] <= self.timeout:
-                    live.append(fn[3:-5])
-        return live
+        return [h for h, alive in self._hosts(now) if alive]
 
 
 class StragglerWatchdog:

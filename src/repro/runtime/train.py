@@ -10,8 +10,11 @@ at datacenter scale.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any
+import math
+import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -160,3 +163,157 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, parallel=None,
 def init_state(cfg: ModelConfig, tcfg: TrainConfig, params) -> TrainState:
     err = init_error_buffers(params) if tcfg.grad_compression == "int8_ef" else None
     return TrainState(params=params, opt=adamw.init(params), err=err)
+
+
+# ---------------------------------------------------------------------------
+# Elastic fault-tolerant training loop (DESIGN.md Sec. 7)
+#
+# The many-cluster premise of the paper meets production reality here: a
+# host WILL die mid-run, and since PR 4 made partitioning a planner output,
+# surviving is a *plan-layer* operation — a shrunk mesh is a new MeshSpec,
+# so every ShardedSchedule must be re-planned (the ring/psum argmin can
+# flip at the new device count) before the checkpoint restores with the
+# new shardings.  run_elastic() owns the generic state machine; the
+# launcher owns build() (mesh + step_fn + plans + restore for a given
+# device count).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Bounds on the recovery state machine: how many re-meshes before
+    giving up, how long to back off between them (doubled per retry), and
+    how many consecutive non-finite losses are skipped before rolling back
+    to the last committed checkpoint."""
+
+    max_recoveries: int = 3
+    backoff_seconds: float = 0.0
+    nonfinite_patience: int = 3
+
+
+@dataclasses.dataclass
+class ElasticRun:
+    """Everything run_elastic needs for one incarnation of the run — the
+    launcher's ``build(n_devices)`` returns a fresh one after every
+    re-mesh (new mesh, re-planned step_fn, restored state)."""
+
+    step_fn: Callable  # (state, batch) -> (state, metrics)
+    state: Any
+    start: int  # first step this incarnation executes
+    n_devices: int = 1
+    mesh: Any = None  # context manager (jax Mesh); None -> nullcontext
+    save: Callable | None = None  # save(step, state): commit a checkpoint
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0
+    devices_per_host: int = 1  # devices lost per dead host (TP extent)
+    heartbeat: Any = None  # fault_tolerance.Heartbeat
+    monitor: Any = None  # fault_tolerance.Monitor
+    watchdog: Any = None  # fault_tolerance.StragglerWatchdog
+    log_every: int = 10
+
+
+def run_elastic(build: Callable, source: Callable, steps: int, *,
+                policy: RecoveryPolicy | None = None, chaos=None,
+                log: Callable = print):
+    """Drive training to ``steps`` through failures.
+
+    ``build(n_devices | None)`` -> :class:`ElasticRun`; ``None`` means the
+    initial (full) device set.  Per step: heartbeat, monitor poll,
+    straggler watchdog; a detected host failure (stale heartbeats, or
+    injected via ``chaos``) aborts the step and recovers — shrink to the
+    survivors, ``build`` re-meshes + re-plans + restores the last
+    committed checkpoint — with bounded retries/backoff.  A non-finite
+    loss skips the update (the poisoned state is never committed) and
+    after ``nonfinite_patience`` consecutive bad steps rolls back to the
+    last good checkpoint.  Returns ``(final_state, history)`` where
+    history is one record per *executed* step."""
+    from repro.runtime.fault_tolerance import HostFailure
+
+    policy = policy or RecoveryPolicy()
+    run: ElasticRun = build(None)
+    recoveries = 0
+    bad = 0  # consecutive non-finite losses
+    history: list[dict] = []
+    step = run.start
+
+    def _recover(survivors: int, why: str) -> None:
+        nonlocal run, recoveries, bad, step
+        recoveries += 1
+        if recoveries > policy.max_recoveries:
+            raise RuntimeError(
+                f"giving up after {policy.max_recoveries} recoveries ({why})")
+        if policy.backoff_seconds:
+            time.sleep(policy.backoff_seconds * 2 ** (recoveries - 1))
+        log(f"[recover #{recoveries}] {why} -> rebuilding on "
+            f"{survivors} device(s)")
+        run = build(survivors)
+        bad = 0
+        step = run.start
+
+    while step < steps:
+        try:
+            t0 = time.time()
+            if chaos is not None:
+                death = chaos.host_death(step, run.n_devices)
+                if death is not None:
+                    raise HostFailure(dead=death[0], survivors=death[1])
+                chaos.on_step_start(step)  # straggle: counts into dt
+            batch = {k: jnp.asarray(v) for k, v in source(step).items()}
+            with (run.mesh if run.mesh is not None
+                  else contextlib.nullcontext()):
+                new_state, metrics = run.step_fn(run.state, batch)
+            loss = float(jax.block_until_ready(metrics["loss"]))
+            dt = time.time() - t0
+            if chaos is not None:
+                loss = chaos.poison_loss(step, loss)
+
+            if run.heartbeat is not None:
+                run.heartbeat.beat(step)
+            if run.monitor is not None:
+                stale = run.monitor.stale_hosts()
+                if stale:
+                    live = len(run.monitor.live_hosts())
+                    raise HostFailure(dead=stale,
+                                      survivors=live * run.devices_per_host)
+            if run.watchdog is not None and run.watchdog.observe(dt):
+                log(f"  [watchdog] step {step} straggled ({dt:.2f}s)")
+
+            if not math.isfinite(loss):
+                bad += 1
+                log(f"  [guard] step {step}: non-finite loss — update "
+                    f"skipped ({bad}/{policy.nonfinite_patience})")
+                history.append({"step": step, "loss": loss, "time": dt,
+                                "skipped": True})
+                if bad >= policy.nonfinite_patience:
+                    _recover(run.n_devices,
+                             f"{bad} consecutive non-finite losses; rolling "
+                             "back to the last committed checkpoint")
+                else:
+                    step += 1
+                continue
+
+            bad = 0
+            recoveries = 0  # the cap is on CONSECUTIVE recoveries:
+            # a committed step in between proves real progress
+            run.state = new_state  # committed only on a finite loss
+            history.append({"step": step, "loss": loss, "time": dt,
+                            "skipped": False})
+            if step % run.log_every == 0 or step == steps - 1:
+                extra = "".join(
+                    f"  {k} {float(metrics[k]):.3g}"
+                    for k in ("grad_norm", "lr") if k in metrics)
+                log(f"step {step:5d}  loss {loss:.4f}{extra}  {dt:.2f}s")
+            if (run.save is not None and run.ckpt_every
+                    and step and step % run.ckpt_every == 0):
+                run.save(step, run.state)
+                if chaos is not None and run.ckpt_dir:
+                    torn = chaos.after_save(run.ckpt_dir, step)
+                    if torn:
+                        log(f"  [chaos] tore checkpoint chunk {torn}")
+            step += 1
+        except HostFailure as e:
+            _recover(e.survivors, f"host failure: dead={e.dead}")
+
+    if run.save is not None:
+        run.save(steps - 1, run.state)
+    return run.state, history

@@ -144,6 +144,22 @@ class TestFaultTolerance:
             assert mon.live_hosts() == ["hostA"]
             assert mon.stale_hosts(now=time.time() + 120) == ["hostA"]
 
+    def test_torn_heartbeat_reads_as_stale(self):
+        """A host that dies mid-write leaves a torn/empty hb_*.json — that
+        is evidence of failure, so the monitor must treat it as stale, not
+        crash the coordinator with a JSONDecodeError."""
+        with tempfile.TemporaryDirectory() as d:
+            Heartbeat("live", d).beat(0)
+            with open(os.path.join(d, "hb_torn.json"), "w") as f:
+                f.write('{"step": 3, "tim')  # killed mid-write
+            with open(os.path.join(d, "hb_empty.json"), "w"):
+                pass  # opened, never written
+            with open(os.path.join(d, "hb_weird.json"), "w") as f:
+                f.write('{"step": 3, "time": "soon"}')  # non-numeric time
+            mon = Monitor(d, timeout=60)
+            assert mon.stale_hosts() == ["empty", "torn", "weird"]
+            assert mon.live_hosts() == ["live"]
+
     def test_straggler_watchdog(self):
         w = StragglerWatchdog(factor=2.0)
         for _ in range(10):
