@@ -19,6 +19,10 @@
                  executed on the 1-device mesh + the mesh-aware planner's
                  modeled HBM/ICI split for 4-way and the paper's quadrant
                  (BENCH_shard.json baseline)
+  serve        - the serving engine under seeded Poisson load at three
+                 offered-QPS levels on a virtual clock: p50/p99 latency +
+                 throughput report-only, deterministic dispatched-token
+                 counts gated (BENCH_serve.json baseline)
   smoke        - one tiny planner+kernel case per registered op, interpret
                  mode, parity-asserted (scripts/tier1.sh --bench-smoke)
   schedule_sim - closed forms vs executed-schedule word counts
@@ -430,6 +434,70 @@ def bench_fc_sharded(write_baseline: bool = False):
     return rows
 
 
+def bench_serve(write_baseline: bool = False):
+    """The serving subsystem under offered load (DESIGN.md Sec. 8).
+
+    Boots the continuous-batching engine on the smoke config — a 2-bucket
+    ladder whose prefill/decode schedules resolve once at warmup — and
+    drives seeded Poisson traffic at three offered-QPS levels on a
+    ``VirtualClock``: time advances by the ladder's *modeled* step seconds
+    (schedule words over machine bandwidth), so batching composition,
+    dispatched-token counts, and latency percentiles are deterministic.
+    Latency/throughput are report-only; the ``*_words`` token-slot counts
+    (prefill padding, true prompt tokens, decode slot-steps) gate against
+    BENCH_serve.json — a regression there means the router pads more or
+    the engine needs more steps for the same traffic.
+    """
+    from repro.configs.registry import smoke_config
+    from repro.models.module import init_params
+    from repro.models.registry import get_family
+    from repro.serve import BucketLadder, Engine, LoadSpec, VirtualClock, run_load
+
+    cfg = smoke_config("qwen3-1.7b")
+    fam = get_family(cfg.family)
+    params = init_params(fam.param_defs(cfg), jax.random.PRNGKey(0),
+                        jnp.float32)
+    buckets, max_seq = [(2, 8), (4, 16)], 24
+
+    rows = []
+    # One ladder-model row: the warmup-resolved schedules' modeled words
+    # per bucket/phase (pure plan output — catches planner regressions
+    # even before any traffic runs).
+    plan_ladder = BucketLadder(buckets, max_seq=max_seq)
+    plan_ladder.warmup(cfg, policy="off")
+    parts = []
+    for b in plan_ladder.buckets:
+        for phase in ("prefill", "decode"):
+            parts.append(f"b{b.batch}x{b.seq}_{phase}_words="
+                         f"{plan_ladder.modeled_words(b, phase)}")
+    rows.append(("serve_plan", 0.0, ";".join(parts)))
+
+    for qps in (2_000, 20_000, 200_000):
+        ladder = BucketLadder(buckets, max_seq=max_seq)
+        engine = Engine(cfg, params, ladder, clock=VirtualClock(),
+                        queue_depth=16)
+        t0 = time.perf_counter()
+        engine.warmup(policy="off")
+        t_warm = (time.perf_counter() - t0) * 1e6  # boot cost, report-only
+        spec = LoadSpec(qps=qps, n_requests=24, prompt_len=(3, 14),
+                        new_tokens=(3, 6), seed=2)
+        rep = run_load(engine, spec)
+        s = engine.stats
+        rows.append((
+            f"serve_qps_{qps}", t_warm,
+            f"qps={qps};completed={rep.completed};shed={rep.shed};"
+            f"p50_us={rep.p50_s * 1e6:.1f};p99_us={rep.p99_s * 1e6:.1f};"
+            f"ttft_p50_us={rep.ttft_p50_s * 1e6:.1f};"
+            f"tok_s={rep.tokens_per_sec:.0f};"
+            f"pad_pct={rep.padding_waste * 100:.1f};"
+            f"steps={rep.engine_steps};"
+            f"prefill_pad_words={s['prefill_padded']};"
+            f"prefill_true_words={s['prefill_true']};"
+            f"decode_slot_words={s['decode_slots']}"))
+    _write_baseline(rows, "BENCH_serve.json", write_baseline)
+    return rows
+
+
 def bench_smoke():
     """One tiny planner+kernel case per registered op, parity-asserted
     against the op's registered XLA reference (the tier1.sh --bench-smoke
@@ -516,6 +584,7 @@ SECTIONS = {
     "conv_bwd": bench_conv_bwd,
     "fc_bwd": bench_fc_bwd,
     "fc_sharded": bench_fc_sharded,
+    "serve": bench_serve,
     "smoke": bench_smoke,
     "roofline": bench_roofline,
 }
@@ -527,6 +596,7 @@ BASELINES = {
     "BENCH_fc.json": ("fc_matmul",),
     "BENCH_bwd.json": ("conv_bwd", "fc_bwd"),
     "BENCH_shard.json": ("fc_sharded",),
+    "BENCH_serve.json": ("serve",),
 }
 
 # Modeled-word regressions above this gate a CI failure; wall-time moves

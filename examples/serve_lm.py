@@ -1,67 +1,71 @@
-"""Batched serving example: prefill a batch of prompts, then greedy-decode
-continuation tokens against the KV cache.
+"""Continuous-batching serving example on the ``repro.serve`` engine.
 
-    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 16
+Boots the engine on a smoke-sized model — a 2-bucket ladder whose
+prefill/decode schedules resolve once at warmup through the autotune
+cache — then drives it with Poisson traffic at an offered QPS and prints
+the latency/throughput/padding report plus a couple of token streams.
+
+Install the package first (``pip install -e .`` from the repo root), or
+prefix with ``PYTHONPATH=src``:
+
+    python examples/serve_lm.py --requests 12 --qps 50
+    python examples/serve_lm.py --autotune tune     # first boot: measure
+    python examples/serve_lm.py --autotune cache-only  # prod-style boot
 """
 
 import argparse
-import sys
-import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import smoke_config
 from repro.models.module import init_params
 from repro.models.registry import get_family
-from repro.runtime.serve import make_decode_step, make_prefill_step
+from repro.serve import BucketLadder, Engine, LoadSpec, run_load
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--qps", type=float, default=50.0)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="KV slots (default: the ladder's widest bucket)")
+    ap.add_argument("--autotune", default="off",
+                    choices=["off", "cache-only", "tune"],
+                    help="warmup schedule-resolution policy")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
     fam = get_family(cfg.family)
-    params = init_params(fam.param_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
-    max_seq = args.prompt_len + args.gen
+    params = init_params(fam.param_defs(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
 
-    prefill = jax.jit(make_prefill_step(cfg, max_seq, "float32", "float32"))
-    decode = jax.jit(make_decode_step(cfg, "float32"))
+    ladder = BucketLadder([(2, 16), (4, 32)], max_seq=args.max_seq)
+    engine = Engine(cfg, params, ladder, n_slots=args.slots,
+                    queue_depth=max(16, args.requests))
+    sources = engine.warmup(policy=args.autotune)
+    flat = [s for cells in sources.values() for s in cells.values()]
+    print(f"warmup: {len(ladder.buckets)} buckets, {len(flat)} cells "
+          f"({flat.count('cached')} cached, {flat.count('tuned')} tuned, "
+          f"{flat.count('modeled')} modeled)")
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
-                          jnp.int32)
-
-    t0 = time.time()
-    cache, logits = prefill(params, {"tokens": prompts})
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits[:, -1], -1)
-
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        cache, logits = decode(params, cache, tok[:, None], args.prompt_len + i)
-        tok = jnp.argmax(logits[:, -1], -1)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = np.asarray(jnp.stack(out, 1))
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
-    print(f"decode:  {args.gen-1} steps x {args.batch} seqs in {t_decode*1e3:.1f} ms "
-          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
-    for b in range(min(args.batch, 2)):
-        print(f"  seq{b}: {gen[b].tolist()}")
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    spec = LoadSpec(qps=args.qps, n_requests=args.requests,
+                    prompt_len=(4, min(24, args.max_seq - args.gen)),
+                    new_tokens=(args.gen // 2 + 1, args.gen))
+    rep = run_load(engine, spec)
+    print(f"offered {rep.offered_qps:.0f} qps: {rep.completed}/"
+          f"{rep.n_requests} completed, {rep.shed} shed, "
+          f"{rep.timed_out} timed out")
+    print(f"latency p50 {rep.p50_s * 1e3:.1f} ms  p99 {rep.p99_s * 1e3:.1f} ms  "
+          f"ttft p50 {rep.ttft_p50_s * 1e3:.1f} ms")
+    print(f"throughput {rep.tokens_per_sec:.1f} tok/s over "
+          f"{rep.clock_seconds:.2f} s ({rep.engine_steps} engine steps, "
+          f"padding waste {rep.padding_waste:.1%})")
+    for r in engine.retired[:2]:
+        print(f"  {r.rid}: prompt[{len(r.prompt)}] -> {r.tokens}")
 
 
 if __name__ == "__main__":

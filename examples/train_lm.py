@@ -1,18 +1,18 @@
 """End-to-end LM training driver: data pipeline -> train loop -> sharded
 checkpoints -> resume, with heartbeats and straggler watchdog.
 
-    PYTHONPATH=src python examples/train_lm.py --steps 200             # ~10M model
-    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+Install the package first (``pip install -e .`` from the repo root), or
+prefix with ``PYTHONPATH=src``:
+
+    python examples/train_lm.py --steps 200             # ~10M model
+    python examples/train_lm.py --preset 100m --steps 300
     # kill it mid-run, run again with the same --ckpt dir: it resumes.
 """
 
 import argparse
 import dataclasses
 import os
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

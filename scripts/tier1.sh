@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
 # Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [--dist-smoke]
-#                         [--autotune-smoke] [--fault-smoke]
+#                         [--autotune-smoke] [--fault-smoke] [--serve-smoke]
 #                         [extra pytest args...]
 #   --bench-smoke     additionally run one tiny planner+kernel case per
 #                     registered op in interpret mode (benchmarks/run.py smoke)
@@ -24,6 +24,13 @@
 #                     last committed checkpoint, post-recovery losses
 #                     bit-for-bit vs a no-failure run), plus corrupt-chunk
 #                     fallback and non-finite-loss rollback
+#   --serve-smoke     run ONLY the serving-engine smoke and exit: boot the
+#                     continuous-batching engine on the smoke config twice
+#                     against a mktemp autotune cache — first boot tunes
+#                     the 2-bucket ladder's cells, second boot must replay
+#                     every winner cache-only — push a handful of ragged
+#                     requests through each and assert all complete with
+#                     identical tokens (python -m repro.serve --smoke)
 # The default invocation runs the grad-smoke subset first, so backward
 # regressions fail fast before the full suite spins up.  The CI matrix
 # (.github/workflows/ci.yml) runs each stage as its own fast-fail job.
@@ -35,15 +42,17 @@ GRAD_SMOKE_ONLY=0
 DIST_SMOKE_ONLY=0
 AUTOTUNE_SMOKE_ONLY=0
 FAULT_SMOKE_ONLY=0
+SERVE_SMOKE_ONLY=0
 while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" \
         || "${1:-}" == "--dist-smoke" || "${1:-}" == "--autotune-smoke" \
-        || "${1:-}" == "--fault-smoke" ]]; do
+        || "${1:-}" == "--fault-smoke" || "${1:-}" == "--serve-smoke" ]]; do
   case "$1" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --grad-smoke) GRAD_SMOKE_ONLY=1 ;;
     --dist-smoke) DIST_SMOKE_ONLY=1 ;;
     --autotune-smoke) AUTOTUNE_SMOKE_ONLY=1 ;;
     --fault-smoke) FAULT_SMOKE_ONLY=1 ;;
+    --serve-smoke) SERVE_SMOKE_ONLY=1 ;;
   esac
   shift
 done
@@ -73,6 +82,18 @@ run_autotune_smoke() {
     python -m repro.plan.autotune --smoke
 }
 
+run_serve_smoke() {
+  # The serving gate: two engine boots against a throwaway autotune cache
+  # (tune, then cache-only) must replay every winner and produce
+  # identical token streams — without touching the user's real cache.
+  local tmp
+  tmp="$(mktemp -d)"
+  trap 'rm -rf "$tmp"' RETURN
+  REPRO_AUTOTUNE_CACHE="$tmp/autotune.json" \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.serve --smoke
+}
+
 run_fault_smoke() {
   # The elastic-recovery gate: seeded chaos (kill-at-step-k in a forced
   # multi-device subprocess, corrupt chunk, non-finite loss) must recover
@@ -89,6 +110,11 @@ fi
 
 if [[ "$FAULT_SMOKE_ONLY" == 1 ]]; then
   run_fault_smoke
+  exit 0
+fi
+
+if [[ "$SERVE_SMOKE_ONLY" == 1 ]]; then
+  run_serve_smoke
   exit 0
 fi
 

@@ -234,8 +234,15 @@ def main() -> None:
             mon = Monitor(os.path.join(args.ckpt, "hb"), timeout=600)
 
             def save(step, st):
-                ckpt.save(args.ckpt, step, st, n_chunks=max(1, min(8, n_dev)))
+                # Async commit: run_elastic joins this handle before the
+                # next save / a restore / the end, so writer failures
+                # surface there instead of stalling the step here.  retain
+                # only touches *committed* step dirs (the in-flight write
+                # lives under a .tmp name), so pruning now is safe.
+                handle = ckpt.save_async(args.ckpt, step, st,
+                                         n_chunks=max(1, min(8, n_dev)))
                 ckpt.retain(args.ckpt, keep=3)
+                return handle
 
         return tr.ElasticRun(
             step_fn=step_fn, state=state, start=start, n_devices=n_dev,

@@ -30,6 +30,22 @@ def get_family(name: str):
         raise ValueError(f"unknown model family {name!r}; have {list(FAMILIES)}") from None
 
 
+def init_cache_slots(cfg, n_slots: int, max_seq: int, dtype):
+    """Allocate the serving engine's decode-state slot pool: the family's
+    ``init_cache`` with one batch row per slot.  Every registered LM
+    family lays its cache leaves out with the batch (= slot) dimension on
+    axis 1 — ``[L, B, ...]`` — which is what the engine's slot
+    scatter/backfill relies on.  Families without a cache hook (cnn) are
+    not servable and raise."""
+    fam = FAMILIES.get(cfg.family)
+    hook = getattr(fam, "init_cache", None) if fam else None
+    if hook is None:
+        raise ValueError(
+            f"model family {cfg.family!r} has no init_cache hook; it cannot "
+            "be served through repro.serve (no decode state to slot)")
+    return hook(cfg, n_slots, max_seq, dtype)
+
+
 def batch_shard_specs(cfg, dp) -> dict:
     """The family's batch sharding specs over the data axes ``dp`` (an
     axis name or tuple).  Families provide a ``batch_shard_specs(dp)``

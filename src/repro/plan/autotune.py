@@ -520,6 +520,47 @@ def resolve(
     return planner_for(op, machine, mesh, axis, strategy).plan(**shape)
 
 
+def warm(
+    cells: dict, *, machine: MachineModel = TPU_V5E, mesh=None,
+    axis: str = "model", policy: str | None = None,
+    cache: AutotuneCache | None = None, dtype=None,
+) -> tuple[dict, dict]:
+    """Boot-time (warmup) resolution of a *named set* of cells — the
+    serving path (``repro.serve.BucketLadder.warmup``) resolves every
+    bucket's prefill/decode schedules here, once, so the request path
+    never plans, times, or traces a new shape.
+
+    ``cells`` maps ``name -> (op_name, planner_shape)``.  Returns
+    ``(plans, sources)``: the resolved ``Schedule``/``ShardedSchedule``
+    per name, and each cell's provenance — ``"cached"`` (replayed from
+    the winner cache without timing), ``"tuned"`` (measured this boot
+    under policy "tune"), or ``"modeled"`` (the planner's modeled
+    argmin: policy "off", a cache-only miss, or a tune that failed and
+    fell back).  Production boots run ``policy="cache-only"``: every
+    cell is then cached-or-modeled and nothing is ever timed."""
+    pol = policy or _POLICY
+    if pol not in POLICIES:
+        raise ValueError(f"autotune policy must be one of {POLICIES}, "
+                         f"got {pol!r}")
+    plans: dict = {}
+    sources: dict[str, str] = {}
+    for name, (op, shape) in cells.items():
+        def _hit():
+            return lookup(op, shape, machine=machine, mesh=mesh, axis=axis,
+                          cache=cache, dtype=dtype) is not None
+
+        pre = pol != "off" and _hit()
+        plans[name] = resolve(op, shape, machine=machine, mesh=mesh,
+                              axis=axis, policy=pol, cache=cache, dtype=dtype)
+        if pre:
+            sources[name] = "cached"
+        elif pol == "tune" and _hit():
+            sources[name] = "tuned"
+        else:
+            sources[name] = "modeled"
+    return plans, sources
+
+
 # ---------------------------------------------------------------------------
 # CLI: the tier1.sh --autotune-smoke gate and ad-hoc cell tuning
 # ---------------------------------------------------------------------------

@@ -1,5 +1,28 @@
 """Serving step builders: prefill (KV-cache fill + last-token logits) and
-decode (one token against a long cache)."""
+decode (one token against a long cache).
+
+Two tiers:
+
+  * ``make_prefill_step`` / ``make_decode_step`` — the simple whole-batch
+    builders (shared scalar decode position) used by tests/examples and
+    ``greedy_generate``.
+  * ``make_bucket_prefill_step`` / ``make_slot_decode_step`` — the
+    continuous-batching builders ``repro.serve.Engine`` compiles once per
+    warmup bucket: ragged prompts padded to the bucket shape with the
+    last-token logits gathered at each row's true length, and per-slot
+    decode positions (vmap over the cache's slot axis) so every KV slot
+    advances independently.  Both accept the bucket's warmup-resolved
+    ``schedules`` (``BucketLadder.plans[bucket]``) and fail fast when a
+    planned cell does not fit the machine — request-time dispatch never
+    re-plans.
+
+Bit-identity contract (asserted by tests/test_serve.py): the bucketed
+builders produce the same greedy tokens, bitwise, as the unbucketed path —
+causal masking makes padded positions contribute exactly-zero softmax
+weight (the -1e30 mask underflows), rows of every matmul are independent,
+and decode overwrites cache positions >= the true prompt length as it
+generates.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +31,19 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.registry import get_family
+
+
+def _check_schedules(schedules, machine) -> None:
+    """Warmup-resolved cells must fit the serving machine — a plan that
+    spills VMEM should fail at boot, not at request time."""
+    if not schedules or machine is None:
+        return
+    for name, sched in schedules.items():
+        fits = getattr(sched, "fits", None)
+        if fits is not None and not fits(machine):
+            raise ValueError(
+                f"serving cell {name!r} does not fit {machine.name}: "
+                f"{sched}")
 
 
 def make_prefill_step(cfg: ModelConfig, max_seq: int, compute_dtype="bfloat16",
@@ -42,6 +78,73 @@ def make_decode_step(cfg: ModelConfig, compute_dtype="bfloat16", parallel=None):
         )
         logits = fam.logits(cfg, params, h)
         return cache, logits
+
+    return decode
+
+
+def make_bucket_prefill_step(cfg: ModelConfig, max_seq: int,
+                             compute_dtype="float32", cache_dtype="float32",
+                             parallel=None, schedules=None, machine=None):
+    """``prefill(params, tokens [B, S_bucket], lengths [B]) ->
+    (cache, logits [B, vocab])`` for ragged prompts padded to a bucket.
+
+    The hidden state is gathered at each row's true last position
+    (``lengths - 1``), not at the padded ``S_bucket - 1`` — with causal
+    masking that makes the returned logits independent of the padding.
+    The cache is allocated at the full ``max_seq`` extent so the engine
+    can scatter rows straight into its slot pool."""
+    fam = get_family(cfg.family)
+    dt = jnp.dtype(compute_dtype)
+    _check_schedules(schedules, machine)
+
+    def prefill(params, tokens, lengths):
+        B, S = tokens.shape
+        cache = fam.init_cache(cfg, B, max_seq, jnp.dtype(cache_dtype))
+        h, cache = fam.forward(
+            cfg, params, tokens, pos0=0, cache=cache, compute_dtype=dt,
+            parallel=parallel,
+        )
+        last = jnp.clip(lengths - 1, 0, S - 1).astype(jnp.int32)
+        h_last = h[jnp.arange(B), last]  # [B, d]
+        logits = fam.logits(cfg, params, h_last[:, None, :])
+        return cache, logits[:, 0]
+
+    return prefill
+
+
+def make_slot_decode_step(cfg: ModelConfig, compute_dtype="float32",
+                          parallel=None, schedules=None, machine=None):
+    """``decode(params, cache, tokens [B], pos [B]) ->
+    (cache, logits [B, vocab])`` with a *per-slot* position.
+
+    The simple ``make_decode_step`` advances every row at one shared
+    scalar position — useless for continuous batching, where each slot is
+    mid-way through its own sequence.  Here the single-row decode is
+    vmapped over the cache's slot axis (axis 1 of every leaf, see
+    ``models.registry.init_cache_slots``) so each slot reads and writes
+    its own cache row at its own position."""
+    fam = get_family(cfg.family)
+    dt = jnp.dtype(compute_dtype)
+    _check_schedules(schedules, machine)
+
+    def one_slot(params, cache_row, tok, pos):
+        # cache_row leaves have the slot axis stripped; re-insert a
+        # batch=1 axis for the family forward and strip it again after.
+        cache1 = jax.tree.map(lambda c: c[:, None], cache_row)
+        h, cache1 = fam.forward(
+            cfg, params, tok[None, None], pos0=pos, cache=cache1,
+            compute_dtype=dt, parallel=parallel,
+        )
+        logits = fam.logits(cfg, params, h)
+        return jax.tree.map(lambda c: c[:, 0], cache1), logits[0, 0]
+
+    def decode(params, cache, tokens, pos):
+        axes = jax.tree.map(lambda _: 1, cache)
+        new_cache, logits = jax.vmap(
+            lambda c, t, p: one_slot(params, c, t, p),
+            in_axes=(axes, 0, 0), out_axes=(axes, 0),
+        )(cache, tokens.astype(jnp.int32), pos.astype(jnp.int32))
+        return new_cache, logits
 
     return decode
 

@@ -202,7 +202,12 @@ class ElasticRun:
     start: int  # first step this incarnation executes
     n_devices: int = 1
     mesh: Any = None  # context manager (jax Mesh); None -> nullcontext
-    save: Callable | None = None  # save(step, state): commit a checkpoint
+    # save(step, state): commit a checkpoint.  May return an async handle
+    # (anything with .join(), e.g. checkpoint.AsyncSave) — run_elastic then
+    # overlaps the write with training and joins it before the *next*
+    # commit, at recovery, and at the end, surfacing writer failures at
+    # the join point.  A None return means the save was synchronous.
+    save: Callable | None = None
     ckpt_dir: str | None = None
     ckpt_every: int = 0
     devices_per_host: int = 1  # devices lost per dead host (TP extent)
@@ -235,9 +240,31 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
     bad = 0  # consecutive non-finite losses
     history: list[dict] = []
     step = run.start
+    pending = None  # in-flight async checkpoint write (ElasticRun.save)
+
+    def _join_pending() -> None:
+        """Wait for the in-flight checkpoint write.  This is THE join
+        point: a writer-thread failure surfaces here (before the next
+        commit / before a restore reads the directory / at the end) —
+        never silently."""
+        nonlocal pending
+        if pending is not None:
+            handle, pending = pending, None
+            handle.join()
+
+    def _commit(at_step: int, state) -> None:
+        nonlocal pending
+        _join_pending()
+        handle = run.save(at_step, state)
+        if handle is not None and hasattr(handle, "join"):
+            pending = handle
 
     def _recover(survivors: int, why: str) -> None:
         nonlocal run, recoveries, bad, step
+        # The last committed write must be on disk before build() restores
+        # from it (and a broken writer must not be papered over by
+        # restoring something older).
+        _join_pending()
         recoveries += 1
         if recoveries > policy.max_recoveries:
             raise RuntimeError(
@@ -305,8 +332,11 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
                 log(f"step {step:5d}  loss {loss:.4f}{extra}  {dt:.2f}s")
             if (run.save is not None and run.ckpt_every
                     and step and step % run.ckpt_every == 0):
-                run.save(step, run.state)
+                _commit(step, run.state)
                 if chaos is not None and run.ckpt_dir:
+                    # Chaos corrupts the checkpoint just written — it must
+                    # be on disk first (no overlap under chaos).
+                    _join_pending()
                     torn = chaos.after_save(run.ckpt_dir, step)
                     if torn:
                         log(f"  [chaos] tore checkpoint chunk {torn}")
@@ -315,5 +345,6 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
             _recover(e.survivors, f"host failure: dead={e.dead}")
 
     if run.save is not None:
-        run.save(steps - 1, run.state)
+        _commit(steps - 1, run.state)
+        _join_pending()
     return run.state, history

@@ -1,0 +1,31 @@
+"""repro.serve — planned inference serving (DESIGN.md Sec. 8).
+
+The autotune cache as a serving artifact: a :class:`BucketLadder` of
+pre-planned (batch, seq) shapes resolved once at warmup, a continuous-
+batching :class:`Engine` over a KV slot pool, and a load generator with a
+deterministic modeled-time mode for the committed serve benchmark.
+"""
+
+from repro.serve.bucket import Bucket, BucketLadder, bucket_cells
+from repro.serve.engine import (
+    ACTIVE,
+    DONE,
+    QUEUED,
+    SHED,
+    TIMEOUT,
+    Engine,
+    Request,
+    RequestQueue,
+    StepInfo,
+    VirtualClock,
+    WallClock,
+)
+from repro.serve.loadgen import LoadReport, LoadSpec, make_requests, run_load
+
+__all__ = [
+    "Bucket", "BucketLadder", "bucket_cells",
+    "Engine", "Request", "RequestQueue", "StepInfo",
+    "VirtualClock", "WallClock",
+    "QUEUED", "ACTIVE", "DONE", "SHED", "TIMEOUT",
+    "LoadSpec", "LoadReport", "make_requests", "run_load",
+]

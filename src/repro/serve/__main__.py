@@ -1,0 +1,5 @@
+"""``python -m repro.serve --smoke`` — the tier1.sh --serve-smoke gate."""
+
+from repro.serve.loadgen import main
+
+raise SystemExit(main())

@@ -168,6 +168,66 @@ class TestRecoveryStateMachine:
 
 
 # ---------------------------------------------------------------------------
+# Async checkpoint commits in the elastic loop: run_elastic overlaps the
+# write with training and joins the previous handle before the next
+# commit — writer failures surface at the join point, never silently.
+# ---------------------------------------------------------------------------
+
+
+class _FailingHandle:
+    """An AsyncSave-shaped handle whose writer thread died."""
+
+    def __init__(self, step):
+        self.step = step
+
+    def join(self, timeout=None):
+        raise RuntimeError(f"disk full writing step {self.step}")
+
+
+class TestAsyncCheckpointCommit:
+    def test_writer_failure_surfaces_at_the_join_point(self):
+        saves = []
+
+        def save(step, st):
+            saves.append(step)
+            return _FailingHandle(step)
+
+        build = counting_build([], save=save, ckpt_every=1)
+        with pytest.raises(RuntimeError, match="disk full writing step 1"):
+            tr.run_elastic(build, fake_source, 5, log=lambda *_: None)
+        # The step-1 handle's failure surfaced at the join *before* the
+        # step-2 commit started — not swallowed, not at process exit.
+        assert saves == [1]
+
+    def test_real_async_saves_commit_and_final_join(self):
+        with tempfile.TemporaryDirectory() as d:
+
+            def save(step, st):
+                return ckpt.save_async(d, step, st, n_chunks=1)
+
+            build = counting_build([], save=save, ckpt_every=2, ckpt_dir=d)
+            state, hist = tr.run_elastic(build, fake_source, 5,
+                                         log=lambda *_: None)
+            assert state["v"] == 5
+            # In-loop commits at steps 2 and 4 plus the final commit (also
+            # step 4), all joined by the time run_elastic returns.
+            assert ckpt.committed_steps(d) == [2, 4]
+
+    def test_sync_save_protocol_still_supported(self):
+        committed = []
+
+        def save(step, st):
+            committed.append((step, st["v"]))
+            return None  # old synchronous protocol
+
+        build = counting_build([], save=save, ckpt_every=2)
+        tr.run_elastic(build, fake_source, 5, log=lambda *_: None)
+        # v counts executed steps: after step 2, v=3; after step 4, v=5.
+        # The trailing entry is run_elastic's final commit (same step/state).
+        assert committed == [(2, 3), (4, 5), (4, 5)]
+
+
+# ---------------------------------------------------------------------------
 # Recovery is a plan-layer operation: shrunk MeshSpec -> re-planned set
 # ---------------------------------------------------------------------------
 

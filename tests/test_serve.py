@@ -1,0 +1,334 @@
+"""The serving subsystem (src/repro/serve): bucket-ladder routing and
+warmup resolution, the continuous-batching engine's bit-identity against
+the reference greedy loop, the never-tune-at-request-time contract,
+queue/deadline degradation, and load-generator determinism."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.models.module import init_params
+from repro.models.registry import get_family, init_cache_slots
+from repro.plan import MeshSpec, Schedule, ShardedSchedule
+from repro.plan import autotune
+from repro.runtime.serve import greedy_generate
+from repro.serve import (
+    DONE, QUEUED, SHED, TIMEOUT,
+    Bucket, BucketLadder, Engine, LoadSpec, Request, RequestQueue,
+    VirtualClock, bucket_cells, make_requests, run_load,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config("qwen3-1.7b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    fam = get_family(cfg.family)
+    base = init_params(fam.param_defs(cfg), jax.random.PRNGKey(0),
+                       jnp.float32)
+    # Perturb so greedy decoding produces *varied* token streams — an
+    # untrained model repeating one token would make the bit-identity
+    # test vacuous.
+    rng = np.random.default_rng(7)
+    return jax.tree.map(
+        lambda l: jnp.asarray(
+            np.asarray(l) + rng.standard_normal(l.shape).astype(np.float32) * 0.5),
+        base)
+
+
+def _boot(cfg, params, buckets, max_seq, **kw):
+    kw.setdefault("queue_depth", 32)
+    ladder = BucketLadder(buckets, max_seq=max_seq)
+    engine = Engine(cfg, params, ladder, **kw)
+    engine.warmup(policy="off")
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# BucketLadder: rungs, routing, warmup resolution
+# ---------------------------------------------------------------------------
+
+
+class TestBucketLadder:
+    def test_rungs_sorted_and_deduped(self):
+        lad = BucketLadder([(4, 16), (2, 8), Bucket(2, 8)], max_seq=32)
+        assert lad.buckets == (Bucket(2, 8), Bucket(4, 16))
+        assert lad.max_batch == 4 and lad.max_prompt == 16
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="at least one bucket"):
+            BucketLadder([], max_seq=32)
+        with pytest.raises(ValueError, match="exceeds max_seq"):
+            BucketLadder([(2, 64)], max_seq=32)
+        with pytest.raises(ValueError, match=">= 1"):
+            Bucket(0, 8)
+
+    def test_route_picks_smallest_covering_rung(self):
+        lad = BucketLadder([(2, 8), (4, 16), (8, 16)], max_seq=32)
+        assert lad.route(1, 5) == Bucket(2, 8)
+        assert lad.route(2, 8) == Bucket(2, 8)
+        # longer prompt forces the next seq rung even for few rows
+        assert lad.route(1, 9) == Bucket(4, 16)
+        # more rows than the small rung holds
+        assert lad.route(3, 5) == Bucket(4, 16)
+        assert lad.route(7, 12) == Bucket(8, 16)
+
+    def test_route_widest_when_no_rung_has_enough_rows(self):
+        lad = BucketLadder([(2, 8), (4, 16)], max_seq=32)
+        # 9 rows fit nowhere: take the widest covering rung, admit 4 now.
+        assert lad.route(9, 10) == Bucket(4, 16)
+
+    def test_route_none_for_oversize_prompt(self):
+        lad = BucketLadder([(2, 8), (4, 16)], max_seq=32)
+        assert lad.route(1, 17) is None
+
+    def test_bucket_cells_shapes(self, cfg):
+        cells = bucket_cells(cfg, Bucket(2, 8), max_seq=32)
+        assert set(cells) == {f"{p}.{c}" for p in ("prefill", "decode")
+                              for c in ("qkv", "attn", "mlp", "logits")}
+        op, shp = cells["prefill.qkv"]
+        assert op == "matmul" and shp["m"] == 2 * 8 and shp["k"] == cfg.d_model
+        op, shp = cells["decode.attn"]
+        assert op == "flash_attention"
+        assert shp["seq_q"] == 1 and shp["seq_kv"] == 32 and shp["causal"]
+        # the logits head projects one position per row, not batch*seq
+        assert cells["prefill.logits"][1]["m"] == 2
+
+    def test_warmup_resolves_plans_and_model(self, cfg):
+        lad = BucketLadder([(2, 8), (4, 16)], max_seq=24)
+        with pytest.raises(RuntimeError, match="warmup"):
+            lad.modeled_words(Bucket(2, 8), "prefill")
+        sources = lad.warmup(cfg, policy="off")
+        assert lad.planned
+        for b in lad.buckets:
+            assert all(isinstance(p, Schedule) for p in lad.plans[b].values())
+            assert set(sources[b].values()) <= {"modeled"}  # policy off
+            for phase in ("prefill", "decode"):
+                assert lad.modeled_words(b, phase) > 0
+                assert lad.modeled_seconds(b, phase) > 0
+        # prefill moves more words than single-token decode
+        assert (lad.modeled_words(Bucket(4, 16), "prefill")
+                > lad.modeled_words(Bucket(4, 16), "decode"))
+
+    def test_warmup_on_mesh_resolves_sharded_schedules(self, cfg):
+        lad = BucketLadder([(2, 8)], max_seq=16,
+                           mesh=MeshSpec((("model", 4),)), axis="model")
+        lad.warmup(cfg, policy="off")
+        plans = lad.plans[Bucket(2, 8)]
+        assert all(isinstance(p, ShardedSchedule) for p in plans.values())
+
+
+# ---------------------------------------------------------------------------
+# The slot pool: family-dispatched allocation
+# ---------------------------------------------------------------------------
+
+
+class TestInitCacheSlots:
+    def test_dense_slot_axis_contract(self, cfg):
+        cache = init_cache_slots(cfg, n_slots=3, max_seq=16,
+                                 dtype=jnp.float32)
+        for leaf in jax.tree.leaves(cache):
+            assert leaf.shape[1] == 3  # slots on axis 1 of every leaf
+
+    def test_family_without_cache_raises(self):
+        ccfg = smoke_config("cnn-vgg11")
+        with pytest.raises(ValueError, match="cnn"):
+            init_cache_slots(ccfg, n_slots=2, max_seq=16, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bucketed/padded dispatch is BIT-IDENTICAL to the reference
+# greedy loop, across ragged prompt lengths and bucket-straddling batches
+# ---------------------------------------------------------------------------
+
+
+class TestBitIdentity:
+    def test_bucketed_engine_matches_greedy_generate(self, cfg, params):
+        max_seq = 32
+        engine = _boot(cfg, params, [(2, 8), (4, 24)], max_seq)
+        rng = np.random.default_rng(3)
+        # Lengths straddle the seq rungs (<=8 and >8 up to a full rung);
+        # 7 requests straddle every batch boundary (2 and 4).
+        lens = [3, 8, 11, 17, 5, 24, 6]
+        gen = 6
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in lens]
+        reqs = [engine.submit(prompt=p, max_new_tokens=gen) for p in prompts]
+        engine.run_until_idle()
+        assert all(r.state == DONE for r in reqs)
+
+        for r, p in zip(reqs, prompts):
+            ref = greedy_generate(cfg, params, jnp.asarray(p)[None, :],
+                                  steps=gen, max_seq=max_seq)
+            ref = np.asarray(ref)[0]
+            got = np.asarray(r.tokens, ref.dtype)
+            assert np.array_equal(got, ref), (
+                f"{r.rid} (len {len(p)}): engine {got} != reference {ref}")
+        # the streams vary (perturbed params): identity is not vacuous
+        assert len({tuple(r.tokens) for r in reqs}) > 1
+
+    def test_slot_backfill_keeps_identity(self, cfg, params):
+        """Retire-and-backfill: a second wave lands in freed slots whose
+        cache rows still hold the first wave's state."""
+        engine = _boot(cfg, params, [(2, 16)], 24)
+        rng = np.random.default_rng(4)
+        prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+                   for n in (4, 9, 13, 6)]
+        reqs = [engine.submit(prompt=p, max_new_tokens=3 + i)
+                for i, p in enumerate(prompts)]
+        engine.run_until_idle()
+        assert all(r.state == DONE for r in reqs)
+        for r, p in zip(reqs, prompts):
+            ref = np.asarray(greedy_generate(
+                cfg, params, jnp.asarray(p)[None, :],
+                steps=r.max_new_tokens, max_seq=24))[0]
+            assert np.array_equal(np.asarray(r.tokens, ref.dtype), ref)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: a warmed engine never calls the autotuner's timing path at
+# request time (REPRO_AUTOTUNE=cache-only boot, spy on tune/_measure)
+# ---------------------------------------------------------------------------
+
+
+class TestNeverTuneAtRequestTime:
+    def test_cache_only_engine_with_timing_path_disabled(
+            self, cfg, params, tmp_path, monkeypatch):
+        cache_path = str(tmp_path / "serve_cache.json")
+        buckets, max_seq = [(2, 8), (4, 16)], 24
+
+        # First boot: tune fills the cache.
+        lad = BucketLadder(buckets, max_seq=max_seq)
+        e1 = Engine(cfg, params, lad)
+        src1 = e1.warmup(policy="tune",
+                         cache=autotune.AutotuneCache(cache_path))
+        assert any(s == "tuned" for cells in src1.values()
+                   for s in cells.values())
+
+        # Production boot: cache-only, with the timing path rigged to
+        # blow up — warmup AND every request must complete without it.
+        def _no_timing(*a, **k):
+            raise AssertionError("autotuner timing path hit after warmup")
+
+        monkeypatch.setattr(autotune, "_measure", _no_timing)
+        monkeypatch.setattr(autotune, "tune", _no_timing)
+        monkeypatch.setenv("REPRO_AUTOTUNE", "cache-only")
+
+        lad2 = BucketLadder(buckets, max_seq=max_seq)
+        e2 = Engine(cfg, params, lad2)
+        src2 = e2.warmup(policy="cache-only",
+                         cache=autotune.AutotuneCache(cache_path))
+        flat = [s for cells in src2.values() for s in cells.values()]
+        assert "tuned" not in flat
+        assert "cached" in flat  # winners replayed, not re-modeled
+
+        rng = np.random.default_rng(5)
+        reqs = [e2.submit(prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                          max_new_tokens=4)
+                for n in (3, 10, 7, 14, 5)]
+        e2.run_until_idle()
+        assert all(r.state == DONE for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: queue bound, oversize prompts, deadlines
+# ---------------------------------------------------------------------------
+
+
+class TestQueueAndDeadlines:
+    def test_queue_sheds_on_overflow(self):
+        q = RequestQueue(max_depth=2)
+        rs = [Request(rid=f"r{i}", prompt=np.zeros(2, np.int32),
+                      max_new_tokens=1) for i in range(3)]
+        assert q.submit(rs[0], now=0.0) and q.submit(rs[1], now=0.0)
+        assert not q.submit(rs[2], now=0.0)
+        assert rs[2].state == SHED and len(q) == 2
+        assert rs[0].state == QUEUED
+
+    def test_queue_expires_deadlines(self):
+        q = RequestQueue()
+        r1 = Request(rid="a", prompt=np.zeros(2, np.int32),
+                     max_new_tokens=1, deadline=1.0)
+        r2 = Request(rid="b", prompt=np.zeros(2, np.int32),
+                     max_new_tokens=1)
+        q.submit(r1, now=0.0)
+        q.submit(r2, now=0.0)
+        dead = q.expire(now=2.0)
+        assert [r.rid for r in dead] == ["a"] and r1.state == TIMEOUT
+        assert len(q) == 1  # the deadline-free request survives
+
+    def test_engine_sheds_oversize_and_overflow(self, cfg, params):
+        engine = _boot(cfg, params, [(2, 8)], 16, queue_depth=3)
+        too_long = engine.submit(prompt=np.zeros(9, np.int32),
+                                 max_new_tokens=2)
+        assert too_long.state == SHED  # longer than every rung
+        subs = [engine.submit(prompt=np.zeros(4, np.int32), max_new_tokens=2)
+                for _ in range(5)]
+        states = [r.state for r in subs]
+        assert states.count(SHED) == 2 and states.count(QUEUED) == 3
+        assert len(engine.rejected) == 3
+        engine.run_until_idle()
+        assert all(r.state == DONE for r in subs if r not in engine.rejected)
+
+    def test_deadline_expires_mid_generation(self, cfg, params):
+        clock = VirtualClock()
+        engine = _boot(cfg, params, [(2, 8)], 16, clock=clock)
+        r = engine.submit(prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=50, deadline=1.0)
+        info = engine.step()  # admitted + first decode, t=0
+        assert r.state == "active" and info.prefills
+        clock.advance(2.0)  # the deadline passes while r is mid-stream
+        info = engine.step()
+        assert r.rid in info.timed_out
+        assert r.state == TIMEOUT and r.slot is None
+        assert engine.idle  # slot freed, nothing queued
+
+    def test_modeled_step_seconds_drives_virtual_clock(self, cfg, params):
+        clock = VirtualClock()
+        engine = _boot(cfg, params, [(2, 8)], 16, clock=clock)
+        engine.submit(prompt=np.arange(4, dtype=np.int32), max_new_tokens=3)
+        t0 = clock.now()
+        info = engine.step()
+        dt = engine.modeled_step_seconds(info)
+        assert dt > 0
+        clock.advance(dt)
+        assert clock.now() == t0 + dt
+
+
+# ---------------------------------------------------------------------------
+# Load generator: seeded arrivals, deterministic virtual-clock reports
+# ---------------------------------------------------------------------------
+
+
+class TestLoadgen:
+    def test_make_requests_seeded(self, cfg):
+        spec = LoadSpec(qps=100.0, n_requests=8, seed=3)
+        a = make_requests(spec, cfg.vocab)
+        b = make_requests(spec, cfg.vocab)
+        assert [t for t, _ in a] == [t for t, _ in b]
+        for (_, ra), (_, rb) in zip(a, b):
+            assert np.array_equal(ra.prompt, rb.prompt)
+            assert ra.max_new_tokens == rb.max_new_tokens
+        assert len({len(r.prompt) for _, r in a}) > 1  # ragged
+
+    def test_virtual_clock_run_is_deterministic(self, cfg, params):
+        spec = LoadSpec(qps=50_000.0, n_requests=10, prompt_len=(3, 14),
+                        new_tokens=(2, 4), seed=1)
+
+        def once():
+            engine = _boot(cfg, params, [(2, 8), (4, 16)], 24,
+                           clock=VirtualClock())
+            return run_load(engine, spec)
+
+        a, b = once(), once()
+        assert a == b  # frozen dataclass: field-wise equality
+        assert a.completed == spec.n_requests
+        assert a.p99_s >= a.p50_s > 0
+        assert a.tokens_per_sec > 0
+        assert 0.0 <= a.padding_waste < 1.0
