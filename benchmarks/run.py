@@ -10,6 +10,12 @@
   fc_matmul    - planner-scheduled FC matmul vs a naive block_n=128 blocking
                  (parity + wall time + modeled words; BENCH_fc.json holds
                  the committed baseline)
+  conv_algos   - cross-algorithm conv planning: the two-level
+                 algorithm x blocking argmin's crossover on MANTICORE —
+                 a deep-channel 1x1 stride-2 layer (im2col-GEMM wins) vs
+                 an early wide-plane 3x3 layer (direct strip wins); both
+                 kernels parity-asserted, both families' modeled words
+                 gated (merges into BENCH_conv.json)
   conv_bwd     - planned backward conv kernels (dgrad strip conv + wgrad
                  accumulation) vs jax.grad of the XLA reference (parity +
                  wall time + modeled words; BENCH_bwd.json baseline)
@@ -239,6 +245,64 @@ def bench_conv_fused(write_baseline: bool = False):
                  f"speedup_vs_seed={t_seed / t_fused:.2f}x;maxerr={err:.2e};"
                  f"modeled_words={sched.modeled_words}"))
     _write_baseline(rows, "BENCH_conv.json", write_baseline)
+    return rows
+
+
+def bench_conv_algos(write_baseline: bool = False):
+    """Cross-algorithm conv planning: the two-level algorithm x blocking
+    argmin's measured crossover.
+
+    Two MANTICORE shapes pin it: a deep-channel 1x1 stride-2 layer where
+    the patch matrix reads S^2 = 4x fewer input words than the direct
+    kernel's full halo'd rows (im2col-GEMM wins), and an early wide-plane
+    3x3 layer where the F*F = 9x patch read amplification buries it
+    (direct strip wins).  Each case executes the argmin winner and the
+    rival family's kernel (interpret mode) with parity vs the XLA
+    reference; both families' modeled words gate through --check.
+    """
+    from repro.core.machine import MANTICORE
+    from repro.kernels.conv2d.im2col import conv2d_im2col
+    from repro.kernels.conv2d.ops import conv2d, conv_out_extent
+    from repro.kernels.conv2d.ref import conv2d_fused_ref
+    from repro.plan import planner_for
+
+    rng = np.random.default_rng(13)
+    planner = planner_for("conv2d", MANTICORE)
+    rows = []
+    cases = [
+        ("deep_1x1_s2", dict(B=1, H=13, W=13, DI=512, DO=256, F=1, S=2, P=0)),
+        ("wide_3x3_s1", dict(B=1, H=32, W=32, DI=3, DO=64, F=3, S=1, P=1)),
+    ]
+    for name, c in cases:
+        x = jnp.asarray(
+            rng.standard_normal((c["B"], c["H"], c["W"], c["DI"])), jnp.float32)
+        f = jnp.asarray(
+            rng.standard_normal((c["F"], c["F"], c["DI"], c["DO"])) * 0.05,
+            jnp.float32)
+        H_O = conv_out_extent(c["H"], c["P"], c["F"], c["S"])
+        W_O = conv_out_extent(c["W"], c["P"], c["F"], c["S"])
+        shape = dict(H_O=H_O, W_O=W_O, F=c["F"], S=c["S"], d_in=c["DI"],
+                     d_out=c["DO"], in_bytes=4, batch=c["B"], padding=c["P"],
+                     H_I=c["H"], W_I=c["W"])
+        win = planner.plan(**shape)
+        direct = planner.plan(**shape, algorithm="direct")
+        im2col = planner.plan(**shape, algorithm="im2col")
+        want = conv2d_fused_ref(x, f, stride=c["S"], padding=c["P"])
+        got = conv2d(x, f, stride=c["S"], padding=c["P"], schedule=win)
+        err = float(jnp.abs(got - want).max())
+        assert err < 1e-4, f"conv_algos {name}: winner diverges ({err})"
+        rival = conv2d_im2col(x, f, stride=c["S"], padding=c["P"],
+                              schedule=im2col)
+        err_r = float(jnp.abs(rival - want).max())
+        assert err_r < 1e-4, f"conv_algos {name}: im2col diverges ({err_r})"
+        t = _time(lambda: conv2d(x, f, stride=c["S"], padding=c["P"],
+                                 schedule=win))
+        rows.append((f"conv_algos_{name}", t,
+                     f"pick={win.algorithm};"
+                     f"direct_words={direct.modeled_words};"
+                     f"im2col_words={im2col.modeled_words};"
+                     f"winner_words={win.modeled_words};maxerr={err:.1e}"))
+    _merge_baseline(rows, "BENCH_conv.json", write_baseline)
     return rows
 
 
@@ -526,6 +590,8 @@ def bench_smoke():
     b = jnp.zeros((4,), jnp.float32)
     case("conv2d", (x, f, b), dict(padding=1),
          kw=dict(padding=1, block_do=2, block_di=2, block_h=4))
+    case("conv2d_im2col", (x, f, b), dict(padding=1),
+         kw=dict(padding=1, block_h=4, block_m=8, block_n=8, block_k=8))
 
     dy = jnp.asarray(rng.standard_normal((8, 8, 4)), jnp.float32)
     case("conv2d_dgrad", (dy, f), dict(padding=1),
@@ -548,7 +614,7 @@ def bench_smoke():
          kw=dict(causal=True, block_q=8, block_kv=8), tol=2e-3)
 
     assert set(registered_ops()) == {
-        "conv2d", "conv2d_dgrad", "conv2d_wgrad",
+        "conv2d", "conv2d_im2col", "conv2d_dgrad", "conv2d_wgrad",
         "matmul", "matmul_dx", "matmul_dw", "flash_attention",
     }
     return rows
@@ -580,6 +646,7 @@ SECTIONS = {
     "schedule_sim": bench_schedule_sim,
     "kernels": bench_kernels,
     "conv_fused": bench_conv_fused,
+    "conv_algos": bench_conv_algos,
     "fc_matmul": bench_fc_matmul,
     "conv_bwd": bench_conv_bwd,
     "fc_bwd": bench_fc_bwd,
@@ -592,7 +659,7 @@ SECTIONS = {
 # Which sections feed each committed baseline (conv_bwd and fc_bwd merge
 # into one file) — the --check regression gate walks this map.
 BASELINES = {
-    "BENCH_conv.json": ("conv_fused",),
+    "BENCH_conv.json": ("conv_fused", "conv_algos"),
     "BENCH_fc.json": ("fc_matmul",),
     "BENCH_bwd.json": ("conv_bwd", "fc_bwd"),
     "BENCH_shard.json": ("fc_sharded",),
@@ -600,7 +667,10 @@ BASELINES = {
 }
 
 # Modeled-word regressions above this gate a CI failure; wall-time moves
-# are report-only (CI runners are too noisy to gate on).
+# are report-only by default (CI runners are too noisy to gate on a tight
+# bound) — opt into a wall gate with ``--check --wall-tolerance <frac>``,
+# which fails any row slower than (1 + frac) x its committed baseline.
+# The stable CI runner enables it with a generous fraction.
 CHECK_TOLERANCE = 0.10
 
 
@@ -619,11 +689,13 @@ def _word_metrics(derived: str) -> dict[str, int]:
     return out
 
 
-def check(baseline_files) -> int:
+def check(baseline_files, wall_tolerance: float | None = None) -> int:
     """Compare current runs against the committed baselines: fail (return
     the failure count) on modeled-word regressions > CHECK_TOLERANCE;
-    report timing deltas without gating.  The CI bench-regression step is
-    ``benchmarks/run.py --check BENCH_*.json``."""
+    timing deltas are reported without gating unless ``wall_tolerance``
+    opts in, in which case ``us > (1 + wall_tolerance) * base_us`` also
+    fails.  The CI bench-regression step is ``benchmarks/run.py --check
+    BENCH_*.json --wall-tolerance <frac>``."""
     failures = 0
     for path in baseline_files:
         fname = os.path.basename(path)
@@ -654,8 +726,16 @@ def check(baseline_files) -> int:
                 elif now != was:
                     verdicts.append(f"changed:{key}={now}vs{was}")
             base_us = want.get("us_per_call") or 0.0
-            dt = (f"t={us / base_us:.2f}x" if base_us > 1e-9
-                  else "t=report-only")
+            gated = wall_tolerance is not None and base_us > 1e-9
+            if base_us <= 1e-9:
+                dt = "t=report-only"
+            else:
+                dt = f"t={us / base_us:.2f}x" + ("" if gated else "(report)")
+            if gated and us > (1.0 + wall_tolerance) * base_us:
+                failures += 1
+                verdicts.append(
+                    f"WALL-REGRESSION:{us:.0f}us>"
+                    f"{(1 + wall_tolerance) * base_us:.0f}us")
             print(f"check:{name},{us:.1f},{dt};"
                   f"{';'.join(verdicts) or 'words-ok'}")
     print(f"check:summary,0.0,failures={failures};"
@@ -666,11 +746,20 @@ def check(baseline_files) -> int:
 def main() -> None:
     global _FORCE_BASELINE
     argv = sys.argv[1:]
+    wall_tolerance = None
+    if "--wall-tolerance" in argv:
+        i = argv.index("--wall-tolerance")
+        try:
+            wall_tolerance = float(argv[i + 1])
+        except (IndexError, ValueError):
+            sys.exit("--wall-tolerance needs a fractional slowdown "
+                     "(e.g. --wall-tolerance 2.0 fails rows >3x baseline)")
+        del argv[i:i + 2]
     if "--check" in argv:
         files = [a for a in argv if a != "--check"]
         files = files or sorted(BASELINES)
         print("name,us_per_call,derived")
-        sys.exit(1 if check(files) else 0)
+        sys.exit(1 if check(files, wall_tolerance) else 0)
     args = [a for a in argv if a != "--write-baseline"]
     _FORCE_BASELINE = "--write-baseline" in argv
     only = args[0] if args else None

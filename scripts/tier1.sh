@@ -4,7 +4,9 @@
 #                         [--autotune-smoke] [--fault-smoke] [--serve-smoke]
 #                         [extra pytest args...]
 #   --bench-smoke     additionally run one tiny planner+kernel case per
-#                     registered op in interpret mode (benchmarks/run.py smoke)
+#                     registered op in interpret mode (benchmarks/run.py
+#                     smoke) plus the autotune smoke's two-algorithm conv
+#                     cell (direct vs im2col-GEMM tune-and-replay)
 #   --grad-smoke      run ONLY the gradient parity harness's fast subset
 #                     (tests/test_backward_plan.py TestGradSmoke) and exit
 #   --dist-smoke      run ONLY the sharded-parity subset (ShardedSchedule
@@ -12,9 +14,12 @@
 #                     tests, which set XLA_FLAGS=--xla_force_host_platform_
 #                     device_count=4 in their subprocesses) and exit
 #   --autotune-smoke  run ONLY the measured-time autotuner smoke and exit:
-#                     tune one tiny conv cell and one FC cell in interpret
-#                     mode against a tmpdir cache and assert both winners
-#                     replay from it (python -m repro.plan.autotune --smoke)
+#                     tune one tiny conv cell, one FC cell, and one
+#                     two-algorithm MANTICORE conv cell (both families
+#                     measured, the winner's algorithm tag replayed) in
+#                     interpret mode against a tmpdir cache and assert
+#                     every winner replays from it
+#                     (python -m repro.plan.autotune --smoke)
 #   --fault-smoke     run ONLY the elastic fault-tolerance suite and exit:
 #                     seeded chaos runs (tests/test_chaos.py) — injected
 #                     host death at step k on a forced multi-device
@@ -133,4 +138,7 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
 if [[ "$BENCH_SMOKE" == 1 ]]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py smoke
+  # The two-algorithm conv autotune cell rides with the bench smoke: the
+  # measured direct-vs-im2col crossover must tune, cache, and replay.
+  run_autotune_smoke
 fi

@@ -409,6 +409,48 @@ def matmul_block_traffic(*, m: int, n: int, k: int, block_m: int,
     return Traffic(macs=mp * np_ * kp, main_loads=loads, main_stores=stores)
 
 
+def conv_im2col_traffic(*, H_O: int, W_O: int, F: int, S: int, d_in: int,
+                        d_out: int, block_h: int, block_m: int, block_n: int,
+                        block_k: int, pool: int = 1, batch: int = 1) -> Traffic:
+    """im2col-GEMM conv traffic (== schedule_sim.simulate_conv_im2col).
+
+    The layer runs strip by strip: each strip of ``block_h`` output rows
+    expands its receptive fields into a patch matrix A of
+    ``batch * rows * W_O`` rows by ``F*F*d_in`` columns and multiplies it
+    against the reshaped filter matrix [F*F*d_in, d_out] with the blocked
+    GEMM (``matmul_block_traffic``).  The patch matrix never materializes
+    whole in HBM — only strip-at-a-time — but its *words are charged in
+    full*: every output position reads its complete F x F x d_in patch, an
+    input read amplification of ``F*F/S**2`` relative to the raw image
+    (each input pixel belongs to up to F^2/S^2 patches, and zero-padding
+    pixels are charged like real ones — the patch matrix materializes
+    them).  That amplification is the direct kernel's structural edge at
+    F > S; im2col wins it back when S > F (strided convs read only the
+    pixels their patches use, while the strip kernel streams whole rows)
+    or when the GEMM's blocking beats the strip accumulator's.
+
+    With ``pool > 1`` the pool epilogue is *not* fused into the GEMM (the
+    direct kernel fuses it into the flush): the un-pooled strip outputs
+    store from the GEMM, then the pool pass re-reads each window and
+    stores the pooled plane.
+    """
+    k = F * F * d_in
+    loads = stores = macs = 0
+    for h0 in range(0, H_O, block_h):
+        rows = min(block_h, H_O - h0)
+        t = matmul_block_traffic(m=batch * rows * W_O, n=d_out, k=k,
+                                 block_m=block_m, block_n=block_n,
+                                 block_k=block_k)
+        loads += t.main_loads
+        stores += t.main_stores
+        macs += t.macs
+    if pool > 1:
+        pooled = (H_O // pool) * (W_O // pool)
+        loads += batch * pooled * pool * pool * d_out
+        stores += batch * pooled * d_out
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
 def ring_traffic(*, m: int, n: int, k: int, devices: int) -> Traffic:
     """Alg 3's ring reuse on the FC/matmul mesh (core/ring.py): X is
     K-sharded, W is N-sharded with full K, and each device multiplies the

@@ -213,7 +213,7 @@ def conv_block(x, f, b, stride=1, padding=0, pool=1, strategy="strip",
 def plan(
     x_shape, f_shape, *, stride=1, padding=0, pool=1, in_bytes=4,
     machine=None, strategy="strip", mesh=None, shard_axis="data",
-    shard_strategy=None, autotune=None,
+    shard_strategy=None, autotune=None, algorithm=None,
 ):
     """Plan this layer without running it: the Schedule the kernel would
     use for operands of these shapes (report `.modeled_words` next to
@@ -223,7 +223,11 @@ def plan(
     ``shard_axis``, pinnable with ``shard_strategy=``) plus the HBM/ICI
     word split; a single-device mesh degenerates to today's Schedule.
     ``autotune`` ("off" | "cache-only" | "tune", default the process
-    policy) lets a measured winner for this cell override the argmin."""
+    policy) lets a measured winner for this cell override the argmin.
+    ``algorithm`` pins one family of the two-level argmin ("direct" /
+    "im2col"); the default lets both compete — the paper strategies
+    ("alg1"/"alg2"/"alg3") pin direct-kernel blocks and therefore already
+    imply the direct family."""
     from repro.core.machine import TPU_V5E
     from repro.kernels.conv2d.ops import _fused_pool, conv_out_extent
     from repro.plan import autotune as at
@@ -242,6 +246,7 @@ def plan(
         H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
         in_bytes=in_bytes, pool=fused, batch=B, padding=padding,
         H_I=H, W_I=W, block_do=block_do, block_h=block_h,
+        algorithm=algorithm,
     ), machine=machine, mesh=mesh, axis=shard_axis,
         strategy=shard_strategy, policy=autotune)
 

@@ -169,6 +169,36 @@ def simulate_matmul_blocks(m: int, n: int, k: int,
     return Traffic(macs=macs, main_loads=loads, main_stores=stores)
 
 
+def simulate_conv_im2col(*, H_O: int, W_O: int, F: int, S: int, d_in: int,
+                         d_out: int, block_h: int, block_m: int,
+                         block_n: int, block_k: int, pool: int = 1,
+                         batch: int = 1) -> Traffic:
+    """Walk the im2col-GEMM conv schedule strip by strip: each strip of
+    ``block_h`` output rows expands into a patch matrix of
+    ``batch * rows * W_O`` x ``F*F*d_in`` (every patch word charged —
+    the F*F/S^2 read amplification of im2col, zero-padding included) and
+    runs the blocked-matmul grid walk against the [F*F*d_in, d_out]
+    filter matrix; with ``pool > 1`` the unfused pool epilogue re-reads
+    every pool window of the stored conv output and stores the pooled
+    plane.  ``ccr.conv_im2col_traffic`` must equal this executed count."""
+    k = F * F * d_in
+    loads = stores = macs = 0
+    for h0 in range(0, H_O, block_h):  # spatial strips, patch matrix per strip
+        rows = min(block_h, H_O - h0)
+        t = simulate_matmul_blocks(batch * rows * W_O, d_out, k,
+                                   block_m, block_n, block_k)
+        loads += t.main_loads
+        stores += t.main_stores
+        macs += t.macs
+    if pool > 1:  # unfused pool epilogue over the stored conv output
+        for _b in range(batch):
+            for _ph in range(H_O // pool):
+                for _pw in range(W_O // pool):
+                    loads += pool * pool * d_out  # re-read the window
+                    stores += d_out  # pooled element per output slice
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores)
+
+
 def simulate_attention_blocks(
     *, seq_q: int, seq_kv: int, head_dim: int, block_q: int, block_kv: int,
     n_q_heads: int = 1, n_kv_heads: int = 1, batch: int = 1,

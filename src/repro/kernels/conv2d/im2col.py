@@ -1,0 +1,214 @@
+"""im2col-GEMM conv2d: the direct strip kernel's rival algorithm family.
+
+Each strip of ``block_h`` output rows expands its receptive fields into a
+patch matrix of ``[batch * rows * W_O, F*F*d_in]`` — strip-at-a-time, so
+the whole patch matrix never materializes in HBM — and multiplies it
+against the reshaped ``[F*F*d_in, d_out]`` filter matrix with the blocked
+Pallas matmul (kernels/matmul): the GEMM core whose blocking
+:class:`repro.plan.Im2colConvPlanner` *delegates* to ``MatmulPlanner``,
+the repo's first compound planner.  bias/ReLU apply on the GEMM output;
+pooling runs as an unfused epilogue (the direct kernel fuses it into the
+flush), which the traffic model charges (``ccr.conv_im2col_traffic``, the
+``F*F/S^2`` patch read amplification per strip).
+
+Registered both as its own op (``conv2d_im2col``) and as the execution
+target the ``conv2d`` op dispatches to when a schedule carries
+``algorithm="im2col"`` — the two-level ``algorithm x blocking`` argmin's
+other branch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.machine import TPU_V5E, MachineModel
+from repro.core.shard_compat import shard_map
+from repro.kernels.conv2d.ops import _fused_pool, conv_out_extent
+from repro.kernels.conv2d.ref import conv2d_fused_ref, maxpool_ref
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.plan import Schedule, pad_dim, pallas_op, partition_specs
+from repro.plan.planners import Im2colConvPlanner
+from repro.plan.planners import round_up as _round_up
+
+_LANE = 128
+
+
+def _shape_args(
+    x, f, bias=None, *, stride=1, padding=0, relu=False, pool=1,
+    block_h=None, block_m=None, block_n=None, block_k=None,
+):
+    """Planner shapes from concrete operands (the op registry contract).
+    Same geometry extraction as the direct op; the tunable knobs are the
+    strip height plus the delegated GEMM's blocks."""
+    batched = x.ndim == 4
+    B = x.shape[0] if batched else 1
+    H, W, d_in = x.shape[-3], x.shape[-2], x.shape[-1]
+    F, d_out = f.shape[0], f.shape[3]
+    H_O = conv_out_extent(H, padding, F, stride)
+    W_O = conv_out_extent(W, padding, F, stride)
+    return dict(
+        H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
+        in_bytes=x.dtype.itemsize, pool=_fused_pool(H_O, W_O, pool), batch=B,
+        padding=padding, H_I=H, W_I=W,
+        block_h=block_h, block_m=block_m, block_n=block_n, block_k=block_k,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "stride", "padding", "relu", "pool", "schedule", "out_dtype", "interpret",
+    ),
+)
+def _conv2d_im2col_impl(
+    x, f, bias, *, stride, padding, relu, pool, schedule, out_dtype, interpret,
+):
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+    B, H, W, d_in = x.shape
+    F = f.shape[0]
+    d_out = f.shape[3]
+    S = stride
+    H_O = conv_out_extent(H, padding, F, S)
+    W_O = conv_out_extent(W, padding, F, S)
+    assert H_O > 0 and W_O > 0, "receptive field larger than padded input"
+
+    # Blocking comes from the Schedule; default missing blocks and clamp
+    # defensively (legality is ours, fidelity is the planner's).
+    hb = max(1, min(schedule.block("block_h", H_O), H_O))
+    k = F * F * d_in
+    bm = schedule.block("block_m", min(_round_up(B * hb * W_O, _LANE), 512))
+    bn = schedule.block("block_n", min(_round_up(d_out, _LANE), 2048))
+    bk = schedule.block("block_k", min(_round_up(k, _LANE), 512))
+
+    # Pad spatially so every strip's halo'd window and the right-most
+    # receptive column exist (mirrors the direct wrapper's padding).
+    n_h = -(-H_O // hb)
+    rows_needed = (n_h * hb - 1) * S + F
+    pad_bottom = padding + max(0, rows_needed - (H + 2 * padding))
+    cols_needed = (W_O - 1) * S + F
+    pad_right = padding + max(0, cols_needed - (W + 2 * padding))
+    xp = jnp.pad(x, ((0, 0), (padding, pad_bottom), (padding, pad_right), (0, 0)))
+
+    kp, np_ = _round_up(k, bk), _round_up(d_out, bn)
+    # Filter matrix [F*F*d_in, d_out]: (fy, fx, d_i) row order matches the
+    # patch stacking below.
+    wmat = pad_dim(pad_dim(f.reshape(k, d_out), 0, kp), 1, np_)
+
+    strips = []
+    for h0 in range(0, H_O, hb):
+        rows = min(hb, H_O - h0)
+        win = jax.lax.slice_in_dim(
+            xp, h0 * S, h0 * S + (rows - 1) * S + F, axis=1)
+        cols = []
+        for fy in range(F):
+            for fx in range(F):
+                cols.append(jax.lax.slice(
+                    win, (0, fy, fx, 0),
+                    (B, fy + (rows - 1) * S + 1, fx + (W_O - 1) * S + 1, d_in),
+                    (1, S, S, 1)))  # [B, rows, W_O, d_in] per filter tap
+        # The strip's patch matrix: [B * rows * W_O, F*F*d_in].
+        a = jnp.stack(cols, axis=3).reshape(B * rows * W_O, k)
+        m = B * rows * W_O
+        ap = pad_dim(pad_dim(a, 0, _round_up(m, bm)), 1, kp)
+        o = matmul_pallas(ap, wmat, block_m=bm, block_n=bn, block_k=bk,
+                          out_dtype=jnp.float32, interpret=interpret)
+        strips.append(o[:m, :d_out].reshape(B, rows, W_O, d_out))
+    out = jnp.concatenate(strips, axis=1)
+    out = out + bias.astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    if pool > 1:  # unfused epilogue (the direct kernel fuses this)
+        out = maxpool_ref(out, pool)
+    out = out.astype(out_dtype)
+    return out if batched else out[0]
+
+
+def _impl(
+    x, f, bias, *, schedule, out_dtype, interpret,
+    stride=1, padding=0, relu=False, pool=1,
+    block_h=None, block_m=None, block_n=None, block_k=None,  # planner knobs
+):
+    del block_h, block_m, block_n, block_k
+    return _conv2d_im2col_impl(
+        x, f, bias, stride=stride, padding=padding, relu=relu, pool=int(pool),
+        schedule=schedule, out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+def _sharded_impl(x, f, bias, *, schedule, mesh, out_dtype, interpret,
+                  stride=1, padding=0, relu=False, pool=1,
+                  block_h=None, block_m=None, block_n=None, block_k=None):
+    """Data-parallel im2col conv from a ShardedSchedule: the same
+    "batch"/"stack" partitions as the direct op (each device runs the
+    planned per-shard GEMM schedule), specs from ``schedule.partition``."""
+    del block_h, block_m, block_n, block_k  # consumed by the planner
+    if schedule.strategy not in ("batch", "stack"):
+        raise NotImplementedError(
+            f"conv2d_im2col sharded strategy {schedule.strategy!r}")
+    *in_specs, out_spec = partition_specs(schedule)
+    batched = x.ndim == 4
+    if not batched:
+        x = x[None]
+
+    def fn(xl, fl, bl):
+        return _conv2d_im2col_impl(
+            xl, fl, bl, stride=stride, padding=padding, relu=relu,
+            pool=int(pool), schedule=schedule.schedule, out_dtype=out_dtype,
+            interpret=interpret,
+        )
+
+    out = shard_map(fn, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=out_spec, check_vma=False)(x, f, bias)
+    return out if batched else out[0]
+
+
+conv2d_im2col_op = pallas_op(
+    "conv2d_im2col",
+    planner=Im2colConvPlanner,
+    shape_args=_shape_args,
+    impl=_impl,
+    reference=conv2d_fused_ref,
+    sharded_impl=_sharded_impl,
+)
+
+
+def conv2d_im2col(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    pool: int | None = None,
+    schedule: Schedule | None = None,
+    block_h: int | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> jax.Array:
+    """im2col-GEMM convolutional forward for arbitrary shapes.
+
+    Same contract as :func:`repro.kernels.conv2d.ops.conv2d` (``x``:
+    [B, H, W, D_I] or unbatched; ``f``: [F, F, D_I, D_O]; fused bias/ReLU,
+    unfused pool), executed as per-strip patch-matrix GEMMs.  Blocking:
+    ``schedule`` > ``block_*`` pins > the delegating planner.
+    """
+    d_out = f.shape[3]
+    if bias is None:
+        bias = jnp.zeros((d_out,), jnp.float32)
+    return conv2d_im2col_op(
+        x, f, bias,
+        schedule=schedule, machine=machine, interpret=interpret,
+        out_dtype=out_dtype or x.dtype,
+        stride=stride, padding=padding, relu=relu, pool=int(pool or 1),
+        block_h=block_h, block_m=block_m, block_n=block_n, block_k=block_k,
+    )

@@ -44,8 +44,12 @@ def _fused_pool(H_O: int, W_O: int, pool: int) -> int:
 def _shape_args(
     x, f, bias=None, *, stride=1, padding=0, relu=False, pool=1,
     block_do=None, block_di=None, block_h=None,
+    algorithm=None, block_m=None, block_n=None, block_k=None,
 ):
-    """Planner shapes from concrete operands (the op registry contract)."""
+    """Planner shapes from concrete operands (the op registry contract).
+    ``algorithm`` pins one family of the two-level argmin ("direct" /
+    "im2col"); block_m/n/k pin the im2col GEMM's delegated blocking the
+    way block_do/di/h pin the direct kernel's."""
     batched = x.ndim == 4
     B = x.shape[0] if batched else 1
     H, W, d_in = x.shape[-3], x.shape[-2], x.shape[-1]
@@ -58,6 +62,8 @@ def _shape_args(
         pool=_fused_pool(H_O, W_O, pool), batch=B,
         padding=padding, H_I=H, W_I=W,
         block_h=block_h, block_do=block_do,
+        algorithm=algorithm, block_m=block_m, block_n=block_n,
+        block_k=block_k,
     )
 
 
@@ -112,13 +118,26 @@ def _conv2d_impl(
     return out if batched else out[0]
 
 
+def _local_impl(x, f, bias, *, schedule, **kw):
+    """Algorithm dispatch off the schedule tag: a two-level-argmin (or
+    cache-replayed) schedule carrying ``algorithm="im2col"`` executes the
+    patch-matrix GEMM kernel; everything else runs the direct strip
+    kernel.  The import is lazy so the two conv modules stay acyclic."""
+    if getattr(schedule, "algorithm", "direct") == "im2col":
+        from repro.kernels.conv2d.im2col import _conv2d_im2col_impl
+
+        return _conv2d_im2col_impl(x, f, bias, schedule=schedule, **kw)
+    return _conv2d_impl(x, f, bias, schedule=schedule, **kw)
+
+
 def _impl(
     x, f, bias, *, schedule, out_dtype, interpret,
     stride=1, padding=0, relu=False, pool=1,
     block_do=None, block_di=None, block_h=None,  # consumed by the planner
+    algorithm=None, block_m=None, block_n=None, block_k=None,
 ):
-    del block_do, block_di, block_h
-    return _conv2d_impl(
+    del block_do, block_di, block_h, algorithm, block_m, block_n, block_k
+    return _local_impl(
         x, f, bias, stride=stride, padding=padding, relu=relu, pool=int(pool),
         schedule=schedule, out_dtype=out_dtype, interpret=interpret,
     )
@@ -126,13 +145,16 @@ def _impl(
 
 def _sharded_impl(x, f, bias, *, schedule, mesh, out_dtype, interpret,
                   stride=1, padding=0, relu=False, pool=1,
-                  block_do=None, block_di=None, block_h=None):
+                  block_do=None, block_di=None, block_h=None,
+                  algorithm=None, block_m=None, block_n=None, block_k=None):
     """Data-parallel conv from a ShardedSchedule: "batch" shards images,
     "stack" shards output channels (each device runs the planned local
     kernel on its shard); no interconnect traffic either way — the specs
-    come from ``schedule.partition``, the blocking from the per-device
-    local Schedule."""
+    come from ``schedule.partition``, the blocking (and algorithm tag)
+    from the per-device local Schedule, so both partitions apply to both
+    algorithm families."""
     del block_do, block_di, block_h  # consumed by the planner
+    del algorithm, block_m, block_n, block_k
     if schedule.strategy not in ("batch", "stack"):
         raise NotImplementedError(
             f"conv2d sharded strategy {schedule.strategy!r}")
@@ -142,7 +164,7 @@ def _sharded_impl(x, f, bias, *, schedule, mesh, out_dtype, interpret,
         x = x[None]
 
     def fn(xl, fl, bl):
-        return _conv2d_impl(
+        return _local_impl(
             xl, fl, bl, stride=stride, padding=padding, relu=relu,
             pool=int(pool), schedule=schedule.schedule, out_dtype=out_dtype,
             interpret=interpret,
@@ -176,6 +198,10 @@ def conv2d(
     block_do: int | None = None,
     block_di: int | None = None,
     block_h: int | None = None,
+    algorithm: str | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
     machine: MachineModel = TPU_V5E,
@@ -188,6 +214,11 @@ def conv2d(
     (2 = fused 2x2 max-pool) execute in the kernel's flush step on the
     VMEM-resident output strip — no HBM round-trip between the conv and
     its epilogue.  Blocking: ``schedule`` > ``block_*`` pins > planner.
+
+    The planner's argmin is *two-level*: algorithm x blocking.  When the
+    im2col-GEMM family wins (or ``algorithm="im2col"`` pins it), the call
+    executes the patch-matrix GEMM kernel (kernels/conv2d/im2col.py) with
+    its delegated ``block_m/n/k`` blocking instead of the strip kernel.
     """
     d_out = f.shape[3]
     if bias is None:
@@ -198,4 +229,6 @@ def conv2d(
         out_dtype=out_dtype or x.dtype,
         stride=stride, padding=padding, relu=relu, pool=int(pool or 1),
         block_do=block_do, block_di=block_di, block_h=block_h,
+        algorithm=algorithm, block_m=block_m, block_n=block_n,
+        block_k=block_k,
     )

@@ -116,7 +116,7 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
 
 def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
                  machine=None, mesh=None, shard_axis: str = "data",
-                 autotune=None) -> dict:
+                 autotune=None, conv_algorithm=None) -> dict:
     """Plan every kernel launch of :func:`forward` without running it.
 
     Returns {stage name: Schedule} — pass back in via ``schedules=`` to pin
@@ -128,6 +128,10 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     either flavor, a 1-device mesh reproducing today's plans exactly.
     ``autotune=`` ("cache-only"/"tune") resolves every stage through the
     measured-winner cache (repro.plan.autotune) before the argmin.
+    ``conv_algorithm=`` pins one family of the conv stages' two-level
+    algorithm x blocking argmin ("direct"/"im2col"); the default lets
+    both compete per stage, and :func:`forward` executes whichever kernel
+    each stage's schedule tag names.
     """
     from repro.core import conv_layer as cl
     from repro.core import fc_layer as fl
@@ -138,7 +142,8 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
             out[name] = cl.plan(x_shape, w_shape, stride=1, padding=F // 2,
                                 pool=2, in_bytes=in_bytes, machine=machine,
                                 mesh=mesh, shard_axis=shard_axis,
-                                autotune=autotune)
+                                autotune=autotune,
+                                algorithm=conv_algorithm)
         else:
             out[name] = fl.plan(x_shape, w_shape, in_bytes=in_bytes,
                                 machine=machine, mesh=mesh,
@@ -148,7 +153,7 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
 
 def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
                   machine=None, mesh=None, shard_axis: str = "data",
-                  autotune=None) -> dict:
+                  autotune=None, conv_algorithm=None) -> dict:
     """:func:`plan_forward` plus every backward kernel ``jax.grad`` runs:
     "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" for conv stages,
     "<stage>.dx"/"<stage>.dw" for FC stages.  Pass the result via
@@ -163,7 +168,8 @@ def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     from repro.core import fc_layer as fl
 
     out = plan_forward(cfg, batch, in_bytes=in_bytes, machine=machine,
-                       mesh=mesh, shard_axis=shard_axis, autotune=autotune)
+                       mesh=mesh, shard_axis=shard_axis, autotune=autotune,
+                       conv_algorithm=conv_algorithm)
     for name, x_shape, w_shape in _stage_geometry(cfg, batch):
         if name.startswith("conv"):
             bwd = cl.plan_bwd(x_shape, w_shape, stride=1, padding=F // 2,

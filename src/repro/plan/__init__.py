@@ -17,6 +17,7 @@ from repro.plan.planners import (
     ConvDgradPlanner,
     ConvPlanner,
     ConvWgradPlanner,
+    Im2colConvPlanner,
     MatmulDwPlanner,
     MatmulDxPlanner,
     MatmulPlanner,
@@ -58,6 +59,7 @@ __all__ = [
     "ConvDgradPlanner",
     "ConvPlanner",
     "ConvWgradPlanner",
+    "Im2colConvPlanner",
     "MatmulDwPlanner",
     "MatmulDxPlanner",
     "MatmulPlanner",

@@ -66,6 +66,18 @@ _POLICY = os.environ.get("REPRO_AUTOTUNE", "off")
 _CACHE_PATH: str | None = None  # None -> env / default, resolved lazily
 _CACHES: dict[str, "AutotuneCache"] = {}
 _TUNING = False  # reentrancy guard: never autotune inside a tuning run
+_WARNED_CELLS: set[str] = set()  # cells whose degradation was already logged
+
+
+def _warn_once(digest: str, message: str) -> None:
+    """Warn about one cell's silent-degradation path exactly once per
+    process — the first fallback is loud, steady-state replays stay
+    quiet (per-call warnings in a train loop would either drown the log
+    or be deduped into invisibility by the warnings module)."""
+    if digest in _WARNED_CELLS:
+        return
+    _WARNED_CELLS.add(digest)
+    warnings.warn(message, stacklevel=3)
 
 
 def default_cache_path() -> str:
@@ -239,7 +251,7 @@ def synthesize(op: str, shape: dict, dtype) -> tuple[tuple, dict]:
         return jnp.asarray(rng.standard_normal(dims).astype(np.float32),
                            jnp.dtype(dtype))
 
-    if op in ("conv2d", "conv2d_dgrad", "conv2d_wgrad"):
+    if op in ("conv2d", "conv2d_im2col", "conv2d_dgrad", "conv2d_wgrad"):
         F, S = shape["F"], shape.get("S", 1)
         P = shape.get("padding", shape.get("P", 0)) or 0
         B = shape.get("batch", 1)
@@ -247,7 +259,7 @@ def synthesize(op: str, shape: dict, dtype) -> tuple[tuple, dict]:
         d_in, d_out = shape["d_in"], shape["d_out"]
         H_I = shape.get("H_I") or _conv_input_extent(H_O, F, S, P)
         W_I = shape.get("W_I") or _conv_input_extent(W_O, F, S, P)
-        if op == "conv2d":
+        if op in ("conv2d", "conv2d_im2col"):
             pool = shape.get("pool", 1) or 1
             # The planner's H_O/W_O describe the pre-pool plane; the
             # traffic model stores pooled outputs, so time the fused form.
@@ -346,10 +358,13 @@ def _time_candidate(op, arrays, params, cand, machine: MachineModel,
 
 
 def _label(cand) -> str:
-    blocks = dict(local_schedule(cand).blocks)
+    loc = local_schedule(cand)
+    blocks = dict(loc.blocks)
+    alg = getattr(loc, "algorithm", "direct")
+    tag = f"{alg}:" if alg != "direct" else ""
     if isinstance(cand, ShardedSchedule):
-        return f"{cand.strategy}:{blocks}"
-    return str(blocks)
+        return f"{cand.strategy}:{tag}{blocks}"
+    return f"{tag}{blocks}"
 
 
 # ---------------------------------------------------------------------------
@@ -372,12 +387,20 @@ class TuneReport:
 def _rebuild(op: str, shape: dict, rec: dict, machine: MachineModel,
              mesh, axis: str):
     """Reconstruct a cached winner through the planner: strategy + block
-    pins re-planned so every model field is exact (not deserialized)."""
+    pins (and, for two-level planners, the algorithm tag) re-planned so
+    every model field is exact (not deserialized)."""
     blocks = {str(k): int(v) for k, v in rec.get("blocks", {}).items()}
     strategy = rec.get("strategy")
+    kwargs = {**shape, **blocks}
+    alg = rec.get("algorithm")
+    if alg and alg != "direct":
+        # Non-default family must be pinned explicitly; "direct" winners
+        # need no pin (their block_do/di pins already imply the family),
+        # which keeps pre-tag records and non-conv planners untouched.
+        kwargs["algorithm"] = str(alg)
     planner = planner_for(op, machine, mesh, axis,
                           strategy if mesh is not None else None)
-    return planner.plan(**{**shape, **blocks})
+    return planner.plan(**kwargs)
 
 
 def tune(
@@ -434,6 +457,7 @@ def tune(
         "op": opo.name,
         "strategy": winner.strategy if isinstance(winner, ShardedSchedule)
         else None,
+        "algorithm": getattr(local_schedule(winner), "algorithm", "direct"),
         "blocks": dict(local_schedule(winner).blocks),
         "us": us,
         "modeled_words": winner.modeled_words,
@@ -455,7 +479,7 @@ def lookup(
         cache = get_cache()
     ms = mesh_spec(mesh) if mesh is not None else None
     dt = _dtype_for(dtype, shape.get("in_bytes"))
-    _, digest = cache_key(op, shape, dt, machine, ms, axis, strategy)
+    readable, digest = cache_key(op, shape, dt, machine, ms, axis, strategy)
     memo = cache._memo
     if digest in memo:
         return memo[digest]
@@ -464,9 +488,15 @@ def lookup(
         return None
     try:
         sched = _rebuild(op, shape, rec, machine, ms, axis)
-    except Exception as e:  # a stale pin the planner now rejects
-        warnings.warn(f"autotune cache entry for {op!r} unusable ({e}); "
-                      "falling back to the modeled argmin", stacklevel=2)
+    except ValueError as e:
+        # Only the *expected* failure — a stale pin the planner now
+        # rejects (renamed knob, retired strategy, algorithm/pin clash)
+        # — degrades to the modeled argmin, and says so once per cell
+        # with the full cell key.  Anything else is a genuine planner
+        # bug and propagates: a bare except here silently masked those.
+        _warn_once(digest,
+                   f"autotune cache entry for {op!r} unusable ({e}); "
+                   f"cell {readable}; falling back to the modeled argmin")
         return None
     memo[digest] = sched
     return sched
@@ -497,9 +527,18 @@ def tuned_schedule(
         return tune(op, machine=machine, mesh=mesh, axis=axis,
                     strategy=strategy, cache=cache, dtype=dtype,
                     **shape).schedule
-    except Exception as e:
-        warnings.warn(f"autotuning {op!r} failed ({e}); falling back to "
-                      "the modeled argmin", stacklevel=2)
+    except ValueError as e:
+        # Same contract as lookup(): only the planner's expected shape/pin
+        # rejection degrades (once per cell, with the cell key); a missing
+        # synthesizer, a kernel crash, a broken cache write all re-raise —
+        # the old bare except turned every such bug into a silent slowdown.
+        ms = mesh_spec(mesh) if mesh is not None else None
+        dt = _dtype_for(dtype, shape.get("in_bytes"))
+        readable, digest = cache_key(op, shape, dt, machine, ms, axis,
+                                     strategy)
+        _warn_once(digest,
+                   f"autotuning {op!r} failed ({e}); cell {readable}; "
+                   "falling back to the modeled argmin")
         return None
 
 
@@ -567,7 +606,8 @@ def warm(
 
 
 def _smoke() -> int:
-    """Tune one tiny conv cell and one FC cell (interpret mode) against
+    """Tune one tiny conv cell, one FC cell, and one two-algorithm
+    MANTICORE conv cell (interpret mode) against
     a throwaway cache (a configured cache — $REPRO_AUTOTUNE_CACHE or
     --cache — is honored, but is *cleared of the smoke cells first* so
     the tune-then-replay assertion stays idempotent), then assert both
@@ -598,6 +638,30 @@ def _smoke() -> int:
             print(f"{op}:{label},{us:.1f},False,words={words}")
         print(f"{op}:winner,{dict(b.blocks)},True,"
               f"replayed_from={cache.path}")
+
+    # Two-algorithm cell: the MANTICORE deep-channel 1x1 stride-2 shape
+    # sits at the algorithm crossover, so the candidate list must span
+    # both families and the winner's algorithm tag must survive the
+    # cache replay (the two-level argmin's whole point).
+    from repro.core.machine import MANTICORE
+
+    xshape = dict(H_O=7, W_O=7, F=1, S=2, d_in=512, d_out=256, in_bytes=4)
+    first = tune("conv2d", machine=MANTICORE, topk=6, iters=1, warmup=1,
+                 cache=cache, force=True, **xshape)
+    labels = [m[0] for m in first.measurements]
+    assert any(lbl.startswith("im2col:") for lbl in labels) and any(
+        not lbl.startswith("im2col:") for lbl in labels), (
+        f"conv2d[manticore]: expected candidates from both algorithm "
+        f"families, got {labels}")
+    replay = tune("conv2d", machine=MANTICORE, topk=6, iters=1, warmup=1,
+                  cache=cache, **xshape)
+    assert not first.cached and replay.cached, "expected tune-then-replay"
+    a, b = local_schedule(first.schedule), local_schedule(replay.schedule)
+    assert (a.algorithm, a.blocks, a.grid) == (b.algorithm, b.blocks, b.grid), (
+        f"conv2d[manticore]: algorithm-tagged replay diverged: {a} vs {b}")
+    for label, us, words in first.measurements:
+        print(f"conv2d[manticore]:{label},{us:.1f},False,words={words}")
+    print(f"conv2d[manticore]:winner,{b.algorithm}:{dict(b.blocks)},True")
     print(f"autotune smoke ok ({len(cache)} cached cells)")
     return 0
 

@@ -151,9 +151,9 @@ class ShardablePlanner:
                      for st in strategies]
         out, seen = [], set()
         for s in sorted(cands, key=lambda s: s.modeled_words):
-            key = (getattr(s, "strategy", None), s.grid
-                   if isinstance(s, Schedule) else s.schedule.grid,
-                   s.blocks if isinstance(s, Schedule) else s.schedule.blocks)
+            loc = s if isinstance(s, Schedule) else s.schedule
+            key = (getattr(s, "strategy", None),
+                   getattr(loc, "algorithm", None), loc.grid, loc.blocks)
             if key not in seen:
                 seen.add(key)
                 out.append(s)
@@ -241,17 +241,34 @@ def conv_strip_words(
 
 @dataclasses.dataclass(frozen=True)
 class ConvPlanner(ShardablePlanner):
-    """Picks (block_h, block_do, block_di) for the strip-tiled conv kernel.
+    """The two-level conv argmin: ``algorithm x blocking``.
 
-    Candidate strips are H_O and its power-of-two fractions (rounded up to
-    the pool granularity); for each, the largest lane-aligned output stack
-    whose working set fits is considered; the (strip, stack) pair with the
-    fewest modeled words wins, ties toward taller strips (less halo
-    re-streaming) — the paper's Delta_O argument, two-dimensional.
+    Two rival algorithm families compete on modeled words:
+
+    * **direct** — the strip-tiled stacked kernel.  Candidate strips are
+      H_O and its power-of-two fractions (rounded up to the pool
+      granularity); for each, the largest lane-aligned output stack whose
+      working set fits is considered — the paper's Delta_O argument,
+      two-dimensional.
+    * **im2col** — the patch-matrix GEMM (kernels/conv2d/im2col.py).  Its
+      blocking is *delegated* to :class:`MatmulPlanner` on the per-strip
+      GEMM ``[batch*block_h*W_O, F*F*d_in] @ [F*F*d_in, d_out]`` — the
+      compound-planner pattern — and its traffic is
+      ``ccr.conv_im2col_traffic`` (the F*F/S^2 patch read amplification,
+      charged per strip).
+
+    The fitting schedule with the fewest modeled words wins, ties toward
+    direct.  ``algorithm=`` pins one family the way ``block_*`` pins pin a
+    blocking; a direct-family pin (``block_do``/``block_di``) or a
+    GEMM-family pin (``block_m``/``block_n``/``block_k``) implies its
+    family, so autotune-cached blocks replay into the algorithm that
+    produced them.
 
     On a mesh the forward conv shards as pure data parallelism: "batch"
     (each device convolves batch/P images) or "stack" (each device owns
-    D_O/P output slices), no interconnect words either way.
+    D_O/P output slices), no interconnect words either way — both
+    partitions apply to both algorithms (the local re-plan runs the same
+    two-level argmin on the shard's shape).
     """
 
     op: ClassVar[str] = "conv2d"
@@ -321,6 +338,55 @@ class ConvPlanner(ShardablePlanner):
             ShardCandidate("single", {}, (rep4, rep4, (None,), rep4))]
 
     def plan_local(
+        self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int, d_out: int,
+        in_bytes: int = 2, block_di: int | None = None, pool: int = 1,
+        batch: int = 1, padding: int | None = None,
+        H_I: int | None = None, W_I: int | None = None,
+        block_h: int | None = None, block_do: int | None = None,
+        algorithm: str | None = None, block_m: int | None = None,
+        block_n: int | None = None, block_k: int | None = None,
+    ) -> Schedule:
+        """The two-level argmin: each family's best blocking, then the
+        fitting family with fewer modeled words (ties toward direct)."""
+        if algorithm not in (None, "direct", "im2col"):
+            raise ValueError(f"unknown conv algorithm {algorithm!r}; "
+                             "expected 'direct' or 'im2col'")
+        direct_pins = block_do is not None or block_di is not None
+        gemm_pins = (block_m is not None or block_n is not None
+                     or block_k is not None)
+        if direct_pins and gemm_pins:
+            raise ValueError(
+                "block_do/block_di pin the direct kernel and "
+                "block_m/block_n/block_k pin the im2col GEMM — they cannot "
+                "be combined in one conv plan")
+        if algorithm is None:  # a family-specific pin implies its family
+            if direct_pins:
+                algorithm = "direct"
+            elif gemm_pins:
+                algorithm = "im2col"
+        if algorithm == "direct" and gemm_pins:
+            raise ValueError("direct conv has no block_m/block_n/block_k")
+        if algorithm == "im2col" and direct_pins:
+            raise ValueError("im2col conv has no block_do/block_di")
+        shape = dict(H_O=H_O, W_O=W_O, F=F, S=S, d_in=d_in, d_out=d_out,
+                     in_bytes=in_bytes, pool=pool, batch=batch,
+                     padding=padding, H_I=H_I, W_I=W_I, block_h=block_h)
+        if algorithm == "im2col":
+            return self._plan_im2col(**shape, block_m=block_m,
+                                     block_n=block_n, block_k=block_k)
+        direct = self._plan_direct(**shape, block_di=block_di,
+                                   block_do=block_do)
+        if algorithm == "direct":
+            return direct
+        im2col = self._plan_im2col(**shape, block_m=block_m,
+                                   block_n=block_n, block_k=block_k)
+        if im2col.fits(self.machine) and (
+                im2col.modeled_words < direct.modeled_words
+                or not direct.fits(self.machine)):
+            return im2col
+        return direct
+
+    def _plan_direct(
         self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int, d_out: int,
         in_bytes: int = 2, block_di: int | None = None, pool: int = 1,
         batch: int = 1, padding: int | None = None,
@@ -406,19 +472,101 @@ class ConvPlanner(ShardablePlanner):
             machine=m.name,
         )
 
+    def _plan_im2col(
+        self, *, H_O: int, W_O: int, F: int, S: int = 1, d_in: int,
+        d_out: int, in_bytes: int = 2, pool: int = 1, batch: int = 1,
+        padding: int | None = None, H_I: int | None = None,
+        W_I: int | None = None, block_h: int | None = None,
+        block_m: int | None = None, block_n: int | None = None,
+        block_k: int | None = None,
+    ) -> Schedule:
+        """The im2col-GEMM family's best blocking: per candidate strip, the
+        GEMM blocking is delegated to :class:`MatmulPlanner` on the strip's
+        patch matmul — the compound-planner pattern.  The patch matrix
+        charges every patch word (padding pixels included), so padding and
+        the real input extents don't enter this family's traffic model."""
+        del padding, H_I, W_I
+        mm = MatmulPlanner(self.machine)
+        k = F * F * d_in
+
+        def build(hb: int) -> Schedule:
+            hb = round_up(min(hb, round_up(H_O, pool)), pool)
+            inner = mm.plan_local(
+                m=batch * min(hb, H_O) * W_O, n=d_out, k=k,
+                in_bytes=in_bytes, block_m=block_m, block_n=block_n,
+                block_k=block_k)
+            t = ccr.conv_im2col_traffic(
+                H_O=H_O, W_O=W_O, F=F, S=S, d_in=d_in, d_out=d_out,
+                block_h=hb, block_m=inner.block("block_m"),
+                block_n=inner.block("block_n"),
+                block_k=inner.block("block_k"), pool=pool, batch=batch)
+            return Schedule(
+                op=self.op,
+                grid=(-(-H_O // hb),) + inner.grid,
+                blocks=tuple(sorted((("block_h", hb),) + inner.blocks)),
+                halo=0,
+                macs=t.macs,
+                loads=t.main_loads,
+                stores=t.main_stores,
+                vmem_bytes=inner.vmem_bytes,
+                machine=self.machine.name,
+                algorithm="im2col",
+            )
+
+        if block_h is not None:
+            return build(block_h)
+        best = None
+        for hb in _strip_ladder(H_O, pool):
+            s = build(hb)
+            if not s.fits(self.machine):
+                continue
+            if best is None or s.modeled_words < best.modeled_words:
+                best = s
+        return best or build(_strip_ladder(H_O, pool)[-1])
+
     def local_candidates(self, **shape) -> list[Schedule]:
-        """One candidate per strip height of the two-dimensional search
-        (each completed to its best fitting stack), tallest first."""
+        """Both families' ladders: one candidate per (algorithm, strip
+        height) of the two-level search, each completed to its family's
+        best remaining blocking, fits-filtered — the crossover autotune
+        measures for real.  An ``algorithm=`` pin (explicit or implied by
+        a family-specific block pin) collapses to one family."""
         if shape.get("block_h") is not None:
             return [self.plan_local(**shape)]
+        alg = shape.get("algorithm")
+        if alg is None:
+            if shape.get("block_do") is not None or shape.get("block_di") is not None:
+                alg = "direct"
+            elif any(shape.get(b) is not None
+                     for b in ("block_m", "block_n", "block_k")):
+                alg = "im2col"
+        algs = ("direct", "im2col") if alg is None else (alg,)
         pool = shape.get("pool") or 1
         out, seen = [], set()
         for hb in _strip_ladder(shape["H_O"], pool):
-            s = self.plan_local(**{**shape, "block_h": hb})
-            if s.blocks not in seen and s.fits(self.machine):
-                out.append(s)
-                seen.add(s.blocks)
+            for a in algs:
+                s = self.plan_local(**{**shape, "block_h": hb,
+                                       "algorithm": a})
+                key = (s.algorithm, s.blocks)
+                if key not in seen and s.fits(self.machine):
+                    out.append(s)
+                    seen.add(key)
         return out or [self.plan_local(**shape)]
+
+
+@dataclasses.dataclass(frozen=True)
+class Im2colConvPlanner(ConvPlanner):
+    """The im2col-GEMM conv as its own first-class op: the ConvPlanner
+    with the algorithm pinned to "im2col", so ``conv2d_im2col`` plans,
+    autotunes and shards like any other op while ``conv2d`` keeps the
+    two-level argmin over both families."""
+
+    op: ClassVar[str] = "conv2d_im2col"
+
+    def plan_local(self, **shape) -> Schedule:
+        return super().plan_local(**{**shape, "algorithm": "im2col"})
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        return super().local_candidates(**{**shape, "algorithm": "im2col"})
 
 
 # ---------------------------------------------------------------------------
@@ -469,11 +617,15 @@ class ConvDgradPlanner(ShardablePlanner):
         # is larger — the kernel then computes (zero) rows past the cover.
         H_I = H_I if H_I is not None else H_dil + 2 * pt - F + 1
         W_I = W_I if W_I is not None else W_dil + 2 * pt - F + 1
+        # The dgrad kernel is the *direct* strip kernel on the transposed
+        # geometry — pin the family so the delegated two-level argmin can't
+        # hand back im2col GEMM blocks the dgrad kernel doesn't speak.
         inner = ConvPlanner(self.machine).plan(
             H_O=H_I, W_O=W_I,
             F=F, S=1, d_in=d_out, d_out=d_in, in_bytes=in_bytes,
             batch=batch, padding=pt, H_I=H_dil, W_I=W_dil,
             block_h=block_h, block_do=block_do, block_di=block_di,
+            algorithm="direct",
         )
         return dataclasses.replace(inner, op=self.op)
 
@@ -993,6 +1145,7 @@ class AttentionPlanner(ShardablePlanner):
 
 PLANNERS: dict[str, type] = {
     ConvPlanner.op: ConvPlanner,
+    Im2colConvPlanner.op: Im2colConvPlanner,
     ConvDgradPlanner.op: ConvDgradPlanner,
     ConvWgradPlanner.op: ConvWgradPlanner,
     MatmulPlanner.op: MatmulPlanner,

@@ -233,6 +233,7 @@ _OPS: dict[str, PallasOp] = {}
 # `repro.plan` stays importable without (and before) any kernel code.
 _PROVIDERS = {
     "conv2d": "repro.kernels.conv2d.ops",
+    "conv2d_im2col": "repro.kernels.conv2d.im2col",
     "conv2d_dgrad": "repro.kernels.conv2d.bwd",
     "conv2d_wgrad": "repro.kernels.conv2d.bwd",
     "matmul": "repro.kernels.matmul.ops",

@@ -37,6 +37,7 @@ class Schedule:
     stores: int = 0  # modeled main-memory words stored
     vmem_bytes: int = 0  # modeled working set incl. double-buffered streams
     machine: str = "tpu_v5e"  # name of the MachineModel planned against
+    algorithm: str = "direct"  # which algorithm family the blocks belong to
 
     # -- block access -----------------------------------------------------
 

@@ -164,6 +164,13 @@ class ShardedSchedule:
         return self.schedule.op
 
     @property
+    def algorithm(self) -> str:
+        """The per-device schedule's algorithm family — sharded plans of
+        the two-level conv argmin keep their tag visible (batch/stack
+        partitions apply to both families identically)."""
+        return getattr(self.schedule, "algorithm", "direct")
+
+    @property
     def devices(self) -> int:
         """Extent of the partitioned axis — the shard group every word
         total is summed over (NOT the whole mesh: orthogonal axes

@@ -15,8 +15,11 @@ Restart protocol (train.py launcher):
      (checkpoint/checkpoint.py reshard-on-restore), and training resumes.
 
 Straggler mitigation: per-step wall-clock watchdog against a rolling
-median; sustained stragglers are reported so the launcher can evict the
-host (step skipping is never silent).
+median; every trip is logged, and after
+``RecoveryPolicy.straggler_patience`` consecutive trips the elastic loop
+escalates to :class:`HostFailure` so the slow host is actually evicted
+(shrink + re-plan + restore).  ``straggler_patience=0`` keeps the
+report-only behavior (step skipping is never silent either way).
 """
 
 from __future__ import annotations

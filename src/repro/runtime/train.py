@@ -182,13 +182,17 @@ def init_state(cfg: ModelConfig, tcfg: TrainConfig, params) -> TrainState:
 @dataclasses.dataclass(frozen=True)
 class RecoveryPolicy:
     """Bounds on the recovery state machine: how many re-meshes before
-    giving up, how long to back off between them (doubled per retry), and
-    how many consecutive non-finite losses are skipped before rolling back
-    to the last committed checkpoint."""
+    giving up, how long to back off between them (doubled per retry), how
+    many consecutive non-finite losses are skipped before rolling back
+    to the last committed checkpoint, and how many consecutive straggler
+    watchdog trips escalate to a :class:`HostFailure` eviction
+    (``straggler_patience=0``, the default, keeps the old report-only
+    behavior: trips are logged but never acted on)."""
 
     max_recoveries: int = 3
     backoff_seconds: float = 0.0
     nonfinite_patience: int = 3
+    straggler_patience: int = 0
 
 
 @dataclasses.dataclass
@@ -238,6 +242,7 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
     run: ElasticRun = build(None)
     recoveries = 0
     bad = 0  # consecutive non-finite losses
+    slow = 0  # consecutive straggler watchdog trips
     history: list[dict] = []
     step = run.start
     pending = None  # in-flight async checkpoint write (ElasticRun.save)
@@ -260,7 +265,7 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
             pending = handle
 
     def _recover(survivors: int, why: str) -> None:
-        nonlocal run, recoveries, bad, step
+        nonlocal run, recoveries, bad, slow, step
         # The last committed write must be on disk before build() restores
         # from it (and a broken writer must not be papered over by
         # restoring something older).
@@ -275,6 +280,7 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
             f"{survivors} device(s)")
         run = build(survivors)
         bad = 0
+        slow = 0
         step = run.start
 
     while step < steps:
@@ -303,7 +309,24 @@ def run_elastic(build: Callable, source: Callable, steps: int, *,
                     raise HostFailure(dead=stale,
                                       survivors=live * run.devices_per_host)
             if run.watchdog is not None and run.watchdog.observe(dt):
-                log(f"  [watchdog] step {step} straggled ({dt:.2f}s)")
+                slow += 1
+                log(f"  [watchdog] step {step} straggled ({dt:.2f}s; "
+                    f"trip {slow})")
+                # A log line nobody reads is not mitigation: after
+                # straggler_patience consecutive trips the slow host is
+                # treated as failed, so run_elastic actually evicts it
+                # (shrink + re-plan + restore) instead of limping forever.
+                if (policy.straggler_patience
+                        and slow >= policy.straggler_patience):
+                    host = (run.heartbeat.host if run.heartbeat is not None
+                            else "straggler")
+                    # Evicting the only host degenerates to a same-size
+                    # rebuild (a restart is the sole mitigation left).
+                    survivors = max(run.devices_per_host,
+                                    run.n_devices - run.devices_per_host)
+                    raise HostFailure(dead=[host], survivors=survivors)
+            else:
+                slow = 0
 
             if not math.isfinite(loss):
                 bad += 1

@@ -8,6 +8,7 @@ import os
 import subprocess
 import sys
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -165,6 +166,105 @@ class TestRecoveryStateMachine:
         build = counting_build([], watchdog=StragglerWatchdog(factor=3.0))
         tr.run_elastic(build, fake_source, 12, chaos=chaos, log=logs.append)
         assert any("[watchdog] step 9" in line for line in logs)
+
+
+# ---------------------------------------------------------------------------
+# Straggler escalation: after straggler_patience consecutive watchdog
+# trips the slow host is treated as failed (HostFailure -> eviction),
+# instead of the old log-and-limp-forever behavior.
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedWatchdog:
+    """A watchdog double: pops the next scripted verdict (the
+    StragglerWatchdog interface minus the 8-sample warmup and timers)."""
+
+    def __init__(self, verdicts):
+        self.verdicts = list(verdicts)
+
+    def observe(self, dt):
+        return self.verdicts.pop(0) if self.verdicts else False
+
+
+class TestStragglerEscalation:
+    def test_patience_zero_stays_report_only(self):
+        """The back-compat default: every step trips, nothing is evicted,
+        and the trip counter keeps climbing in the log."""
+        record, logs = [], []
+        build = counting_build(record, watchdog=_ScriptedWatchdog([True] * 6))
+        state, hist = tr.run_elastic(build, fake_source, 6, log=logs.append)
+        assert record == [4]  # never rebuilt
+        assert state["v"] == 6
+        assert any("trip 6" in line for line in logs)
+        assert not any("recover" in line for line in logs)
+
+    def test_escalates_after_patience_consecutive_trips(self):
+        """Three consecutive trips at patience=3: the tripping step is
+        aborted (never committed), the run rebuilds on the survivors and
+        replays to completion."""
+        record, logs = [], []
+        build = counting_build(
+            record, watchdog=_ScriptedWatchdog([False, True, True, True]))
+        state, hist = tr.run_elastic(
+            build, fake_source, 6,
+            policy=tr.RecoveryPolicy(straggler_patience=3), log=logs.append)
+        # devices_per_host=2 of 4: the slow host's 2 devices are evicted.
+        assert record == [4, 2]
+        assert state["v"] == 6
+        # steps 1-2 tripped below patience and committed; step 3's third
+        # consecutive trip escalated before commit, then 0-5 replayed.
+        assert [h["step"] for h in hist] == [0, 1, 2, 0, 1, 2, 3, 4, 5]
+        assert any("host failure: dead=['straggler']" in line
+                   for line in logs)
+
+    def test_clean_step_resets_the_patience_counter(self):
+        """Alternating trip/clean never reaches patience=2 — only
+        CONSECUTIVE trips mean a persistently slow host."""
+        record = []
+        build = counting_build(
+            record,
+            watchdog=_ScriptedWatchdog([True, False, True, False, True]))
+        state, _ = tr.run_elastic(
+            build, fake_source, 6,
+            policy=tr.RecoveryPolicy(straggler_patience=2),
+            log=lambda s: None)
+        assert record == [4]  # no eviction
+        assert state["v"] == 6
+
+    def test_perpetually_slow_step_fn_is_evicted(self):
+        """End to end with the real StragglerWatchdog and real step
+        timing: a step_fn that turns perpetually slow after the
+        watchdog's warmup gets its host evicted, and the rebuilt (fast)
+        incarnation finishes the run."""
+        from repro.runtime.fault_tolerance import StragglerWatchdog
+
+        record, logs = [], []
+        wd = StragglerWatchdog(factor=3.0)
+
+        def build(n_devices):
+            n = 4 if n_devices is None else n_devices
+            record.append(n)
+            evicted = len(record) > 1  # the rebuild runs without the slug
+
+            def step_fn(state, batch):
+                # Fast through the watchdog's 8-sample warmup, then the
+                # straggling host surfaces: every step 25x the median.
+                time.sleep(0.25 if not evicted and state["v"] >= 8
+                           else 0.01)
+                return {"v": state["v"] + 1}, {"loss": 1.0}
+
+            return tr.ElasticRun(step_fn=step_fn, state={"v": 0}, start=0,
+                                 n_devices=n, devices_per_host=2,
+                                 watchdog=wd)
+
+        state, hist = tr.run_elastic(
+            build, fake_source, 12,
+            policy=tr.RecoveryPolicy(straggler_patience=2), log=logs.append)
+        assert record == [4, 2]
+        assert state["v"] == 12
+        assert any("[watchdog]" in line for line in logs)
+        assert any("host failure: dead=['straggler']" in line
+                   for line in logs)
 
 
 # ---------------------------------------------------------------------------

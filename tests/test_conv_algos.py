@@ -1,0 +1,310 @@
+"""Cross-algorithm conv planning (DESIGN.md Sec. 9): the two-level
+``algorithm x blocking`` argmin.  Numeric parity of the im2col-GEMM
+kernel against the direct kernel and the XLA reference, the im2col
+closed form (ccr.conv_im2col_traffic) pinned word-for-word against the
+schedule walker, the measured MANTICORE crossover (deep strided 1x1
+picks im2col, wide 3x3 plane picks direct), pin-implies-family
+semantics, and the autotune cache replaying the winning algorithm tag
+through to the kernel that actually executes."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ccr
+from repro.core import schedule_sim as sim
+from repro.core.machine import MANTICORE, TPU_V5E
+from repro.kernels.conv2d.im2col import conv2d_im2col
+from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.conv2d.ref import conv2d_fused_ref
+from repro.plan import MeshSpec, local_schedule, planner_for
+from repro.plan import autotune as at
+from repro.plan.registry import _OPS, get_op
+
+# The two sides of the measured MANTICORE crossover (benchmarks/run.py
+# conv_algos pins the same cells end to end, wall clock included).
+DEEP = dict(H_O=7, W_O=7, F=1, S=2, d_in=512, d_out=256, in_bytes=4)
+WIDE = dict(H_O=32, W_O=32, F=3, S=1, d_in=3, d_out=64, in_bytes=4,
+            padding=1)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Never let a test read or write the user's real winner cache."""
+    monkeypatch.setattr(at, "_CACHE_PATH", str(tmp_path / "global.json"))
+    monkeypatch.setattr(at, "_POLICY", "off")
+
+
+def _operands(H, d_in, d_out, F, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, H, H, d_in)), jnp.float32)
+    f = jnp.asarray(rng.standard_normal((F, F, d_in, d_out)) / (F * F),
+                    jnp.float32)
+    return x, f
+
+
+# ---------------------------------------------------------------------------
+# Numeric parity: im2col vs direct vs the XLA reference
+# ---------------------------------------------------------------------------
+
+
+class TestParity:
+    @pytest.mark.parametrize(
+        "H,d_in,d_out,F,S,P",
+        [
+            (9, 5, 7, 3, 1, 1),    # odd channels, odd plane
+            (12, 8, 16, 3, 2, 0),  # strided 3x3
+            (13, 6, 10, 1, 2, 0),  # strided 1x1 (im2col's home turf)
+            (8, 3, 5, 5, 1, 2),    # large filter, deep padding
+        ],
+    )
+    def test_both_algorithms_match_reference(self, H, d_in, d_out, F, S, P):
+        x, f = _operands(H, d_in, d_out, F)
+        ref = conv2d_fused_ref(x, f, stride=S, padding=P)
+        direct = conv2d(x, f, stride=S, padding=P, algorithm="direct")
+        gemm = conv2d_im2col(x, f, stride=S, padding=P)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gemm), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_epilogue_parity_bias_relu_pool(self):
+        """The unfused im2col epilogue (bias + ReLU + pool after the GEMM)
+        matches the direct kernel's fused flush."""
+        x, f = _operands(8, 4, 6, 3)
+        b = jnp.asarray(np.linspace(-1.0, 1.0, 6), jnp.float32)
+        ref = conv2d_fused_ref(x, f, b, stride=1, padding=1, relu=True,
+                               pool=2)
+        direct = conv2d(x, f, bias=b, stride=1, padding=1, relu=True,
+                        pool=2, algorithm="direct")
+        gemm = conv2d_im2col(x, f, bias=b, stride=1, padding=1, relu=True,
+                             pool=2)
+        np.testing.assert_allclose(np.asarray(direct), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(gemm), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_two_level_argmin_executes_its_winner(self):
+        """conv2d with no pins runs whichever family the planner picked —
+        and the result still matches the reference either way."""
+        x, f = _operands(13, 32, 16, 1, batch=1)
+        ref = conv2d_fused_ref(x, f, stride=2, padding=0)
+        out = conv2d(x, f, stride=2, padding=0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# The im2col closed form == the executed schedule walk (house rule)
+# ---------------------------------------------------------------------------
+
+
+SHAPES = [
+    dict(H_O=8, W_O=8, F=3, S=1, d_in=8, d_out=16, in_bytes=4, pool=2,
+         batch=2),
+    dict(H_O=7, W_O=7, F=1, S=2, d_in=512, d_out=256, in_bytes=4),
+    dict(H_O=16, W_O=16, F=5, S=3, d_in=12, d_out=24, in_bytes=4, batch=3),
+]
+
+
+class TestIm2colClosedForm:
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("machine", [MANTICORE, TPU_V5E],
+                             ids=lambda m: m.name)
+    def test_modeled_equals_simulated(self, shape, machine):
+        s = planner_for("conv2d", machine).plan(**shape, algorithm="im2col")
+        assert s.algorithm == "im2col"
+        kw = dict(
+            H_O=shape["H_O"], W_O=shape["W_O"], F=shape["F"], S=shape["S"],
+            d_in=shape["d_in"], d_out=shape["d_out"],
+            pool=shape.get("pool", 1), batch=shape.get("batch", 1),
+            block_h=s.block("block_h"), block_m=s.block("block_m"),
+            block_n=s.block("block_n"), block_k=s.block("block_k"),
+        )
+        t_ccr = ccr.conv_im2col_traffic(**kw)
+        t_sim = sim.simulate_conv_im2col(**kw)
+        assert t_ccr == t_sim
+        assert (s.loads, s.stores, s.macs) == (
+            t_ccr.main_loads, t_ccr.main_stores, t_ccr.macs)
+        assert s.modeled_words == t_ccr.main_loads + t_ccr.main_stores
+
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_first_class_op_planner_agrees(self, shape):
+        """conv2d_im2col's own planner is the pinned family of the
+        two-level argmin: same blocking, same words."""
+        pinned = planner_for("conv2d", MANTICORE).plan(**shape,
+                                                       algorithm="im2col")
+        own = planner_for("conv2d_im2col", MANTICORE).plan(**shape)
+        assert own.op == "conv2d_im2col" and own.algorithm == "im2col"
+        assert own.blocks == pinned.blocks
+        assert own.modeled_words == pinned.modeled_words
+
+
+# ---------------------------------------------------------------------------
+# The crossover, pinned on MANTICORE
+# ---------------------------------------------------------------------------
+
+
+class TestCrossover:
+    def test_deep_strided_1x1_picks_im2col(self):
+        """S > F: the patch matrix reads only the pixels its patches use,
+        the strip kernel streams whole rows — im2col wins the argmin."""
+        p = planner_for("conv2d", MANTICORE)
+        win = p.plan(**DEEP)
+        assert win.algorithm == "im2col"
+        assert win.modeled_words == 168704
+        direct = p.plan(**DEEP, algorithm="direct")
+        assert direct.algorithm == "direct"
+        assert direct.modeled_words == 230144
+
+    def test_wide_3x3_plane_picks_direct(self):
+        """F > S: the F*F/S^2 patch read amplification prices im2col out;
+        the direct strip kernel keeps its structural edge."""
+        p = planner_for("conv2d", MANTICORE)
+        win = p.plan(**WIDE)
+        assert win.algorithm == "direct"
+        assert win.modeled_words == 75520
+        gemm = p.plan(**WIDE, algorithm="im2col")
+        assert gemm.algorithm == "im2col"
+        assert gemm.modeled_words == 100096
+
+    def test_candidates_expose_both_families_argmin_first(self):
+        for shape in (DEEP, WIDE):
+            p = planner_for("conv2d", MANTICORE)
+            cands = p.candidates(**shape)
+            assert {c.algorithm for c in cands} == {"direct", "im2col"}
+            words = [c.modeled_words for c in cands]
+            assert words == sorted(words)
+            assert cands[0] == p.plan(**shape)
+            assert all(c.fits(MANTICORE) for c in cands)
+
+    def test_family_pins_imply_their_algorithm(self):
+        p = planner_for("conv2d", MANTICORE)
+        assert p.plan(**DEEP, block_do=256).algorithm == "direct"
+        assert p.plan(**WIDE, block_m=128).algorithm == "im2col"
+        with pytest.raises(ValueError, match="cannot be combined"):
+            p.plan(**DEEP, block_do=256, block_m=128)
+        with pytest.raises(ValueError, match="no block_m"):
+            p.plan(**DEEP, algorithm="direct", block_m=128)
+        with pytest.raises(ValueError, match="no block_do"):
+            p.plan(**DEEP, algorithm="im2col", block_do=256)
+        with pytest.raises(ValueError, match="unknown conv algorithm"):
+            p.plan(**DEEP, algorithm="winograd")
+
+    def test_sharded_plan_keeps_the_tag(self):
+        """A batch-partitioned conv plan of the two-level argmin carries
+        the per-device winner's algorithm tag through ShardedSchedule."""
+        mesh = MeshSpec((("data", 2),))
+        ss = planner_for("conv2d", MANTICORE, mesh, "data").plan(
+            **DEEP, batch=2)
+        assert ss.strategy in ("batch", "stack")  # pure data parallelism
+        assert ss.algorithm == local_schedule(ss).algorithm
+        assert ss.algorithm == "im2col"
+
+
+# ---------------------------------------------------------------------------
+# The cached winner's algorithm tag reaches the executed kernel
+# ---------------------------------------------------------------------------
+
+
+def _fake_measure(times):
+    seq = list(times)
+
+    def m(fn, iters=3, warmup=1):
+        del fn, iters, warmup
+        return seq.pop(0)
+
+    return m
+
+
+class TestAutotuneReplay:
+    # Matches _shape_args for x=[1,13,13,64], f=[1,1,64,32], stride=2:
+    # the tune cell and the executing call must hash to the same digest.
+    CELL = dict(H_O=7, W_O=7, F=1, S=2, d_in=64, d_out=32, in_bytes=4,
+                pool=1, batch=1, padding=0, H_I=13, W_I=13)
+
+    def test_algorithm_tag_replays_to_the_executed_impl(self, tmp_path,
+                                                        monkeypatch):
+        """Spy on the conv2d op's impl: scripted times make an im2col
+        candidate win the tune; under cache-only policy the schedule the
+        kernel executes carries the cached ``algorithm="im2col"`` tag —
+        the tag survived the record, the rebuild, and the dispatch."""
+        cache = at.AutotuneCache(str(tmp_path / "autotune.json"))
+        p = planner_for("conv2d", TPU_V5E)
+        cands = p.candidates(**self.CELL)
+        idx = next(i for i, c in enumerate(cands)
+                   if c.algorithm == "im2col")
+        assert any(c.algorithm == "direct" for c in cands), \
+            "need both families competing for this test"
+        times = [0.5 if i == idx else 10.0 + i for i in range(len(cands))]
+        monkeypatch.setattr(at, "_measure", _fake_measure(times))
+        rep = at.tune("conv2d", cache=cache, topk=len(cands), **self.CELL)
+        win = local_schedule(rep.schedule)
+        assert win.algorithm == "im2col"
+
+        # A fresh cache instance (fresh process, same file) rebuilds the
+        # winner with its tag intact.
+        got = at.lookup("conv2d", dict(self.CELL),
+                        cache=at.AutotuneCache(cache.path))
+        assert got is not None and got.algorithm == "im2col"
+        assert got.blocks == win.blocks
+
+        monkeypatch.setattr(at, "_CACHE_PATH", cache.path)
+        op = get_op("conv2d")
+        seen = {}
+        orig = op.impl
+
+        def spy_impl(*arrays, schedule, **kw):
+            seen["schedule"] = schedule
+            return orig(*arrays, schedule=schedule, **kw)
+
+        monkeypatch.setitem(_OPS, "conv2d",
+                            dataclasses.replace(op, impl=spy_impl))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((1, 13, 13, 64)), jnp.float32)
+        f = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+        b = jnp.zeros((32,), jnp.float32)
+        out = _OPS["conv2d"](x, f, b, stride=2, autotune="cache-only")
+        assert seen["schedule"].algorithm == "im2col"
+        assert seen["schedule"].blocks == win.blocks
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(conv2d_fused_ref(x, f, b, stride=2)),
+            atol=1e-4, rtol=1e-4)
+
+    def test_stale_pin_degrades_once_with_cell_context(self, tmp_path,
+                                                       monkeypatch):
+        """The hardened replay path: a cached record whose pins the
+        planner now rejects warns ONCE (naming the cell) and falls back
+        to the modeled argmin — while a genuine planner bug propagates."""
+        import warnings
+
+        cache = at.AutotuneCache(str(tmp_path / "autotune.json"))
+        monkeypatch.setattr(at, "_measure", _fake_measure([1.0] * 32))
+        at.tune("conv2d", cache=cache, topk=2, **self.CELL)
+
+        def broken_rebuild(*args):
+            raise ValueError("retired knob 'block_zz'")
+
+        monkeypatch.setattr(at, "_rebuild", broken_rebuild)
+        monkeypatch.setattr(at, "_WARNED_CELLS", set())
+        # A fresh instance per lookup: the tune above memoized its winner,
+        # and replay must go through the (now broken) rebuild path.
+        fresh = at.AutotuneCache(cache.path)
+        with pytest.warns(UserWarning, match='"H_O",7'):
+            assert at.lookup("conv2d", dict(self.CELL), cache=fresh) is None
+        # Second lookup of the same cell: silent (already warned).
+        with warnings.catch_warnings(record=True) as record:
+            warnings.simplefilter("always")
+            assert at.lookup("conv2d", dict(self.CELL), cache=fresh) is None
+        assert not record
+
+        def buggy_rebuild(*args):
+            raise KeyError("planner bug")
+
+        monkeypatch.setattr(at, "_rebuild", buggy_rebuild)
+        with pytest.raises(KeyError, match="planner bug"):
+            at.lookup("conv2d", dict(self.CELL),
+                      cache=at.AutotuneCache(cache.path))
