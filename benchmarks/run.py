@@ -356,14 +356,22 @@ def bench_fc_matmul(write_baseline: bool = False):
 def bench_conv_bwd(write_baseline: bool = False):
     """Planned backward conv kernels vs jax.grad of the XLA reference.
 
-    planned path : jax.grad through conv_block runs the conv2d_dgrad strip
-                   kernel (flipped-filter transposed conv) and the
-                   conv2d_wgrad accumulation kernel, each on its own
-                   planner Schedule.
+    planned path : jax.grad through conv_block saves the fused forward's
+                   int8 epilogue-VJP mask, scatters the pooled cotangent
+                   through it, and runs the conv2d_dgrad (fused_epilogue,
+                   double-buffered DMA pipeline) and conv2d_wgrad
+                   (pipelined) kernels — no recompute conv
+                   (recompute_words=0).
     ref path     : jax.grad of the conv2d_fused_ref composition (XLA).
+    The per-kernel tokens time the dgrad/wgrad kernels and the epilogue
+    scatter in isolation on the same operands the layer backward sees.
     CPU interpret-mode timing — relative ordering, not TPU perf.
     """
+    from repro.core import ccr
     from repro.core.conv_layer import conv_block, plan_bwd
+    from repro.kernels.conv2d.bwd import (
+        conv2d_dgrad, conv2d_wgrad, epilogue_scatter)
+    from repro.kernels.conv2d.ops import conv2d_with_mask, conv_out_extent
     from repro.kernels.conv2d.ref import conv2d_fused_ref
 
     B, H, DI, DO, F, P = 4, 12, 8, 16, 3, 1
@@ -371,7 +379,7 @@ def bench_conv_bwd(write_baseline: bool = False):
     x = jnp.asarray(rng.standard_normal((B, H, H, DI)), jnp.float32)
     f = jnp.asarray(rng.standard_normal((F, F, DI, DO)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((DO,)), jnp.float32)
-    bwd = plan_bwd(x.shape, f.shape, stride=1, padding=P)
+    bwd = plan_bwd(x.shape, f.shape, stride=1, padding=P, pool=2)
 
     planned = jax.jit(jax.grad(
         lambda x, f, b: conv_block(x, f, b, 1, P, 2, "strip").sum(),
@@ -387,13 +395,32 @@ def bench_conv_bwd(write_baseline: bool = False):
 
     t_ref = _time(lambda: ref(x, f, b))
     t_plan = _time(lambda: planned(x, f, b))
+
+    # Per-kernel breakdown on the exact operands the layer backward sees.
+    out, mask = conv2d_with_mask(x, f, bias=b, stride=1, padding=P, pool=2)
+    dy = jnp.ones_like(out)
+    dg = jax.jit(lambda dy, f, mask: conv2d_dgrad(
+        dy, f, stride=1, padding=P, out_hw=(H, H), mask=mask, pool=2,
+        schedule=bwd["dgrad"], out_dtype=jnp.float32))
+    wg = jax.jit(lambda x, dy, mask: conv2d_wgrad(
+        x, dy, F=F, stride=1, padding=P, mask=mask, pool=2,
+        schedule=bwd["wgrad"], out_dtype=jnp.float32))
+    ep = jax.jit(lambda dy, mask: epilogue_scatter(dy, mask, 2))
+    t_dg = _time(lambda: dg(dy, f, mask))
+    t_wg = _time(lambda: wg(x, dy, mask))
+    t_ep = _time(lambda: ep(dy, mask))
+    H_O = conv_out_extent(H, P, F, 1)
+    sc = ccr.epilogue_scatter_traffic(H_O=H_O, W_O=H_O, d_out=DO, pool=2,
+                                      batch=B)
     words = {k: s.modeled_words for k, s in bwd.items()}
     rows = [
         ("conv_bwd_ref_xla", t_ref, f"B={B};jax.grad-of-fused-ref"),
         ("conv_bwd_planned", t_plan,
          f"speedup_vs_ref={t_ref / t_plan:.2f}x;maxerr={err:.2e};"
+         f"dgrad_us={t_dg:.1f};wgrad_us={t_wg:.1f};epilogue_us={t_ep:.1f};"
          f"dgrad_words={words['dgrad']};wgrad_words={words['wgrad']};"
-         f"recompute_words={words['recompute']}"),
+         f"epilogue_words={sc.main_loads + sc.main_stores};"
+         f"recompute_words={words.get('recompute', 0)}"),
     ]
     _merge_baseline(rows, "BENCH_bwd.json", write_baseline)
     return rows
@@ -402,12 +429,16 @@ def bench_conv_bwd(write_baseline: bool = False):
 def bench_fc_bwd(write_baseline: bool = False):
     """Planned dX/dW matmul kernels vs jax.grad of the XLA reference.
 
-    The dX kernel contracts dY and W along N (no W^T materialization);
-    the dW kernel streams the batch dimension through a resident [K-tile,
-    N-tile] accumulator.  CPU interpret-mode timing.
+    plan_bwd's "dx" cell prefers the fused dX/dW kernel (one kernel, one
+    dY stream feeding both contractions — ``dx_alg=fused_dxdw``); the
+    per-kernel tokens time the split dX/dW kernels and the fused pair on
+    identical operands so the crossover is visible in one row.  CPU
+    interpret-mode timing.
     """
     from repro.core.fc_layer import fc_layer, plan_bwd
+    from repro.kernels.matmul.bwd import matmul_dw, matmul_dx, matmul_dx_dw
     from repro.kernels.matmul.ref import fc_matmul_ref
+    from repro.plan import get_op
 
     M, K, N = 64, 512, 1024
     rng = np.random.default_rng(9)
@@ -416,7 +447,7 @@ def bench_fc_bwd(write_baseline: bool = False):
     bwd = plan_bwd(x.shape, w.shape)
 
     planned = jax.jit(jax.grad(
-        lambda x, w: (fc_layer(x, w) ** 2).sum(), argnums=(0, 1)))
+        lambda x, w: (fc_layer(x, w, None, bwd) ** 2).sum(), argnums=(0, 1)))
     ref = jax.jit(jax.grad(
         lambda x, w: (fc_matmul_ref(x, w) ** 2).sum(), argnums=(0, 1)))
 
@@ -427,10 +458,26 @@ def bench_fc_bwd(write_baseline: bool = False):
 
     t_ref = _time(lambda: ref(x, w))
     t_plan = _time(lambda: planned(x, w))
+
+    # Split vs fused on the same cotangent the layer backward sees.
+    g = jnp.asarray(rng.standard_normal((M, N)), jnp.float32)
+    s_dx_split = get_op("matmul_dx").plan(g, w)
+    dx_k = jax.jit(lambda g, w: matmul_dx(g, w, schedule=s_dx_split,
+                                          out_dtype=jnp.float32))
+    dw_k = jax.jit(lambda x, g: matmul_dw(x, g, schedule=bwd["dw"],
+                                          out_dtype=jnp.float32))
+    dxdw_k = jax.jit(lambda g, w, x: matmul_dx_dw(
+        g, w, x, schedule=bwd["dx"], out_dtype=jnp.float32))
+    t_dx = _time(lambda: dx_k(g, w))
+    t_dw = _time(lambda: dw_k(x, g))
+    t_dxdw = _time(lambda: dxdw_k(g, w, x))
+    alg = getattr(bwd["dx"], "algorithm", None) or "direct"
     rows = [
         ("fc_bwd_ref_xla", t_ref, f"M={M};K={K};N={N};jax.grad-of-ref"),
         ("fc_bwd_planned", t_plan,
          f"speedup_vs_ref={t_ref / t_plan:.2f}x;maxrelerr={err:.2e};"
+         f"dx_alg={alg};"
+         f"dx_us={t_dx:.1f};dw_us={t_dw:.1f};dxdw_us={t_dxdw:.1f};"
          f"dx_words={bwd['dx'].modeled_words};"
          f"dx_stack={bwd['dx'].block('block_k')};"
          f"dw_words={bwd['dw'].modeled_words}"),
@@ -689,6 +736,23 @@ def _word_metrics(derived: str) -> dict[str, int]:
     return out
 
 
+def _us_metrics(derived: str) -> dict[str, float]:
+    """The per-kernel wall tokens of one ``derived`` cell (``*_us=<float>``
+    — the bwd rows' dgrad/wgrad/epilogue and dx/dw/dxdw breakdowns).
+    Gated only under ``--wall-tolerance``, like the row's own
+    us_per_call."""
+    out = {}
+    for tok in derived.split(";"):
+        key, _, val = tok.partition("=")
+        if not key.endswith("_us") or not val:
+            continue
+        try:
+            out[key] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
 def check(baseline_files, wall_tolerance: float | None = None) -> int:
     """Compare current runs against the committed baselines: fail (return
     the failure count) on modeled-word regressions > CHECK_TOLERANCE;
@@ -736,6 +800,19 @@ def check(baseline_files, wall_tolerance: float | None = None) -> int:
                 verdicts.append(
                     f"WALL-REGRESSION:{us:.0f}us>"
                     f"{(1 + wall_tolerance) * base_us:.0f}us")
+            if wall_tolerance is not None:
+                # Per-kernel wall gate: the bwd rows' dgrad/wgrad/epilogue
+                # (and dx/dw/dxdw) breakdown tokens regress individually.
+                base_kus = _us_metrics(want.get("derived", ""))
+                for key, now_us in sorted(_us_metrics(derived).items()):
+                    was_us = base_kus.get(key)
+                    if was_us is None or was_us <= 1e-9:
+                        continue
+                    if now_us > (1.0 + wall_tolerance) * was_us:
+                        failures += 1
+                        verdicts.append(
+                            f"WALL-REGRESSION:{key}={now_us:.0f}us>"
+                            f"{(1 + wall_tolerance) * was_us:.0f}us")
             print(f"check:{name},{us:.1f},{dt};"
                   f"{';'.join(verdicts) or 'words-ok'}")
     print(f"check:summary,0.0,failures={failures};"

@@ -5,8 +5,10 @@
 #                         [extra pytest args...]
 #   --bench-smoke     additionally run one tiny planner+kernel case per
 #                     registered op in interpret mode (benchmarks/run.py
-#                     smoke) plus the autotune smoke's two-algorithm conv
-#                     cell (direct vs im2col-GEMM tune-and-replay)
+#                     smoke) plus the autotune smoke's cells: the
+#                     two-algorithm conv crossover (direct vs im2col-GEMM)
+#                     and the fused-epilogue dgrad backward (synthesized
+#                     int8 mask residual), each tune-and-replay
 #   --grad-smoke      run ONLY the gradient parity harness's fast subset
 #                     (tests/test_backward_plan.py TestGradSmoke) and exit
 #   --dist-smoke      run ONLY the sharded-parity subset (ShardedSchedule
@@ -138,7 +140,8 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
 if [[ "$BENCH_SMOKE" == 1 ]]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python benchmarks/run.py smoke
-  # The two-algorithm conv autotune cell rides with the bench smoke: the
-  # measured direct-vs-im2col crossover must tune, cache, and replay.
+  # The autotune cells ride with the bench smoke: the measured
+  # direct-vs-im2col conv crossover and the fused-epilogue dgrad cell
+  # (mask-aux residual synthesized) must each tune, cache, and replay.
   run_autotune_smoke
 fi

@@ -521,6 +521,73 @@ def conv_sharded_traffic(s: ConvShape, stack: int, h_block: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Critical-path steps: the overlap-aware cost axis (words -> words + steps)
+# ---------------------------------------------------------------------------
+#
+# A planned kernel is a software pipeline: each grid step's input DMA
+# overlaps the previous step's compute, so once per-step words are hidden
+# the wall time scales with the number of *sequential steps on the critical
+# path*.  The closed forms below must equal the executed walkers in
+# schedule_sim (house rule); planners record the result in
+# ``Schedule.critical_path_steps`` and the backward planners argmin
+# ``modeled_words + critical_path_steps``.
+
+
+def grid_steps(grid) -> int:
+    """Sequential steps of a plain software-pipelined grid
+    (== schedule_sim.simulate_grid_steps): one step per grid point plus
+    one pipeline-fill step (the first fetch overlaps no compute)."""
+    steps = 1
+    for g in grid:
+        steps *= g
+    return steps + 1
+
+
+def conv_dgrad_fused_steps(*, H_I: int, d_in: int, block_h: int,
+                           block_do: int, batch: int = 1) -> int:
+    """Critical-path steps of the fused-epilogue dgrad variant
+    (== schedule_sim.simulate_conv_dgrad_fused_steps).  The d_out stream
+    is folded *inside* each grid step by the double-buffered DMA loop, so
+    the sequential grid walks only (batch, dX strip, dX channel stack);
+    plus one pipeline-fill step and one step for the mask-scatter
+    prologue that rebuilds the full-rate dY from the pooled gradient."""
+    n_h = -(-H_I // block_h)
+    n_do = -(-d_in // block_do)
+    return batch * n_h * n_do + 2
+
+
+def conv_wgrad_steps(*, H_O: int, d_in: int, d_out: int, block_h: int,
+                     block_di: int, block_do: int, batch: int = 1,
+                     pipelined: bool = False) -> int:
+    """Critical-path steps of the wgrad kernel
+    (== schedule_sim.simulate_conv_wgrad_steps).  The direct grid walks
+    (d_i block, d_o stack, batch, strip) + fill; the pipelined variant
+    folds the (batch, strip) accumulation sweep into each (d_i, d_o) step
+    with double-buffered strip DMA, leaving only n_di * n_do sequential
+    steps."""
+    n_di = -(-d_in // block_di)
+    n_do = -(-d_out // block_do)
+    n_h = -(-H_O // block_h)
+    inner = 1 if pipelined else batch * n_h
+    return n_di * n_do * inner + 1
+
+
+def epilogue_scatter_traffic(*, H_O: int, W_O: int, d_out: int, pool: int,
+                             batch: int = 1, in_bytes: int = 4) -> Traffic:
+    """The fused epilogue VJP's scatter pass
+    (== schedule_sim.simulate_epilogue_scatter): read the pooled gradient
+    and the int8 pool-argmax/ReLU mask (charged in words — ``in_bytes``
+    mask bytes pack into one word), store the full-rate dY that the dgrad
+    and wgrad streams then consume.  This replaces the recompute path's
+    full forward-conv re-run (``alg2_strip_traffic`` words) whose only
+    purpose was rebuilding the same mask."""
+    pooled = batch * (H_O // pool) * (W_O // pool) * d_out
+    loads = pooled + -(-pooled // in_bytes)  # pooled dY + packed int8 mask
+    stores = batch * H_O * W_O * d_out  # scattered full-rate dY
+    return Traffic(macs=0, main_loads=loads, main_stores=stores)
+
+
+# ---------------------------------------------------------------------------
 # Roofline hook: is the algorithm memory-bound on a machine?
 # ---------------------------------------------------------------------------
 

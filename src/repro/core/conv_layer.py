@@ -29,13 +29,15 @@ accounting for any strategy comes from core/ccr.py.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import ccr
 from repro.core.machine import MANTICORE, TPU_V5E, machine_named
-from repro.kernels.conv2d.bwd import conv2d_dgrad, conv2d_wgrad
-from repro.kernels.conv2d.ops import conv2d
+from repro.kernels.conv2d.bwd import conv2d_dgrad, conv2d_wgrad, epilogue_scatter
+from repro.kernels.conv2d.ops import conv2d, conv2d_with_mask
 from repro.kernels.conv2d.ref import conv2d_fused_ref, conv2d_ref, maxpool_ref
 from repro.plan import (
     Schedule, ShardedSchedule, freeze_schedules, get_op, local_schedule,
@@ -44,6 +46,26 @@ from repro.plan import (
 
 # The machine backward schedules are planned (and fit-checked) against.
 _BWD_MACHINE = TPU_V5E
+
+_WARNED_SCHEDULES: set = set()  # (role, schedule) pairs already reported
+
+
+def warn_unfit_schedule(role: str, sched: Schedule, machine) -> None:
+    """Warn exactly once per (role, schedule) when a fit gate silently
+    drops a pinned backward schedule to the XLA/recompute fallback —
+    the autotune cache's loud-first-fallback discipline (see
+    ``repro.plan.autotune._warn_once``) applied to the layers' gates.
+    Steady-state replays of the same unfit cell stay quiet."""
+    key = (role, sched)
+    if key in _WARNED_SCHEDULES:
+        return
+    _WARNED_SCHEDULES.add(key)
+    warnings.warn(
+        f"backward schedule {role!r} (op={sched.op!r}, grid={sched.grid}) "
+        f"overflows VMEM: working set {sched.vmem_bytes} B > "
+        f"{machine.usable_for_working_set(2)} B usable on {machine.name!r}; "
+        f"falling back to the XLA reference path",
+        stacklevel=3)
 
 
 def _strategy_blocks(strategy, x, f, stride, padding):
@@ -57,11 +79,15 @@ def _strategy_blocks(strategy, x, f, stride, padding):
     return block_do, block_h
 
 
-def _planned_conv_backward(x, f, dy, stride, padding, sd):
+def _planned_conv_backward(x, f, dy, stride, padding, sd, *, mask=None, pool=1):
     """dX/dW through the planned Pallas backward kernels; ``sd`` maps
-    {"dgrad"/"wgrad": Schedule} overrides.  Returns None when a schedule
-    does not fit the machine (or the geometry is out of the dgrad
-    contract) — the caller then falls back to the XLA reference VJP."""
+    {"dgrad"/"wgrad": Schedule} overrides.  With ``mask``/``pool`` (the
+    fused forward's epilogue-VJP residual) ``dy`` is the *pooled*
+    cotangent and the kernels scatter it to full rate in-jit — the
+    fused_epilogue backward, no recompute conv.  Returns None when a
+    schedule does not fit the machine (or the geometry is out of the
+    dgrad contract) — the caller then falls back to the XLA reference
+    VJP, loudly on the first unfit cell."""
     F = f.shape[0]
     if padding > F - 1:
         return None
@@ -69,20 +95,28 @@ def _planned_conv_backward(x, f, dy, stride, padding, sd):
     s_dg = local_schedule(sd.get("dgrad"))  # sharded pins run their local blocking
     if s_dg is None:
         s_dg = get_op("conv2d_dgrad").plan(
-            dy, f, stride=stride, padding=padding, out_hw=out_hw)
+            dy, f, stride=stride, padding=padding, out_hw=out_hw,
+            mask=mask, pool=pool)
     s_wg = local_schedule(sd.get("wgrad"))
     if s_wg is None:
         s_wg = get_op("conv2d_wgrad").plan(
-            x, dy, F=F, stride=stride, padding=padding)
+            x, dy, F=F, stride=stride, padding=padding, mask=mask, pool=pool)
     # Each schedule is fit-checked against the machine it was planned for
     # (a user-pinned Manticore schedule must not pass a TPU-sized gate).
-    if not (s_dg.fits(machine_named(s_dg.machine, _BWD_MACHINE))
-            and s_wg.fits(machine_named(s_wg.machine, _BWD_MACHINE))):
+    m_dg = machine_named(s_dg.machine, _BWD_MACHINE)
+    m_wg = machine_named(s_wg.machine, _BWD_MACHINE)
+    if not s_dg.fits(m_dg):
+        warn_unfit_schedule("dgrad", s_dg, m_dg)
+        return None
+    if not s_wg.fits(m_wg):
+        warn_unfit_schedule("wgrad", s_wg, m_wg)
         return None
     dx = conv2d_dgrad(dy, f, stride=stride, padding=padding, out_hw=out_hw,
-                      schedule=s_dg, out_dtype=jnp.float32)
+                      mask=mask, pool=pool, schedule=s_dg,
+                      out_dtype=jnp.float32)
     dw = conv2d_wgrad(x, dy, F=F, stride=stride, padding=padding,
-                      schedule=s_wg, out_dtype=jnp.float32)
+                      mask=mask, pool=pool, schedule=s_wg,
+                      out_dtype=jnp.float32)
     return dx.astype(x.dtype), dw.astype(f.dtype)
 
 
@@ -152,19 +186,64 @@ def _conv_block_ref(x, f, b, stride, padding, pool, strategy, schedule,
     )
 
 
-def _conv_block_bwd(x, f, b, g, stride, padding, pool, strategy, schedule,
+def _conv_block_fwd(x, f, b, stride, padding, pool, strategy, schedule,
                     bwd_schedules):
+    """The differentiated forward: same output as the primal kernel, plus
+    the int8 epilogue-VJP mask as the auxiliary residual (None on the
+    paths the fused flush can't emit it — im2col schedules, ragged pool
+    tails — where the backward recomputes as before)."""
+    del bwd_schedules  # consumed by the backward pass
+    block_do, block_h = _strategy_blocks(strategy, x, f, stride, padding)
+    if schedule is None:
+        bias = b if b is not None else jnp.zeros((f.shape[3],), jnp.float32)
+        schedule = get_op("conv2d").plan(
+            x, f, bias, stride=stride, padding=padding, relu=True,
+            pool=pool, block_do=block_do, block_h=block_h)
+    schedule = local_schedule(schedule)
+    return conv2d_with_mask(
+        x, f, bias=b, stride=stride, padding=padding, pool=pool,
+        schedule=schedule)
+
+
+def _conv_block_bwd(x, f, b, aux, g, stride, padding, pool, strategy,
+                    schedule, bwd_schedules):
     del strategy, schedule
     sd = dict(bwd_schedules or ())
-    # Rematerialize the pre-pool activation with the planned forward kernel
-    # (the fused forward never stores it), backprop the elementwise/pool
-    # epilogue in XLA, then run the planned transposed kernels on dY.  A
-    # pinned recompute Schedule gets the same fit gate as dgrad/wgrad: if
-    # it overflows its machine, drop it and let the planner re-plan a
-    # fitting blocking instead of launching a known-oversized kernel.
+    g = g.astype(jnp.float32)
+    if aux is not None:
+        # Fused-epilogue backward: the saved int8 mask replaces the
+        # recompute conv entirely — dY scatters through the pool-argmax /
+        # ReLU-liveness mask inside the dgrad/wgrad kernels; the bias
+        # gradient reads the same scattered full-rate dY (XLA CSE merges
+        # this scatter with the kernels' identical in-jit prologue under
+        # the one enclosing backward jit).
+        dy_full = epilogue_scatter(g, aux, pool)
+        db = dy_full.sum(tuple(range(dy_full.ndim - 1))).astype(b.dtype)
+        planned = _planned_conv_backward(x, f, g, stride, padding, sd,
+                                         mask=aux, pool=pool)
+        if planned is None:  # XLA reference VJP fallback for the conv itself
+            _, vjp = jax.vjp(
+                lambda xx, ff: conv2d_ref(xx, ff, stride=stride,
+                                          padding=padding,
+                                          out_dtype=jnp.float32), x, f)
+            dx, dw = vjp(dy_full)
+            dx, dw = dx.astype(x.dtype), dw.astype(f.dtype)
+        else:
+            dx, dw = planned
+        return dx, dw, db
+    # No mask residual: rematerialize the pre-pool activation with the
+    # planned forward kernel (the fused forward never stores it), backprop
+    # the elementwise/pool epilogue in XLA, then run the planned transposed
+    # kernels on dY.  A pinned recompute Schedule gets the same fit gate as
+    # dgrad/wgrad: if it overflows its machine, drop it (loudly, once) and
+    # let the planner re-plan a fitting blocking instead of launching a
+    # known-oversized kernel.
     recompute = local_schedule(sd.get("recompute"))
     if recompute is not None and not recompute.fits(
             machine_named(recompute.machine, _BWD_MACHINE)):
+        warn_unfit_schedule(
+            "recompute", recompute,
+            machine_named(recompute.machine, _BWD_MACHINE))
         recompute = None
     y0 = conv2d(x, f, bias=b, stride=stride, padding=padding, relu=False,
                 pool=1, schedule=recompute, out_dtype=jnp.float32)
@@ -174,7 +253,7 @@ def _conv_block_bwd(x, f, b, g, stride, padding, pool, strategy, schedule,
         return maxpool_ref(y, pool) if pool > 1 else y
 
     _, evjp = jax.vjp(_epilogue, y0)
-    dy, = evjp(g.astype(jnp.float32))
+    dy, = evjp(g)
     db = dy.sum(tuple(range(dy.ndim - 1))).astype(b.dtype)
     planned = _planned_conv_backward(x, f, dy, stride, padding, sd)
     if planned is None:  # XLA reference VJP fallback for the conv itself
@@ -190,7 +269,7 @@ def _conv_block_bwd(x, f, b, g, stride, padding, pool, strategy, schedule,
 
 _conv_block_vjp = with_reference_vjp(
     _conv_block_kernel, _conv_block_ref, nondiff_argnums=(3, 4, 5, 6, 7, 8),
-    bwd_fn=_conv_block_bwd,
+    bwd_fn=_conv_block_bwd, fwd_fn=_conv_block_fwd,
 )
 
 
@@ -252,23 +331,32 @@ def plan(
 
 
 def plan_bwd(
-    x_shape, f_shape, *, stride=1, padding=0, in_bytes=4, machine=None,
-    mesh=None, shard_axis="data", autotune=None,
+    x_shape, f_shape, *, stride=1, padding=0, pool=None, in_bytes=4,
+    machine=None, mesh=None, shard_axis="data", autotune=None,
 ) -> dict:
     """Backward-pass Schedules for this layer's shapes: the dgrad and
-    wgrad kernels ``jax.grad`` will run, plus the pre-epilogue recompute
-    conv of :func:`conv_block`.  Pass (a subset of) the result back via
-    ``bwd_schedules=`` to pin the blocking; sum ``.modeled_words`` to
-    model the layer's training-step traffic.  Geometries outside the
-    dgrad kernel's contract (padding > F-1, where the layer trains via
-    the XLA fallback) return only the plannable subset — no "dgrad" key.
-    With ``mesh=`` every entry is a ShardedSchedule: dgrad and the
-    recompute shard with the batch (no collective), while the sharded
-    wgrad charges the Alg-4 tree reduction of dW as ici_words.  The
-    backward cells autotune through the same ``autotune=`` policy as the
-    forward (each op is its own cache cell).
+    wgrad kernels ``jax.grad`` will run, plus — on the recompute path
+    only — the pre-epilogue recompute conv of :func:`conv_block`.  Pass
+    (a subset of) the result back via ``bwd_schedules=`` to pin the
+    blocking; sum ``.modeled_words`` to model the layer's training-step
+    traffic.
+
+    ``pool`` opts into the fused-epilogue backward: when given and the
+    output plane tiles evenly (the fused forward emits the int8 mask
+    residual), the dgrad cell is planned as its ``fused_epilogue``
+    variant — dY scatters through the saved mask inside the kernels —
+    and the "recompute" entry is dropped entirely (recompute_words = 0).
+    A ragged pool (or ``pool=None``) keeps today's recompute plan.
+
+    Geometries outside the dgrad kernel's contract (padding > F-1, where
+    the layer trains via the XLA fallback) return only the plannable
+    subset — no "dgrad" key.  With ``mesh=`` every entry is a
+    ShardedSchedule: dgrad and the recompute shard with the batch (no
+    collective), while the sharded wgrad charges the Alg-4 tree reduction
+    of dW as ici_words.  The backward cells autotune through the same
+    ``autotune=`` policy as the forward (each op is its own cache cell).
     """
-    from repro.kernels.conv2d.ops import conv_out_extent
+    from repro.kernels.conv2d.ops import _fused_pool, conv_out_extent
     from repro.plan import autotune as at
 
     machine = machine or _BWD_MACHINE
@@ -278,6 +366,7 @@ def plan_bwd(
     F, d_out = f_shape[0], f_shape[3]
     H_O = conv_out_extent(H, padding, F, stride)
     W_O = conv_out_extent(W, padding, F, stride)
+    fused = pool is not None and _fused_pool(H_O, W_O, pool) == pool
 
     def res(op, **shape):
         return at.resolve(op, shape, machine=machine, mesh=mesh,
@@ -288,17 +377,19 @@ def plan_bwd(
             "conv2d_wgrad",
             H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
             in_bytes=in_bytes, batch=B, padding=padding, H_I=H, W_I=W),
-        "recompute": res(
+    }
+    if not fused:
+        out["recompute"] = res(
             "conv2d",
             H_O=H_O, W_O=W_O, F=F, S=stride, d_in=d_in, d_out=d_out,
             in_bytes=in_bytes, pool=1, batch=B, padding=padding,
-            H_I=H, W_I=W),
-    }
+            H_I=H, W_I=W)
     if padding <= F - 1:
         out["dgrad"] = res(
             "conv2d_dgrad",
             H_O=H_O, W_O=W_O, F=F, S=stride, P=padding, d_in=d_in,
-            d_out=d_out, in_bytes=in_bytes, batch=B, H_I=H, W_I=W)
+            d_out=d_out, in_bytes=in_bytes, batch=B, H_I=H, W_I=W,
+            pool=pool if fused else None)
     return out
 
 

@@ -24,8 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ccr
+from repro.core.conv_layer import warn_unfit_schedule
 from repro.core.machine import MANTICORE, TPU_V5E, machine_named
-from repro.kernels.matmul.bwd import matmul_dw, matmul_dx
+from repro.kernels.matmul.bwd import matmul_dw, matmul_dx, matmul_dx_dw
 from repro.kernels.matmul.ops import fc_matmul
 from repro.kernels.matmul.ref import fc_matmul_ref
 from repro.plan import (
@@ -52,11 +53,23 @@ def _fc_bwd(x, w, g, schedule, bwd_schedules):
     sd = dict(bwd_schedules or ())
     s_dx = local_schedule(sd.get("dx")) or get_op("matmul_dx").plan(g, w)
     s_dw = local_schedule(sd.get("dw")) or get_op("matmul_dw").plan(x, g)
-    # Fit-check each schedule against the machine it was planned for.
-    if not (s_dx.fits(machine_named(s_dx.machine, _BWD_MACHINE))
-            and s_dw.fits(machine_named(s_dw.machine, _BWD_MACHINE))):
+    # Fit-check each schedule against the machine it was planned for; an
+    # unfit pin drops to the XLA reference, loudly on the first cell.
+    m_dx = machine_named(s_dx.machine, _BWD_MACHINE)
+    m_dw = machine_named(s_dw.machine, _BWD_MACHINE)
+    if not s_dx.fits(m_dx):
+        warn_unfit_schedule("dx", s_dx, m_dx)
+    if not s_dw.fits(m_dw):
+        warn_unfit_schedule("dw", s_dw, m_dw)
+    if not (s_dx.fits(m_dx) and s_dw.fits(m_dw)):
         _, vjp = jax.vjp(fc_matmul_ref, x, w)  # XLA reference fallback
         return vjp(g)
+    if getattr(s_dx, "algorithm", None) == "fused_dxdw":
+        # One kernel, one dY stream for both gradients: the fused dX
+        # schedule carries the combined cost model (including the whole-M
+        # dX accumulator), so the fits() gate above already covered it.
+        dx, dw = matmul_dx_dw(g, w, x, schedule=s_dx, out_dtype=jnp.float32)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
     dx = matmul_dx(g, w, schedule=s_dx, out_dtype=jnp.float32).astype(x.dtype)
     dw = matmul_dw(x, g, schedule=s_dw, out_dtype=jnp.float32).astype(w.dtype)
     return dx, dw
@@ -104,22 +117,30 @@ def plan_bwd(x_shape, w_shape, *, in_bytes=4, machine=None, mesh=None,
              shard_axis="data", autotune=None) -> dict:
     """Backward-pass Schedules for this layer's shapes: the dX and dW
     kernels ``jax.grad`` will run.  Pass back via ``bwd_schedules=`` to
-    pin the blocking.  With ``mesh=`` both come back as ShardedSchedules
-    (dX shards with the batch; dW additionally charges the Alg-4 tree
-    reduction of the weight gradient as ici_words).  Both cells honor the
-    ``autotune=`` policy like the forward."""
+    pin the blocking.  The "dx" cell prefers the fused dX/dW kernel
+    (``algorithm="fused_dxdw"``: both gradients from one kernel sharing
+    the single dY read — ``_fc_bwd`` dispatches on the tag and the "dw"
+    schedule goes unused at run time) and falls back to the direct
+    variant when the fused whole-M accumulator overflows the machine.
+    With ``mesh=`` both come back as ShardedSchedules (dX shards with the
+    batch; dW additionally charges the Alg-4 tree reduction of the weight
+    gradient as ici_words).  Both cells honor the ``autotune=`` policy
+    like the forward."""
     from repro.plan import autotune as at
 
     machine = machine or _BWD_MACHINE
     m = _fc_m(x_shape)
     k, n = w_shape
     shape = dict(m=m, n=n, k=k, in_bytes=in_bytes)
-    return {
-        "dx": at.resolve("matmul_dx", shape, machine=machine, mesh=mesh,
-                         axis=shard_axis, policy=autotune),
-        "dw": at.resolve("matmul_dw", shape, machine=machine, mesh=mesh,
-                         axis=shard_axis, policy=autotune),
-    }
+
+    def res(op, **extra):
+        return at.resolve(op, dict(shape, **extra), machine=machine,
+                          mesh=mesh, axis=shard_axis, policy=autotune)
+
+    dx = res("matmul_dx", algorithm="fused_dxdw")
+    if not local_schedule(dx).fits(machine):
+        dx = res("matmul_dx")
+    return {"dx": dx, "dw": res("matmul_dw")}
 
 
 def fc_layer_sharded(x, w, mesh, axis: str = "model",

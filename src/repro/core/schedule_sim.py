@@ -338,5 +338,80 @@ def simulate_alg5(s: FCShape, stack: int, clusters: int = 128) -> Traffic:
     return Traffic(macs=macs, main_loads=loads, main_stores=stores, intercluster=inter)
 
 
+# ---------------------------------------------------------------------------
+# Critical-path step walkers (the overlap-aware cost axis).  Each walks the
+# literal sequential loop structure of the kernel's software pipeline and
+# counts steps; tests assert the counts equal the ccr closed forms.
+# ---------------------------------------------------------------------------
+
+
+def simulate_grid_steps(grid) -> int:
+    """Walk a plain software-pipelined grid point by point: every grid
+    point is one sequential step, plus the pipeline-fill fetch before the
+    first compute.  == ccr.grid_steps."""
+    import itertools
+
+    steps = 1  # pipeline fill: the first fetch overlaps no compute
+    for _pt in itertools.product(*(range(g) for g in grid)):
+        steps += 1
+    return steps
+
+
+def simulate_conv_dgrad_fused_steps(*, H_I: int, d_in: int, block_h: int,
+                                    block_do: int, batch: int = 1) -> int:
+    """Walk the fused-epilogue dgrad pipeline: one mask-scatter prologue
+    step, one double-buffer warm-up fetch, then one step per
+    (batch, dX strip, dX stack) grid point — the d_out stream is folded
+    inside each step by the overlapped DMA loop, so it adds no sequential
+    steps.  == ccr.conv_dgrad_fused_steps."""
+    steps = 1  # scatter prologue: pooled dY + mask -> full-rate dY
+    steps += 1  # pipeline fill: warm-up fetch of the first d_out slab
+    for _b in range(batch):
+        for _h0 in range(0, H_I, block_h):
+            for _do0 in range(0, d_in, block_do):
+                steps += 1
+    return steps
+
+
+def simulate_conv_wgrad_steps(*, H_O: int, d_in: int, d_out: int,
+                              block_h: int, block_di: int, block_do: int,
+                              batch: int = 1,
+                              pipelined: bool = False) -> int:
+    """Walk the wgrad grid: direct runs every (d_i, d_o, batch, strip)
+    point sequentially; pipelined folds the (batch, strip) accumulation
+    sweep into each (d_i, d_o) step behind double-buffered strip DMA.
+    == ccr.conv_wgrad_steps."""
+    steps = 1  # pipeline fill
+    for _di0 in range(0, d_in, block_di):
+        for _do0 in range(0, d_out, block_do):
+            if pipelined:
+                steps += 1  # (batch, strip) sweep hidden inside the step
+            else:
+                for _b in range(batch):
+                    for _h0 in range(0, H_O, block_h):
+                        steps += 1
+    return steps
+
+
+def simulate_epilogue_scatter(*, H_O: int, W_O: int, d_out: int, pool: int,
+                              batch: int = 1, in_bytes: int = 4) -> Traffic:
+    """Walk the fused epilogue VJP's scatter: per pooled output pixel read
+    the pooled gradient element, route it to the argmax position of its
+    pool window (zeros elsewhere), store the full pool*pool window of the
+    full-rate dY; the int8 mask is read once, packed in_bytes per word.
+    == ccr.epilogue_scatter_traffic."""
+    loads = stores = 0
+    for _b in range(batch):
+        for _ph in range(H_O // pool):
+            for _pw in range(W_O // pool):
+                loads += d_out  # pooled gradient element per slice
+                for _py in range(pool):
+                    for _px in range(pool):
+                        stores += d_out  # scattered full-rate dY
+    pooled = batch * (H_O // pool) * (W_O // pool) * d_out
+    loads += -(-pooled // in_bytes)  # int8 mask, in_bytes packed per word
+    return Traffic(macs=0, main_loads=loads, main_stores=stores)
+
+
 def n_stacks(D_O: int, stack: int) -> int:
     return math.ceil(D_O / stack)

@@ -47,10 +47,13 @@ from repro.kernels.pallas_compat import tpu_compiler_params
 
 
 def _conv_kernel(
-    x_ref, f_ref, b_ref, o_ref, acc_ref, *,
-    n_di: int, F: int, S: int, block_h: int, W_O: int,
-    relu: bool, pool: int,
+    x_ref, f_ref, b_ref, o_ref, *rest, n_di: int, F: int, S: int,
+    block_h: int, W_O: int, relu: bool, pool: int, emit_mask: bool = False,
 ):
+    if emit_mask:
+        mask_ref, acc_ref = rest
+    else:
+        (acc_ref,) = rest
     d_i = pl.program_id(3)
 
     @pl.when(d_i == 0)
@@ -79,9 +82,27 @@ def _conv_kernel(
         if relu:
             out = jnp.maximum(out, 0.0)
         if pool > 1:
-            out = out.reshape(
+            win = out.reshape(
                 block_h // pool, pool, W_O // pool, pool, out.shape[-1]
-            ).max(axis=(1, 3))
+            )
+            out = win.max(axis=(1, 3))
+            if emit_mask:
+                # int8 epilogue-VJP mask per pooled pixel: the flattened
+                # argmax position in [0, pool^2) of the surviving (ReLU-
+                # positive) element, or pool^2 = "dead window" (all inputs
+                # clamped to zero — the gradient routes nowhere).  Ties pick
+                # the first occurrence (descending-position overwrite);
+                # the backward scatter is winner-take-all, matching the
+                # reference VJP up to measure-zero exact ties.
+                idx = jnp.full(out.shape, pool * pool, jnp.int32)
+                for pos in reversed(range(pool * pool)):
+                    py, px = divmod(pos, pool)
+                    v = win[:, py, :, px, :]
+                    idx = jnp.where((v == out) & (out > 0), pos, idx)
+                mask_ref[0] = idx.astype(jnp.int8)
+        elif emit_mask:
+            # pool == 1: the ReLU liveness bit alone (0 alive, 1 dead).
+            mask_ref[0] = jnp.where(out > 0, 0, 1).astype(jnp.int8)
         o_ref[0] = out.astype(o_ref.dtype)
 
 
@@ -98,6 +119,7 @@ def conv2d_fused_pallas(
     W_O: int,
     relu: bool = False,
     pool: int = 1,
+    emit_mask: bool = False,
     out_dtype=None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -111,6 +133,13 @@ def conv2d_fused_pallas(
     (2 requires block_h and W_O even).
     Returns [B, n_h*block_h // pool, W_O // pool, D_O] — rows beyond H_O
     (strip padding) are garbage and must be sliced off by the caller.
+
+    With ``emit_mask=True`` (requires ``relu=True``) the flush additionally
+    stores the int8 epilogue-VJP mask — pool-argmax position or pool^2 for
+    a dead window (ReLU liveness bit when pool == 1) — and the call returns
+    ``(out, mask)`` with the mask the same [B, rows, cols, D_O] extent as
+    ``out``.  A few bits per output pixel, saved as a residual, replace the
+    backward pass's full recompute conv.
     """
     B, H_in, W_in, d_in = x_pad.shape
     F, F2, d_in2, d_out = f.shape
@@ -124,6 +153,8 @@ def conv2d_fused_pallas(
     n_h = -(-H_O // block_h)
     assert H_in >= (n_h * block_h - 1) * stride + F
     assert W_in >= (W_O - 1) * stride + F
+    if emit_mask:
+        assert relu, "the epilogue-VJP mask encodes ReLU liveness"
     out_dtype = out_dtype or x_pad.dtype
     n_di = d_in // block_di
     h_halo = (block_h - 1) * stride + F  # input rows per halo'd strip
@@ -131,8 +162,24 @@ def conv2d_fused_pallas(
     kernel = functools.partial(
         _conv_kernel,
         n_di=n_di, F=F, S=stride, block_h=block_h, W_O=W_O,
-        relu=relu, pool=pool,
+        relu=relu, pool=pool, emit_mask=emit_mask,
     )
+    out_spec = pl.BlockSpec(
+        (1, block_h // pool, W_O // pool, block_do),
+        lambda b, h, do, di: (b, h, 0, do),
+    )
+    out_struct = jax.ShapeDtypeStruct(
+        (B, n_h * block_h // pool, W_O // pool, d_out), out_dtype
+    )
+    if emit_mask:  # second output: the int8 mask, same extent as out
+        out_specs = [out_spec, pl.BlockSpec(
+            (1, block_h // pool, W_O // pool, block_do),
+            lambda b, h, do, di: (b, h, 0, do),
+        )]
+        out_shape = [out_struct, jax.ShapeDtypeStruct(out_struct.shape,
+                                                      jnp.int8)]
+    else:
+        out_specs, out_shape = out_spec, out_struct
     return pl.pallas_call(
         kernel,
         grid=(B, n_h, d_out // block_do, n_di),
@@ -151,13 +198,8 @@ def conv2d_fused_pallas(
             # Bias slice for the d_o stack (fused into the flush).
             pl.BlockSpec((1, block_do), lambda b, h, do, di: (0, do)),
         ],
-        out_specs=pl.BlockSpec(
-            (1, block_h // pool, W_O // pool, block_do),
-            lambda b, h, do, di: (b, h, 0, do),
-        ),
-        out_shape=jax.ShapeDtypeStruct(
-            (B, n_h * block_h // pool, W_O // pool, d_out), out_dtype
-        ),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((block_h * W_O, block_do), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),

@@ -70,11 +70,13 @@ def _shape_args(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "stride", "padding", "relu", "pool", "schedule", "out_dtype", "interpret",
+        "stride", "padding", "relu", "pool", "schedule", "out_dtype",
+        "interpret", "emit_mask",
     ),
 )
 def _conv2d_impl(
     x, f, bias, *, stride, padding, relu, pool, schedule, out_dtype, interpret,
+    emit_mask=False,
 ):
     batched = x.ndim == 4
     if not batched:
@@ -96,6 +98,14 @@ def _conv2d_impl(
         min(schedule.block("block_h", H_O), _round_up(H_O, fused_pool)), fused_pool
     )
     bdo = min(schedule.block("block_do", _LANE), _round_up(d_out, _LANE))
+    if interpret:
+        # Interpreted wall time scales with the 128-lane channel pad; when a
+        # block already spans its extent (grid dim 1) shrink it to the true
+        # extent — step counts and grids are unchanged.
+        if bdi >= d_in:
+            bdi = max(1, d_in)
+        if bdo >= d_out:
+            bdo = max(1, d_out)
 
     n_h = -(-H_O // hb)
     rows_needed = (n_h * hb - 1) * S + F
@@ -110,8 +120,17 @@ def _conv2d_impl(
         xp, fp, bp,
         stride=S, block_h=hb, block_do=bdo, block_di=bdi,
         H_O=H_O, W_O=W_O, relu=relu, pool=fused_pool,
-        out_dtype=out_dtype, interpret=interpret,
+        emit_mask=emit_mask, out_dtype=out_dtype, interpret=interpret,
     )
+    if emit_mask:
+        out, mask = out
+        out = out[:, : H_O // fused_pool, :, :d_out]
+        mask = mask[:, : H_O // fused_pool, :, :d_out]
+        assert not (pool > 1 and fused_pool == 1), (
+            "ragged pool cannot emit the epilogue-VJP mask")
+        if not batched:
+            return out[0], mask[0]
+        return out, mask
     out = out[:, : H_O // fused_pool, :, :d_out]
     if pool > 1 and fused_pool == 1:  # ragged tail pool (odd H_O/W_O)
         out = maxpool_ref(out, pool)
@@ -231,4 +250,56 @@ def conv2d(
         block_do=block_do, block_di=block_di, block_h=block_h,
         algorithm=algorithm, block_m=block_m, block_n=block_n,
         block_k=block_k,
+    )
+
+
+def conv2d_with_mask(
+    x: jax.Array,
+    f: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+    stride: int = 1,
+    padding: int = 0,
+    pool: int = 1,
+    schedule: Schedule | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+    machine: MachineModel = TPU_V5E,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Conv + ReLU (+ fused pool) that also emits the epilogue-VJP mask.
+
+    Identical output to :func:`conv2d` with ``relu=True``, plus the int8
+    per-output-pixel mask (pool argmax position, or the ReLU liveness bit
+    when ``pool == 1``) the backward pass scatters ``dY`` through instead
+    of recomputing the convolution.  Returns ``(out, None)`` — same
+    ``out``, no mask — on the paths the strip kernel's flush can't serve:
+    an ``algorithm="im2col"`` schedule and the ragged-pool tail (``H_O`` or
+    ``W_O`` not divisible by ``pool``); callers fall back to the recompute
+    backward there.
+    """
+    from repro.plan import default_interpret
+
+    pool = int(pool or 1)
+    if bias is None:
+        bias = jnp.zeros((f.shape[3],), jnp.float32)
+    F = f.shape[0]
+    H_O = conv_out_extent(x.shape[-3], padding, F, stride)
+    W_O = conv_out_extent(x.shape[-2], padding, F, stride)
+    if schedule is None:
+        schedule = conv2d_op.plan(
+            x, f, bias, machine=machine,
+            stride=stride, padding=padding, relu=True, pool=pool,
+        )
+    ragged = pool > 1 and _fused_pool(H_O, W_O, pool) == 1
+    if ragged or getattr(schedule, "algorithm", "direct") == "im2col":
+        out = conv2d(
+            x, f, bias=bias, stride=stride, padding=padding, relu=True,
+            pool=pool, schedule=schedule, out_dtype=out_dtype,
+            interpret=interpret, machine=machine,
+        )
+        return out, None
+    return _conv2d_impl(
+        x, f, bias, stride=stride, padding=padding, relu=True, pool=pool,
+        schedule=schedule, out_dtype=out_dtype or x.dtype,
+        interpret=default_interpret(interpret), emit_mask=True,
     )

@@ -3,10 +3,17 @@
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
 back again across versions); every kernel in this package routes through
 :func:`tpu_compiler_params` so they run on whichever this install provides.
+
+The pipelined backward kernels additionally need the manual-DMA surface
+(``pltpu.make_async_copy`` + ``pltpu.SemaphoreType`` + ``pl.run_scoped``)
+for their double-buffered input streams; :func:`dma_pipeline_supported`
+probes it so call sites can fall back to the plain BlockSpec pipeline
+(identical numerics, serialized streams) on installs without it.
 """
 
 from __future__ import annotations
 
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 TPUCompilerParams = getattr(
@@ -19,3 +26,18 @@ def tpu_compiler_params(**kwargs):
     if TPUCompilerParams is None:  # pragma: no cover - ancient jax
         return None
     return TPUCompilerParams(**kwargs)
+
+
+def dma_pipeline_supported() -> bool:
+    """Can kernels double-buffer their own input streams with explicit
+    async copies and DMA semaphores?  Requires ``pltpu.make_async_copy``,
+    ``pltpu.SemaphoreType`` and ``pl.run_scoped``."""
+    return (hasattr(pltpu, "make_async_copy")
+            and hasattr(pltpu, "SemaphoreType")
+            and hasattr(pl, "run_scoped"))
+
+
+def has_emit_pipeline() -> bool:
+    """Does this install ship ``pltpu.emit_pipeline`` (the managed
+    overlapped-copy helper the manual double-buffer emulates)?"""
+    return hasattr(pltpu, "emit_pipeline")

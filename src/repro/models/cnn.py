@@ -83,10 +83,11 @@ def forward(cfg: ModelConfig, params: dict, images: jax.Array, *,
     to explicit :class:`repro.plan.Schedule` objects (e.g. from
     :func:`plan_forward`), overriding the per-stage capacity planner.
     Backward-pass overrides ride in the same dict under
-    "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" (conv) and
-    "<stage>.dx"/"<stage>.dw" (FC) keys — :func:`plan_training` emits the
-    full set, so ``jax.grad`` through this forward runs pinned planned
-    backward kernels.
+    "<stage>.dgrad"/"<stage>.wgrad" (conv; plus "<stage>.recompute" on
+    ragged geometries where the fused forward can't emit the mask
+    residual) and "<stage>.dx"/"<stage>.dw" (FC) keys —
+    :func:`plan_training` emits the full set, so ``jax.grad`` through
+    this forward runs pinned planned backward kernels.
     """
     sched = schedules or {}
     x = images
@@ -155,8 +156,9 @@ def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
                   machine=None, mesh=None, shard_axis: str = "data",
                   autotune=None, conv_algorithm=None) -> dict:
     """:func:`plan_forward` plus every backward kernel ``jax.grad`` runs:
-    "<stage>.dgrad"/"<stage>.wgrad"/"<stage>.recompute" for conv stages,
-    "<stage>.dx"/"<stage>.dw" for FC stages.  Pass the result via
+    "<stage>.dgrad"/"<stage>.wgrad" for conv stages (the fused-epilogue
+    backward — a "<stage>.recompute" entry appears only on ragged
+    geometries), "<stage>.dx"/"<stage>.dw" for FC stages.  Pass the result via
     ``schedules=`` so the whole training step executes pinned planned
     kernels; sum ``.modeled_words`` for the step's modeled HBM traffic.
     With ``mesh=`` the wgrad/dw entries additionally charge the gradient
@@ -172,9 +174,13 @@ def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
                        conv_algorithm=conv_algorithm)
     for name, x_shape, w_shape in _stage_geometry(cfg, batch):
         if name.startswith("conv"):
+            # pool=2 matches forward()'s fused conv_block epilogue, so the
+            # conv stages plan the fused-epilogue backward (mask-scatter
+            # dgrad, no recompute entry) whenever the plane tiles evenly.
             bwd = cl.plan_bwd(x_shape, w_shape, stride=1, padding=F // 2,
-                              in_bytes=in_bytes, machine=machine, mesh=mesh,
-                              shard_axis=shard_axis, autotune=autotune)
+                              pool=2, in_bytes=in_bytes, machine=machine,
+                              mesh=mesh, shard_axis=shard_axis,
+                              autotune=autotune)
         else:
             bwd = fl.plan_bwd(x_shape, w_shape, in_bytes=in_bytes,
                               machine=machine, mesh=mesh,

@@ -267,6 +267,21 @@ def synthesize(op: str, shape: dict, dtype) -> tuple[tuple, dict]:
                      arr(d_out)),
                     dict(stride=S, padding=P, relu=pool > 1, pool=pool))
         if op == "conv2d_dgrad":
+            pool = shape.get("pool") or 1
+            if pool and shape.get("pool") is not None:
+                # Fused-epilogue cell: the planner's H_O/W_O are the
+                # full-rate conv plane; the kernel's real inputs are the
+                # *pooled* cotangent plus the int8 mask residual (argmax
+                # position in [0, pool^2], pool^2 = dead window), so fused
+                # candidates time on the true signature including the
+                # in-jit scatter.
+                Hp, Wp = H_O // pool, W_O // pool
+                mask = jnp.asarray(
+                    rng.integers(0, pool * pool + 1,
+                                 (B, Hp, Wp, d_out)).astype(np.int8))
+                return ((arr(B, Hp, Wp, d_out), arr(F, F, d_in, d_out)),
+                        dict(stride=S, padding=P, out_hw=(H_I, W_I),
+                             mask=mask, pool=pool))
             return ((arr(B, H_O, W_O, d_out), arr(F, F, d_in, d_out)),
                     dict(stride=S, padding=P, out_hw=(H_I, W_I)))
         return ((arr(B, H_I, W_I, d_in), arr(B, H_O, W_O, d_out)),
@@ -606,7 +621,8 @@ def warm(
 
 
 def _smoke() -> int:
-    """Tune one tiny conv cell, one FC cell, and one two-algorithm
+    """Tune one tiny conv cell, one FC cell, one fused-epilogue dgrad
+    cell (pooled cotangent + mask residual), and one two-algorithm
     MANTICORE conv cell (interpret mode) against
     a throwaway cache (a configured cache — $REPRO_AUTOTUNE_CACHE or
     --cache — is honored, but is *cleared of the smoke cells first* so
@@ -622,6 +638,12 @@ def _smoke() -> int:
         ("conv2d", dict(H_O=8, W_O=8, F=3, S=1, d_in=8, d_out=16,
                         in_bytes=4, padding=1, batch=2, pool=2)),
         ("matmul", dict(m=16, n=256, k=64, in_bytes=4)),
+        # Fused-epilogue backward cell: pool in the shape makes the dgrad
+        # planner default to the fused_epilogue variant, and synthesize()
+        # hands the kernel the pooled cotangent + int8 mask residual — the
+        # fused-bwd path tunes on its real input signature.
+        ("conv2d_dgrad", dict(H_O=8, W_O=8, F=3, S=1, P=1, d_in=8,
+                              d_out=16, in_bytes=4, batch=2, pool=2)),
     ]
     print("op,us,cached,blocks")
     for op, shape in cells:

@@ -149,8 +149,12 @@ class ShardablePlanner:
                 raise AssertionError("plan_sharded must raise here")
             cands = [dataclasses.replace(self, strategy=st).plan_sharded(**shape)
                      for st in strategies]
+        def _rank(s):
+            loc = s if isinstance(s, Schedule) else s.schedule
+            return (s.modeled_words, loc.critical_path_steps)
+
         out, seen = [], set()
-        for s in sorted(cands, key=lambda s: s.modeled_words):
+        for s in sorted(cands, key=_rank):
             loc = s if isinstance(s, Schedule) else s.schedule
             key = (getattr(s, "strategy", None),
                    getattr(loc, "algorithm", None), loc.grid, loc.blocks)
@@ -470,6 +474,7 @@ class ConvPlanner(ShardablePlanner):
             stores=stores,
             vmem_bytes=self._vmem_bytes(hb, bdo, bdi, W_O, W_stream, F, S, in_bytes),
             machine=m.name,
+            critical_path_steps=ccr.grid_steps(grid),
         )
 
     def _plan_im2col(
@@ -500,9 +505,10 @@ class ConvPlanner(ShardablePlanner):
                 block_h=hb, block_m=inner.block("block_m"),
                 block_n=inner.block("block_n"),
                 block_k=inner.block("block_k"), pool=pool, batch=batch)
+            grid = (-(-H_O // hb),) + inner.grid
             return Schedule(
                 op=self.op,
-                grid=(-(-H_O // hb),) + inner.grid,
+                grid=grid,
                 blocks=tuple(sorted((("block_h", hb),) + inner.blocks)),
                 halo=0,
                 macs=t.macs,
@@ -511,6 +517,7 @@ class ConvPlanner(ShardablePlanner):
                 vmem_bytes=inner.vmem_bytes,
                 machine=self.machine.name,
                 algorithm="im2col",
+                critical_path_steps=ccr.grid_steps(grid),
             )
 
         if block_h is not None:
@@ -586,6 +593,19 @@ class ConvDgradPlanner(ShardablePlanner):
     the forward channel counts (dgrad streams d_out slices and stacks
     Delta_I = ``block_do`` output slices of dX, the same capacity rule that
     bounds the forward Delta_O).
+
+    With a ``pool=`` factor (the forward layer saved its pool-argmax/ReLU
+    mask as a residual) the default variant is **fused_epilogue**: a
+    mask-scatter prologue rebuilds the full-rate dY from the pooled
+    gradient (``ccr.epilogue_scatter_traffic`` — charged here, shared by
+    wgrad through CSE), and the kernel streams d_out through a
+    double-buffered DMA loop folded *inside* each grid step, so the grid
+    drops its stream dimension and the critical path shortens to
+    ``ccr.conv_dgrad_fused_steps``.  The scatter words it adds are bought
+    back many times over at the layer level: the recompute path's full
+    forward-conv re-run disappears.  ``algorithm="direct"`` pins the plain
+    delegated schedule; both variants appear in ``candidates()`` so
+    autotune measures the crossover.
     """
 
     op: ClassVar[str] = "conv2d_dgrad"
@@ -607,10 +627,22 @@ class ConvDgradPlanner(ShardablePlanner):
         d_in: int, d_out: int, in_bytes: int = 2, batch: int = 1,
         H_I: int | None = None, W_I: int | None = None,
         block_h: int | None = None, block_do: int | None = None,
-        block_di: int | None = None,
+        block_di: int | None = None, pool: int | None = None,
+        algorithm: str | None = None,
     ) -> Schedule:
         if P > F - 1:
             raise ValueError(f"dgrad needs padding <= F-1, got P={P} for F={F}")
+        if algorithm not in (None, "direct", "fused_epilogue"):
+            raise ValueError(f"unknown dgrad algorithm {algorithm!r}; "
+                             "expected 'direct' or 'fused_epilogue'")
+        if algorithm == "fused_epilogue" and not pool:
+            raise ValueError("fused_epilogue dgrad needs the forward pool "
+                             "factor (pool=)")
+        if algorithm is None:
+            # The mask residual exists whenever the forward layer fused its
+            # epilogue (pool given): default to consuming it — the scatter
+            # words it adds are a fraction of the recompute pass it kills.
+            algorithm = "fused_epilogue" if pool else "direct"
         H_dil, W_dil = (H_O - 1) * S + 1, (W_O - 1) * S + 1  # dilated grad
         pt = F - 1 - P  # transposed padding
         # dX extent: exact cover by default; a ragged-stride forward input
@@ -627,23 +659,54 @@ class ConvDgradPlanner(ShardablePlanner):
             block_h=block_h, block_do=block_do, block_di=block_di,
             algorithm="direct",
         )
-        return dataclasses.replace(inner, op=self.op)
+        if algorithm == "direct":
+            return dataclasses.replace(inner, op=self.op)
+        # fused_epilogue: charge the mask-scatter prologue (it rebuilds the
+        # full-rate dY both backward kernels then stream — charged once,
+        # here) and fold the d_out stream inside each grid step: the DMA
+        # double-buffer hides it, so the grid drops its last (stream)
+        # dimension and the critical path is the fused closed form.
+        sc = ccr.epilogue_scatter_traffic(
+            H_O=H_O, W_O=W_O, d_out=d_out, pool=pool, batch=batch,
+            in_bytes=in_bytes)
+        return dataclasses.replace(
+            inner, op=self.op, algorithm="fused_epilogue",
+            grid=inner.grid[:3],
+            loads=inner.loads + sc.main_loads,
+            stores=inner.stores + sc.main_stores,
+            critical_path_steps=ccr.conv_dgrad_fused_steps(
+                H_I=H_I, d_in=d_in, block_h=inner.block("block_h"),
+                block_do=inner.block("block_do"), batch=batch),
+        )
 
     def local_candidates(self, **shape) -> list[Schedule]:
         """Strip ladder over the dX extent (the transposed geometry's
-        output plane), each delegated through the forward search."""
+        output plane), each delegated through the forward search — and,
+        when the forward saved a mask residual (``pool=``), both the
+        fused_epilogue and direct variants per strip, so autotune measures
+        the scatter-vs-stream crossover for real."""
         if shape.get("block_h") is not None:
             return [self.plan_local(**shape)]
         F, S, P = shape["F"], shape.get("S", 1), shape.get("P", 0)
         H_I = shape.get("H_I")
         if H_I is None:
             H_I = (shape["H_O"] - 1) * S + 1 + 2 * (F - 1 - P) - F + 1
+        alg = shape.get("algorithm")
+        if alg is not None:
+            algs = (alg,)
+        elif shape.get("pool"):
+            algs = ("fused_epilogue", "direct")
+        else:
+            algs = ("direct",)
         out, seen = [], set()
         for hb in _strip_ladder(H_I, 1):
-            s = self.plan_local(**{**shape, "block_h": hb})
-            if s.blocks not in seen and s.fits(self.machine):
-                out.append(s)
-                seen.add(s.blocks)
+            for a in algs:
+                s = self.plan_local(**{**shape, "block_h": hb,
+                                       "algorithm": a})
+                key = (s.algorithm, s.blocks)
+                if key not in seen and s.fits(self.machine):
+                    out.append(s)
+                    seen.add(key)
         return out or [self.plan_local(**shape)]
 
 
@@ -679,6 +742,16 @@ class ConvWgradPlanner(ShardablePlanner):
     two-dimensional search as the forward planner: strip candidates are
     H_O and its power-of-two fractions, the largest fitting lane-aligned
     gradient stack per strip, fewest modeled words wins.
+
+    Two execution variants share that blocking and its words: **direct**
+    walks the whole (d_i, d_o, batch, strip) grid sequentially, while
+    **pipelined** folds the (batch, strip) accumulation sweep inside each
+    (d_i, d_o) step behind double-buffered strip DMA — the MPNA
+    dataflow-overlap argument applied to our strip schedule.  The words
+    tie, so the argmin over ``modeled_words + critical_path_steps``
+    (``ccr.conv_wgrad_steps``) picks pipelined whenever the folded sweep
+    is longer than one step; ``algorithm=`` pins a variant and both appear
+    in ``candidates()``.
 
     On a mesh, "batch" shards the *contraction* (each device accumulates a
     private dW over batch/P images), so the sharded plan charges the Alg-4
@@ -739,7 +812,11 @@ class ConvWgradPlanner(ShardablePlanner):
         padding: int | None = None, H_I: int | None = None,
         W_I: int | None = None, block_h: int | None = None,
         block_do: int | None = None, block_di: int | None = None,
+        algorithm: str | None = None,
     ) -> Schedule:
+        if algorithm not in (None, "direct", "pipelined"):
+            raise ValueError(f"unknown wgrad algorithm {algorithm!r}; "
+                             "expected 'direct' or 'pipelined'")
         m = self.machine
         lane = m.lane
         P = 0 if padding is None else padding
@@ -790,8 +867,22 @@ class ConvWgradPlanner(ShardablePlanner):
             d_in=d_in, d_out=d_out, block_h=hb, block_di=bdi,
             block_do=bdo, batch=batch,
         )
-        grid = (round_up(d_in, bdi) // bdi, round_up(d_out, bdo) // bdo,
-                batch, -(-H_O // hb))
+        step_kw = dict(H_O=H_O, d_in=d_in, d_out=d_out, block_h=hb,
+                       block_di=bdi, block_do=bdo, batch=batch)
+        if algorithm is None:
+            # words are identical for both variants, so the argmin over
+            # (modeled_words + critical_path_steps) reduces to the step
+            # term: pipelined wins whenever the folded (batch, strip)
+            # sweep is longer than one step.
+            pipelined = (ccr.conv_wgrad_steps(**step_kw, pipelined=True)
+                         < ccr.conv_wgrad_steps(**step_kw, pipelined=False))
+            algorithm = "pipelined" if pipelined else "direct"
+        n_di = round_up(d_in, bdi) // bdi
+        n_do = round_up(d_out, bdo) // bdo
+        if algorithm == "pipelined":
+            grid = (n_di, n_do)
+        else:
+            grid = (n_di, n_do, batch, -(-H_O // hb))
         return Schedule(
             op=self.op,
             grid=grid,
@@ -803,19 +894,28 @@ class ConvWgradPlanner(ShardablePlanner):
             vmem_bytes=self._vmem_bytes(hb, bdo, bdi, F, S, W_O, W_stream,
                                         in_bytes),
             machine=m.name,
+            algorithm=algorithm,
+            critical_path_steps=ccr.conv_wgrad_steps(
+                **step_kw, pipelined=(algorithm == "pipelined")),
         )
 
     def local_candidates(self, **shape) -> list[Schedule]:
-        """One candidate per gradient-strip height, each with its best
-        fitting gradient stack — the wgrad argmin's search space."""
+        """One candidate per (gradient-strip height, variant): each strip
+        with its best fitting gradient stack, in both the pipelined and
+        direct execution variants — the wgrad argmin's search space."""
         if shape.get("block_h") is not None:
             return [self.plan_local(**shape)]
+        alg = shape.get("algorithm")
+        algs = ("pipelined", "direct") if alg is None else (alg,)
         out, seen = [], set()
         for hb in _strip_ladder(shape["H_O"], 1):
-            s = self.plan_local(**{**shape, "block_h": hb})
-            if s.blocks not in seen and s.fits(self.machine):
-                out.append(s)
-                seen.add(s.blocks)
+            for a in algs:
+                s = self.plan_local(**{**shape, "block_h": hb,
+                                       "algorithm": a})
+                key = (s.algorithm, s.blocks)
+                if key not in seen and s.fits(self.machine):
+                    out.append(s)
+                    seen.add(key)
         return out or [self.plan_local(**shape)]
 
 
@@ -905,9 +1005,10 @@ class MatmulPlanner(ShardablePlanner):
         # m-block this is Eqs. (12)-(13) on the padded problem.
         loads = (np_ // bn) * mp * kp + (mp // bm) * kp * np_
         stores = mp * np_
+        grid = (mp // bm, np_ // bn, kp // bk)
         return Schedule(
             op=self.op,
-            grid=(mp // bm, np_ // bn, kp // bk),
+            grid=grid,
             blocks=(("block_k", bk), ("block_m", bm), ("block_n", bn)),
             halo=0,
             macs=mp * np_ * kp,
@@ -915,6 +1016,7 @@ class MatmulPlanner(ShardablePlanner):
             stores=stores,
             vmem_bytes=self._vmem_bytes(bm, bn, bk, in_bytes),
             machine=mm.name,
+            critical_path_steps=ccr.grid_steps(grid),
         )
 
     def local_candidates(self, **shape) -> list[Schedule]:
@@ -948,9 +1050,46 @@ class MatmulDxPlanner(ShardablePlanner):
     contraction step.  Kwargs are the *forward* shapes (x: [m, k],
     w: [k, n], dY: [m, n]).  On a mesh, dX shards with the batch (no
     collective — each device back-propagates its own rows).
+
+    ``algorithm="fused_dxdw"`` models the fused dX/dW kernel instead: one
+    grid (k-blocks, n-blocks, m-blocks) reads each dY tile once and feeds
+    both contractions, saving dW's entire dY stream but paying a whole-M
+    dX accumulator strip in VMEM.  The schedule carries the *combined*
+    cost of both gradients, so it is never the per-op argmin — the FC
+    layer opts in by pinning the algorithm in plan_bwd, and
+    ``local_candidates`` exposes both variants to the autotuner.
     """
 
     op: ClassVar[str] = "matmul_dx"
+
+    def _fuse_dxdw(self, sched: Schedule, *, m: int, n: int, k: int,
+                   in_bytes: int) -> Schedule:
+        """Re-model a direct dX schedule as the fused dX/dW kernel.
+
+        Grid (k-blocks, n-blocks, m-blocks), m innermost; the dY tile is
+        charged once per step (n_k * M * N — the stream dW no longer pays
+        separately), W re-streams per m-block, X per n-block; both
+        gradients store once.  VMEM holds the whole-M f32 dX strip for the
+        current k-block plus the dW tile — the fusion's capacity price.
+        """
+        blocks = dict(sched.blocks)
+        bm, bk, bn = blocks["block_m"], blocks["block_k"], blocks["block_n"]
+        mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+        n_k, n_n, n_m = kp // bk, np_ // bn, mp // bm
+        grid = (n_k, n_n, n_m)
+        stream = 0
+        if self.machine.charge_stream_blocks:
+            stream = (bm * bn + bk * bn + bm * bk) * in_bytes * 2
+        return dataclasses.replace(
+            sched,
+            algorithm="fused_dxdw",
+            grid=grid,
+            macs=2 * mp * np_ * kp,
+            loads=n_k * mp * np_ + n_m * kp * np_ + n_n * mp * kp,
+            stores=mp * kp + kp * np_,
+            vmem_bytes=stream + (mp * bk + bk * bn) * 4,
+            critical_path_steps=ccr.grid_steps(grid),
+        )
 
     def _shard_candidates(self, group: int, *, m: int,
                           **shape) -> list[ShardCandidate]:
@@ -967,20 +1106,39 @@ class MatmulDxPlanner(ShardablePlanner):
     def plan_local(
         self, *, m: int, n: int, k: int, in_bytes: int = 2,
         block_m: int | None = None, block_n: int | None = None,
-        block_k: int | None = None,
+        block_k: int | None = None, algorithm: str | None = None,
     ) -> Schedule:
+        if algorithm not in (None, "direct", "fused_dxdw"):
+            raise ValueError(
+                f"matmul_dx algorithm must be 'direct' or 'fused_dxdw', "
+                f"got {algorithm!r}")
         inner = MatmulPlanner(self.machine).plan(
             m=m, n=k, k=n, in_bytes=in_bytes,
             block_m=block_m, block_n=block_k, block_k=block_n,
         )
-        return _relabel_matmul(inner, self.op, {
+        sched = _relabel_matmul(inner, self.op, {
             "block_m": "block_m", "block_n": "block_k", "block_k": "block_n",
         })
+        if (algorithm or "direct") == "direct":
+            return sched
+        return self._fuse_dxdw(sched, m=m, n=n, k=k, in_bytes=in_bytes)
 
     def local_candidates(self, **shape) -> list[Schedule]:
         """Halving ladder over block_k — dX's resident output stack (the
-        forward role of the transposed Delta_O)."""
-        return self._ladder_candidates("block_k", self.machine.lane, **shape)
+        forward role of the transposed Delta_O) — for the direct kernel
+        and the fused dX/dW variant (a pinned ``algorithm`` collapses to
+        that variant's ladder)."""
+        pin = shape.pop("algorithm", None)
+        algs = ("direct", "fused_dxdw") if pin is None else (pin,)
+        out, seen = [], set()
+        for alg in algs:
+            for s in self._ladder_candidates(
+                    "block_k", self.machine.lane, algorithm=alg, **shape):
+                key = (s.algorithm, s.blocks)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(s)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1111,6 +1269,7 @@ class AttentionPlanner(ShardablePlanner):
         stores = bhq * sqp * head_dim
         return Schedule(
             op=self.op,
+            critical_path_steps=ccr.grid_steps((bhq, n_qb, n_kvb)),
             grid=(bhq, n_qb, n_kvb),
             blocks=(("block_kv", bkv), ("block_q", bq)),
             halo=0,

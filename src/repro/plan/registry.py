@@ -62,7 +62,8 @@ def freeze_schedules(schedules) -> tuple | None:
 
 
 def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = (),
-                       bwd_fn: Callable | None = None):
+                       bwd_fn: Callable | None = None,
+                       fwd_fn: Callable | None = None):
     """``custom_vjp`` wiring shared by every layer module: forward runs the
     Pallas kernel, backward runs ``bwd_fn`` (planned backward kernels) when
     given, else differentiates the XLA reference composition.
@@ -75,6 +76,14 @@ def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = 
     frozen via :func:`freeze_schedules`) so ``bwd_fn`` can honor them —
     closing the old gap where a user-passed schedule was silently ignored
     on the backward call because the reference VJP has no schedule knob.
+
+    ``fwd_fn`` (same signature as ``kernel_fn``) is the *differentiated*
+    forward: it returns ``(out, aux)`` where ``aux`` is a cheap auxiliary
+    residual (e.g. the fused kernel's epilogue-VJP mask) — or ``None``
+    when the kernel couldn't produce one.  The aux rides as the trailing
+    residual, so ``bwd_fn`` becomes ``bwd_fn(*diff_args, aux, cotangent,
+    *nondiff_args)``.  Primal-only calls still run plain ``kernel_fn`` and
+    never pay for the aux output.
     """
     for i, j in zip(nondiff_argnums, nondiff_argnums[1:]):
         assert j == i + 1, "nondiff_argnums must be contiguous and trailing"
@@ -89,6 +98,9 @@ def with_reference_vjp(kernel_fn, ref_fn, *, nondiff_argnums: tuple[int, ...] = 
             f"got {nondiff_argnums} for {len(args)} args"
         )
         diff = tuple(a for i, a in enumerate(args) if i not in nondiff_argnums)
+        if fwd_fn is not None:
+            out, aux = fwd_fn(*args)
+            return out, diff + (aux,)
         return kernel_fn(*args), diff
 
     def bwd(*call):

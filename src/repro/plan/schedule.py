@@ -38,6 +38,8 @@ class Schedule:
     vmem_bytes: int = 0  # modeled working set incl. double-buffered streams
     machine: str = "tpu_v5e"  # name of the MachineModel planned against
     algorithm: str = "direct"  # which algorithm family the blocks belong to
+    critical_path_steps: int = 0  # sequential grid steps on the pipeline's
+    # critical path (incl. fill); 0 means "not modeled" for legacy schedules
 
     # -- block access -----------------------------------------------------
 

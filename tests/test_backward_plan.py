@@ -359,6 +359,24 @@ class TestLayerGradParity:
         for g, r in zip(got, want):
             assert float(jnp.abs(g - r).max()) < TOL
 
+    def test_unfit_schedule_warns_once_per_cell(self):
+        """The fit gates' silent-fallback fix: the first unfit (role,
+        schedule) cell warns, steady-state replays stay quiet (the
+        autotune _warn_once discipline applied to the layers)."""
+        import dataclasses
+        import warnings as pywarn
+
+        from repro.core.conv_layer import warn_unfit_schedule
+
+        bwd = conv_plan_bwd((1, 8, 8, 3), (3, 3, 3, 4), stride=1, padding=1)
+        big = dataclasses.replace(bwd["wgrad"], vmem_bytes=1 << 30)
+        with pywarn.catch_warnings(record=True) as rec:
+            pywarn.simplefilter("always")
+            warn_unfit_schedule("wgrad", big, TPU_V5E)
+            warn_unfit_schedule("wgrad", big, TPU_V5E)  # replay: quiet
+        assert len(rec) == 1
+        assert "overflows VMEM" in str(rec[0].message)
+
     def test_with_reference_vjp_threads_bwd_schedules(self):
         """Unit check of the registry fix: bwd_fn receives the trailing
         nondiff bwd_schedules argument verbatim."""
@@ -463,9 +481,220 @@ class TestPinnedBackwardSchedules:
                           d_ff=16, vocab=10)
         scheds = cnn.plan_training(cfg, batch=2)
         bwd_keys = [k for k in scheds if "." in k]
-        assert len(bwd_keys) == 2 * 3 + 2 * 2  # conv: dgrad/wgrad/recompute
+        # conv: dgrad/wgrad only — the even 32/16 planes plan the
+        # fused-epilogue backward, so no recompute entry; fc: dx/dw.
+        assert len(bwd_keys) == 2 * 2 + 2 * 2
+        assert not any(k.endswith(".recompute") for k in bwd_keys)
         assert all(scheds[k].fits(TPU_V5E) for k in bwd_keys)
         assert all(scheds[k].modeled_words > 0 for k in bwd_keys)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue VJP: the int8 mask residual vs the jax.vjp oracle
+# ---------------------------------------------------------------------------
+
+
+class TestFusedEpilogueVJP:
+    # (B, H, W, d_in, d_out, F, S, P, pool, block_h): stride, padding,
+    # pool 1 (ReLU-bit mask) and 2 (argmax mask), odd channel counts, a
+    # strip height that does not divide the plane.
+    EPI_CASES = [
+        (1, 8, 8, 3, 4, 3, 1, 1, 2, None),
+        (2, 9, 9, 3, 5, 3, 1, 1, 1, None),    # pool=1, odd channels
+        (1, 11, 11, 4, 6, 3, 2, 1, 2, None),  # stride 2, even pooled plane
+        (2, 8, 8, 5, 3, 5, 1, 2, 2, None),    # F=5, P=2
+        (1, 9, 7, 7, 5, 3, 2, 0, 1, None),    # pool=1, no padding, ragged
+        (1, 12, 12, 3, 4, 3, 1, 1, 2, 8),     # ragged strips (12 = 8 + 4)
+    ]
+
+    @staticmethod
+    def _mask_and_oracle(case, seed=31):
+        from repro.kernels.conv2d.ops import conv2d_with_mask
+        from repro.kernels.conv2d.ref import maxpool_ref
+        from repro.plan import get_op
+
+        B, H, W, di, do, F, S, P, pool, block_h = case
+        rng = np.random.default_rng(seed)
+        x, f, b = (_rand(rng, (B, H, W, di)), _rand(rng, (F, F, di, do)),
+                   _rand(rng, (do,)))
+        schedule = None
+        if block_h is not None:
+            schedule = get_op("conv2d").plan(
+                x, f, b, stride=S, padding=P, relu=True, pool=pool,
+                block_h=block_h)
+        out, mask = conv2d_with_mask(x, f, bias=b, stride=S, padding=P,
+                                     pool=pool, schedule=schedule)
+        g = _rand(rng, out.shape)
+        y0 = conv2d_ref(x, f, stride=S, padding=P)
+
+        def epi(y):
+            y = jnp.maximum(y + b, 0.0)
+            return maxpool_ref(y, pool) if pool > 1 else y
+
+        _, vjp = jax.vjp(epi, y0)
+        return out, mask, g, epi(y0), vjp(g)[0]
+
+    @pytest.mark.parametrize("case", EPI_CASES)
+    def test_scatter_matches_vjp_oracle(self, case):
+        """epilogue_scatter(g, mask, pool) == jax.vjp of the epilogue at
+        the true pre-pool activation — exact, since both route each pooled
+        gradient element to the same (untied, random-data) argmax."""
+        from repro.kernels.conv2d.bwd import epilogue_scatter
+
+        pool = case[8]
+        out, mask, g, want_out, want_dy = self._mask_and_oracle(case)
+        assert mask is not None, "fused forward must emit the mask here"
+        assert mask.dtype == jnp.int8
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want_out),
+                                   rtol=TOL, atol=TOL)
+        dy = epilogue_scatter(g, mask, pool)
+        assert dy.shape == want_dy.shape
+        np.testing.assert_allclose(np.asarray(dy), np.asarray(want_dy),
+                                   rtol=TOL, atol=TOL)
+
+    def test_ragged_pool_yields_no_mask(self):
+        """A pool that does not tile the output plane keeps the XLA pool
+        tail — conv2d_with_mask must return mask=None (the backward then
+        recomputes as before)."""
+        from repro.kernels.conv2d.ops import conv2d_with_mask
+
+        rng = np.random.default_rng(32)
+        x, f, b = (_rand(rng, (1, 9, 9, 3)), _rand(rng, (3, 3, 3, 4)),
+                   _rand(rng, (4,)))
+        out, mask = conv2d_with_mask(x, f, bias=b, stride=1, padding=1, pool=2)
+        assert mask is None
+        want = conv2d_fused_ref(x, f, b, stride=1, padding=1, relu=True, pool=2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=TOL, atol=TOL)
+
+    def test_mask_path_skips_recompute_conv(self, monkeypatch):
+        """With the mask residual saved, the conv_block backward must not
+        launch the recompute conv (recompute_words = 0); the ragged-pool
+        geometry still does."""
+        import repro.core.conv_layer as cl
+
+        calls = []
+        orig_conv, orig_sc = cl.conv2d, cl.epilogue_scatter
+        monkeypatch.setattr(cl, "conv2d", lambda *a, **k: (
+            calls.append("conv2d"), orig_conv(*a, **k))[1])
+        monkeypatch.setattr(cl, "epilogue_scatter", lambda *a, **k: (
+            calls.append("scatter"), orig_sc(*a, **k))[1])
+
+        rng = np.random.default_rng(33)
+        f, b = _rand(rng, (3, 3, 3, 4)), _rand(rng, (4,))
+
+        def run(H):
+            x = _rand(rng, (1, H, H, 3))
+            out, vjp = jax.vjp(
+                lambda x, f, b: conv_block(x, f, b, 1, 1, 2, "strip"), x, f, b)
+            calls.clear()
+            vjp(jnp.ones_like(out))
+            return list(calls)
+
+        even = run(8)   # mask residual: scatter, no recompute conv
+        assert "scatter" in even and "conv2d" not in even, even
+        ragged = run(9)  # no mask: the old recompute path
+        assert "conv2d" in ragged and "scatter" not in ragged, ragged
+
+    def test_fc_bwd_schedules_dispatch_fused_dxdw(self, monkeypatch):
+        """fc plan_bwd pins the fused dX/dW kernel; the layer backward must
+        run it (one dY read for both gradients) instead of the split pair,
+        and stay exact."""
+        import repro.core.fc_layer as fl
+
+        calls = []
+        for name in ("matmul_dx", "matmul_dw", "matmul_dx_dw"):
+            orig = getattr(fl, name)
+            monkeypatch.setattr(fl, name, (lambda o, n: lambda *a, **k: (
+                calls.append(n), o(*a, **k))[1])(orig, name))
+
+        rng = np.random.default_rng(34)
+        x, w = _rand(rng, (6, 24)), _rand(rng, (24, 18))
+        bwd = fc_plan_bwd(x.shape, w.shape)
+        assert getattr(bwd["dx"], "algorithm", None) == "fused_dxdw"
+        got = jax.grad(lambda x, w: (fc_layer(x, w, None, bwd) ** 2).sum(),
+                       argnums=(0, 1))(x, w)
+        assert "matmul_dx_dw" in calls, calls
+        assert "matmul_dx" not in calls and "matmul_dw" not in calls, calls
+        want = jax.grad(lambda x, w: (fc_matmul_ref(x, w) ** 2).sum(),
+                        argnums=(0, 1))(x, w)
+        for g, r in zip(got, want):
+            assert float(jnp.abs(g - r).max() / jnp.abs(r).max()) < TOL
+
+
+# ---------------------------------------------------------------------------
+# Overlap-aware cost model: critical_path_steps == the executed walker
+# ---------------------------------------------------------------------------
+
+
+class TestCriticalPathSteps:
+    """House rule for the new overlap objective: every emitted backward
+    Schedule's ``critical_path_steps`` closed form must equal an executed
+    ``schedule_sim`` walk of the same pipeline."""
+
+    def _pin_conv(self, sched, *, H_I, H_O, d_in, d_out, batch):
+        if sched.op == "conv2d_dgrad" and sched.algorithm == "fused_epilogue":
+            kw = dict(H_I=H_I, d_in=d_in, block_h=sched.block("block_h"),
+                      block_do=sched.block("block_do"), batch=batch)
+            want = ccr.conv_dgrad_fused_steps(**kw)
+            assert want == sim.simulate_conv_dgrad_fused_steps(**kw)
+        elif sched.op == "conv2d_wgrad":
+            kw = dict(H_O=H_O, d_in=d_in, d_out=d_out,
+                      block_h=sched.block("block_h"),
+                      block_di=sched.block("block_di"),
+                      block_do=sched.block("block_do"), batch=batch,
+                      pipelined=(sched.algorithm == "pipelined"))
+            want = ccr.conv_wgrad_steps(**kw)
+            assert want == sim.simulate_conv_wgrad_steps(**kw)
+        else:
+            want = ccr.grid_steps(sched.grid)
+            assert want == sim.simulate_grid_steps(sched.grid)
+        assert sched.critical_path_steps == want, (sched.op, sched.algorithm)
+
+    @pytest.mark.parametrize("pool", [None, 2])
+    def test_conv_bwd_schedules_match_walker(self, pool):
+        bwd = conv_plan_bwd((4, 12, 12, 8), (3, 3, 8, 16), stride=1,
+                            padding=1, pool=pool)
+        if pool == 2:
+            assert bwd["dgrad"].algorithm == "fused_epilogue"
+            assert "recompute" not in bwd
+        else:
+            assert "recompute" in bwd
+        for sched in bwd.values():
+            self._pin_conv(sched, H_I=12, H_O=12, d_in=8, d_out=16, batch=4)
+
+    def test_conv_bwd_candidates_cover_both_variants(self):
+        """The autotuner's search space carries *both* execution variants
+        of each backward op, every one walker-checked."""
+        shape = dict(H_O=12, W_O=12, F=3, S=1, P=1, d_in=8, d_out=16,
+                     in_bytes=4, batch=4, H_I=12, W_I=12)
+        dg = ConvDgradPlanner(TPU_V5E).candidates(**shape, pool=2)
+        assert {s.algorithm for s in dg} >= {"fused_epilogue", "direct"}
+        wg = ConvWgradPlanner(TPU_V5E).candidates(
+            **{k: v for k, v in shape.items() if k != "P"}, padding=1)
+        assert {s.algorithm for s in wg} >= {"pipelined", "direct"}
+        for sched in dg + wg:
+            self._pin_conv(sched, H_I=12, H_O=12, d_in=8, d_out=16, batch=4)
+
+    def test_fc_bwd_schedules_match_walker(self):
+        from repro.plan import get_op
+
+        rng = np.random.default_rng(35)
+        g, w, x = _rand(rng, (64, 1024)), _rand(rng, (512, 1024)), \
+            _rand(rng, (64, 512))
+        scheds = list(fc_plan_bwd(x.shape, w.shape).values())
+        scheds.append(get_op("matmul_dx").plan(g, w))       # direct variant
+        scheds.append(get_op("matmul_dw").plan(x, g))
+        for c in MatmulDxPlanner(TPU_V5E).candidates(m=64, n=1024, k=512,
+                                                     in_bytes=4):
+            scheds.append(c)
+        algs = {getattr(s, "algorithm", None) for s in scheds}
+        assert {"fused_dxdw", None} <= algs or {"fused_dxdw", "direct"} <= algs
+        for sched in scheds:
+            want = ccr.grid_steps(sched.grid)
+            assert want == sim.simulate_grid_steps(sched.grid)
+            assert sched.critical_path_steps == want, (sched.op,
+                                                       sched.algorithm)
 
 
 # ---------------------------------------------------------------------------
