@@ -25,6 +25,11 @@
                  executed on the 1-device mesh + the mesh-aware planner's
                  modeled HBM/ICI split for 4-way and the paper's quadrant
                  (BENCH_shard.json baseline)
+  transformer  - the transformer wing through the plan layer: one tiny
+                 planned train step (block GEMMs + flash attention +
+                 planned dX/dW) parity-asserted vs the XLA path, plus the
+                 quadrant's per-cell TP-vs-batch and MoE EP-vs-batch word
+                 accounting (BENCH_tfm.json baseline)
   serve        - the serving engine under seeded Poisson load at three
                  offered-QPS levels on a virtual clock: p50/p99 latency +
                  throughput report-only, deterministic dispatched-token
@@ -545,6 +550,99 @@ def bench_fc_sharded(write_baseline: bool = False):
     return rows
 
 
+def bench_transformer(write_baseline: bool = False):
+    """The transformer wing through the plan layer (DESIGN.md Sec. 11).
+
+    Executes one tiny planned transformer loss+grad step — every block
+    GEMM through the planned fc_layer, attention through the planned
+    flash kernel, planned dX/dW backward — parity-asserted against the
+    XLA reference path, then reports the plan layer's *model* of the
+    paper's quadrant next to it: the block planner's per-cell picks, the
+    TP-vs-batch matmul trade at the small-m block shape, and the MoE
+    FFN's EP-vs-batch all-to-all trade.  Every word count gates against
+    BENCH_tfm.json.
+    """
+    import dataclasses
+
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import smoke_config
+    from repro.core.machine import MANTICORE
+    from repro.models import transformer as tf
+    from repro.models.module import init_params
+    from repro.plan import (
+        MatmulPlanner, MeshSpec, MoeFfnPlanner, TransformerBlockPlanner,
+    )
+    from repro.runtime import train as tr
+
+    cfg = smoke_config("qwen1.5-0.5b")
+    cfg = dataclasses.replace(
+        cfg, family="transformer", n_layers=2, d_model=64, vocab=128,
+        d_ff=128, n_heads=4, n_kv_heads=4, head_dim=16)
+    tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                       planned_kernels=True, loss_chunks=2, total_steps=2)
+    params = init_params(tf.param_defs(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    B, S = 2, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                     cfg.vocab),
+    }
+    grad_p = jax.jit(jax.value_and_grad(tr.make_loss_fn(cfg, tcfg)))
+    grad_x = jax.jit(jax.value_and_grad(tr.make_loss_fn(
+        cfg, dataclasses.replace(tcfg, planned_kernels=False))))
+    lp, gp = grad_p(params, batch)
+    lx, gx = grad_x(params, batch)
+    assert abs(float(lp) - float(lx)) < 1e-4, "planned loss diverges"
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gx)))
+    assert err < 1e-2, f"planned transformer grads diverge ({err})"
+    t_p = _time(lambda: grad_p(params, batch), iters=1)
+    t_x = _time(lambda: grad_x(params, batch), iters=1)
+    sched = tf.plan_training(cfg, B, S, loss_chunks=tcfg.loss_chunks)
+    step_words = sum(s.modeled_words for s in sched.values())
+    rows = [("tfm_train_step_planned", t_p,
+             f"xla_us={t_x:.1f};maxerr={err:.1e};cells={len(sched)};"
+             f"modeled_step_words={step_words}")]
+
+    # The paper quadrant: the block planner's per-cell argmin — each cell
+    # delegated to its family planner (matmul/attention), every count a
+    # ShardedSchedule's ccr closed form (walker-pinned in tests).
+    quad = MeshSpec((("cluster", 16),))
+    tb = TransformerBlockPlanner(MANTICORE, quad, "cluster")
+    picks = tb.plan(batch=4, seq=128, d_model=256, n_heads=8, d_ff=1024,
+                    vocab=1024, in_bytes=4)
+    parts = []
+    for name, s in picks.items():
+        strat = getattr(s, "strategy", "single")
+        ici = getattr(s, "ici_words", 0)
+        parts.append(f"{name}={strat};{name}_words={s.modeled_words};"
+                     f"{name}_ici_words={ici}")
+    rows.append(("tfm_quadrant_block", 0.0, ";".join(parts)))
+
+    # TP-vs-batch at the small-m decode-ish matmul (megatron column split
+    # pays one activation all-gather; batch replicates the whole W), and
+    # EP-vs-batch for the MoE FFN (EP pays the top_k all-to-all; batch
+    # replicates every expert's weights).
+    mm = MatmulPlanner(MANTICORE, quad, "cluster")
+    mc = {c.strategy: c for c in mm.candidates(m=16, n=4096, k=4096,
+                                               in_bytes=4)}
+    moe = MoeFfnPlanner(MANTICORE, quad, "cluster")
+    ec = {c.strategy: c for c in moe.candidates(
+        tokens=4096, d_model=512, d_ff=2048, n_experts=16, top_k=2,
+        in_bytes=4)}
+    rows.append(("tfm_tp_ep_quadrant", 0.0,
+                 f"tp_words={mc['tp'].modeled_words};"
+                 f"tp_ici_words={mc['tp'].ici_words};"
+                 f"mm_batch_words={mc['batch'].modeled_words};"
+                 f"ep_words={ec['ep'].modeled_words};"
+                 f"ep_ici_words={ec['ep'].ici_words};"
+                 f"moe_batch_words={ec['batch'].modeled_words}"))
+    _write_baseline(rows, "BENCH_tfm.json", write_baseline)
+    return rows
+
+
 def bench_serve(write_baseline: bool = False):
     """The serving subsystem under offered load (DESIGN.md Sec. 8).
 
@@ -698,6 +796,7 @@ SECTIONS = {
     "conv_bwd": bench_conv_bwd,
     "fc_bwd": bench_fc_bwd,
     "fc_sharded": bench_fc_sharded,
+    "transformer": bench_transformer,
     "serve": bench_serve,
     "smoke": bench_smoke,
     "roofline": bench_roofline,
@@ -710,6 +809,7 @@ BASELINES = {
     "BENCH_fc.json": ("fc_matmul",),
     "BENCH_bwd.json": ("conv_bwd", "fc_bwd"),
     "BENCH_shard.json": ("fc_sharded",),
+    "BENCH_tfm.json": ("transformer",),
     "BENCH_serve.json": ("serve",),
 }
 

@@ -1,6 +1,9 @@
-"""Quickstart: the paper's layers + analysis in 60 lines.
+"""Quickstart: the paper's layers + analysis, plus both model families.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Full plan-layer lifecycle guide (Schedule -> Planner -> registry ->
+ShardedSchedule -> autotune cache): docs/plan-layer.md.
 """
 
 import sys
@@ -84,3 +87,23 @@ print("planned backward grads:", gx.shape, gf.shape,
       " dgrad words=", bwd["dgrad"].modeled_words,
       " wgrad words=", bwd["wgrad"].modeled_words,
       " both fit:", bwd["dgrad"].fits(TPU_V5E) and bwd["wgrad"].fits(TPU_V5E))
+
+# --- 5. Two model families through one registry ----------------------------
+# The family registry (models/registry.py, DESIGN.md Sec. 11.3) dispatches
+# params/data/loss/plans uniformly; the transformer block planner delegates
+# each cell to the matmul/attention planners the way the conv planner
+# delegates its im2col GEMM.  Train either family the same way:
+#   python -m repro.launch.train --family cnn --planned-kernels
+#   python -m repro.launch.train --family transformer --planned-kernels
+from repro.configs.registry import smoke_config
+from repro.models.module import count_params
+from repro.models.registry import get_family
+from repro.plan import MeshSpec, TransformerBlockPlanner
+
+cfg = smoke_config("qwen1.5-0.5b")
+fam = get_family("transformer")
+print(f"transformer family: {count_params(fam.param_defs(cfg))/1e6:.1f}M params")
+tb = TransformerBlockPlanner(MANTICORE, MeshSpec((("cluster", 16),)), "cluster")
+picks = tb.plan(batch=4, seq=128, d_model=256, n_heads=8, d_ff=1024, in_bytes=4)
+print("block plan on the 16-cluster quadrant:",
+      {name: getattr(s, "strategy", "single") for name, s in picks.items()})

@@ -5,6 +5,15 @@ prefill/decode schedules resolve once at warmup through the autotune
 cache — then drives it with Poisson traffic at an offered QPS and prints
 the latency/throughput/padding report plus a couple of token streams.
 
+The warmup resolves the transformer's *planned* cells (qkv/attn/mlp/
+logits per bucket rung) through the plan layer: the same
+``TransformerBlockPlanner`` delegation the training path uses
+(DESIGN.md Sec. 11, docs/plan-layer.md), with ``--autotune tune``
+measuring each cell's candidates and ``cache-only`` replaying the
+committed winners — a warmed engine never plans or times at request
+time.  Any registered family with ``init_cache_slots`` can serve;
+cache-less families (cnn) are rejected with a named ValueError.
+
 Install the package first (``pip install -e .`` from the repo root), or
 prefix with ``PYTHONPATH=src``:
 

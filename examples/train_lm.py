@@ -1,11 +1,19 @@
 """End-to-end LM training driver: data pipeline -> train loop -> sharded
 checkpoints -> resume, with heartbeats and straggler watchdog.
 
+With ``--planned-kernels`` the train step runs the planned transformer
+path (DESIGN.md Sec. 11, docs/plan-layer.md): every block GEMM through
+the planned ``fc_layer`` (fused QKV and gate+up), attention through the
+planned flash kernel, and the planned dX/dW backward — dispatched by the
+family's ``make_loss_fn`` hook, numerically equal to the XLA path (slow
+off-TPU: Pallas interpret mode).
+
 Install the package first (``pip install -e .`` from the repo root), or
 prefix with ``PYTHONPATH=src``:
 
     python examples/train_lm.py --steps 200             # ~10M model
     python examples/train_lm.py --preset 100m --steps 300
+    python examples/train_lm.py --steps 20 --planned-kernels
     # kill it mid-run, run again with the same --ckpt dir: it resumes.
 """
 
@@ -46,12 +54,16 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--planned-kernels", action="store_true",
+                    help="run the planned transformer path (block GEMMs, "
+                         "flash attention, planned dX/dW) instead of XLA")
     args = ap.parse_args()
 
     cfg = build_cfg(args.preset)
     tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
                        learning_rate=1e-3, warmup_steps=20,
-                       total_steps=args.steps, remat="none", loss_chunks=4)
+                       total_steps=args.steps, remat="none", loss_chunks=4,
+                       planned_kernels=args.planned_kernels)
     fam = get_family(cfg.family)
     defs = fam.param_defs(cfg)
     params = init_params(defs, jax.random.PRNGKey(tcfg.seed), jnp.float32)

@@ -2,7 +2,7 @@
 # Tier-1 verify (ROADMAP.md): full test suite from the repo root.
 # Usage: scripts/tier1.sh [--bench-smoke] [--grad-smoke] [--dist-smoke]
 #                         [--autotune-smoke] [--fault-smoke] [--serve-smoke]
-#                         [extra pytest args...]
+#                         [--transformer-smoke] [extra pytest args...]
 #   --bench-smoke     additionally run one tiny planner+kernel case per
 #                     registered op in interpret mode (benchmarks/run.py
 #                     smoke) plus the autotune smoke's cells: the
@@ -38,6 +38,12 @@
 #                     every winner cache-only — push a handful of ragged
 #                     requests through each and assert all complete with
 #                     identical tokens (python -m repro.serve --smoke)
+#   --transformer-smoke  run ONLY the transformer-wing gate and exit: the
+#                     TP/EP closed-form-vs-walker parity pins, the
+#                     quadrant picks, and the planned-vs-XLA train-step
+#                     parity (tests/test_transformer_plan.py), then one
+#                     tiny planned transformer train step through the
+#                     launcher (--family transformer --planned-kernels)
 # The default invocation runs the grad-smoke subset first, so backward
 # regressions fail fast before the full suite spins up.  The CI matrix
 # (.github/workflows/ci.yml) runs each stage as its own fast-fail job.
@@ -50,9 +56,11 @@ DIST_SMOKE_ONLY=0
 AUTOTUNE_SMOKE_ONLY=0
 FAULT_SMOKE_ONLY=0
 SERVE_SMOKE_ONLY=0
+TRANSFORMER_SMOKE_ONLY=0
 while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" \
         || "${1:-}" == "--dist-smoke" || "${1:-}" == "--autotune-smoke" \
-        || "${1:-}" == "--fault-smoke" || "${1:-}" == "--serve-smoke" ]]; do
+        || "${1:-}" == "--fault-smoke" || "${1:-}" == "--serve-smoke" \
+        || "${1:-}" == "--transformer-smoke" ]]; do
   case "$1" in
     --bench-smoke) BENCH_SMOKE=1 ;;
     --grad-smoke) GRAD_SMOKE_ONLY=1 ;;
@@ -60,6 +68,7 @@ while [[ "${1:-}" == "--bench-smoke" || "${1:-}" == "--grad-smoke" \
     --autotune-smoke) AUTOTUNE_SMOKE_ONLY=1 ;;
     --fault-smoke) FAULT_SMOKE_ONLY=1 ;;
     --serve-smoke) SERVE_SMOKE_ONLY=1 ;;
+    --transformer-smoke) TRANSFORMER_SMOKE_ONLY=1 ;;
   esac
   shift
 done
@@ -101,6 +110,19 @@ run_serve_smoke() {
     python -m repro.serve --smoke
 }
 
+run_transformer_smoke() {
+  # The transformer-wing gate: the TP/EP ShardedSchedule pins (every ccr
+  # closed form word-for-word against its executed schedule_sim walker),
+  # the MANTICORE quadrant picks, the family-registry error paths, and
+  # the planned-vs-XLA train-step parity — then one tiny planned
+  # transformer train step end to end through the family launcher.
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    tests/test_transformer_plan.py
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.launch.train \
+    --family transformer --planned-kernels --steps 2 --batch 2 --seq 32 \
+    --mesh 1x1
+}
+
 run_fault_smoke() {
   # The elastic-recovery gate: seeded chaos (kill-at-step-k in a forced
   # multi-device subprocess, corrupt chunk, non-finite loss) must recover
@@ -112,6 +134,11 @@ run_fault_smoke() {
 
 if [[ "$GRAD_SMOKE_ONLY" == 1 ]]; then
   run_grad_smoke
+  exit 0
+fi
+
+if [[ "$TRANSFORMER_SMOKE_ONLY" == 1 ]]; then
+  run_transformer_smoke
   exit 0
 fi
 

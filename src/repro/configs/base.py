@@ -88,9 +88,12 @@ class TrainConfig:
     seed: int = 0
     loss_chunks: int = 8  # chunked cross-entropy over tokens
     grad_compression: str = "none"  # none | int8_ef
-    # cnn family: run the planned Pallas kernels (forward AND the planned
-    # dgrad/wgrad/dX/dW backward) in the train step instead of the XLA
-    # reference path.  Slow in interpret mode off-TPU; the hot path on TPU.
+    # Run the family's planned Pallas kernels (forward AND planned
+    # backward) in the train step instead of the XLA reference path:
+    # cnn = fused conv + dgrad/wgrad + dX/dW matmul, transformer = every
+    # block GEMM + flash attention + dX/dW (the family's make_loss_fn
+    # hook owns the dispatch).  Slow in interpret mode off-TPU; the hot
+    # path on TPU.
     planned_kernels: bool = False
 
 

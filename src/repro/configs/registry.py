@@ -24,6 +24,18 @@ ARCH_IDS = [
 
 _MODULE_FOR = {a: a.replace("-", "_").replace(".", "p") for a in ARCH_IDS}
 
+# The reference arch per model family: what ``launch/train.py --family X``
+# trains when no --arch is named (always as the reduced smoke config).
+FAMILY_DEFAULT_ARCH = {
+    "dense": "qwen1.5-0.5b",
+    "transformer": "qwen1.5-0.5b",  # the planned wing's family name
+    "moe": "qwen3-moe-235b-a22b",
+    "rwkv6": "rwkv6-1.6b",
+    "zamba2": "zamba2-1.2b",
+    "encdec": "seamless-m4t-medium",
+    "cnn": "cnn-vgg11",
+}
+
 
 def get_config(arch: str) -> ModelConfig:
     if arch not in _MODULE_FOR:

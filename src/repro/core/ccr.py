@@ -492,6 +492,63 @@ def fc_psum_traffic(*, m: int, n: int, k: int, devices: int, block_m: int,
     )
 
 
+def tp_matmul_traffic(*, m: int, n: int, k: int, devices: int, block_m: int,
+                      block_n: int, block_k: int) -> Traffic:
+    """Megatron-style tensor-parallel matmul: W is column (N) sharded, X
+    replicated, so each device runs the blocked matmul on its [k, n/P]
+    weight columns and the private [m, n/P] activation shards all-gather
+    over the interconnect — (P - 1) * m * n words, the same count whether
+    the gather runs as a ring or a tree (``tree_reduce_words``).
+
+    The trade against "batch" data parallelism is weight words vs
+    activation words: batch re-streams the *full* weight per device
+    (P * k * n loads total) while TP streams each weight column once
+    (k * n total) but pays the activation gather — at small m (serving
+    decode, small microbatches) the weight term dominates and TP wins;
+    at large m batch parallelism's zero ici wins."""
+    if devices <= 0 or n % devices:
+        raise ValueError(
+            f"tp needs N divisible by the mesh: n={n}, devices={devices}")
+    local = matmul_block_traffic(m=m, n=n // devices, k=k, block_m=block_m,
+                                 block_n=block_n, block_k=block_k)
+    return Traffic(
+        macs=devices * local.macs,
+        main_loads=devices * local.main_loads,
+        main_stores=devices * local.main_stores,
+        intercluster=tree_reduce_words(devices, m * n),
+    )
+
+
+def moe_all_to_all_words(*, tokens: int, d_model: int, top_k: int,
+                         n_experts: int, devices: int) -> int:
+    """Expert-parallel MoE all-to-all interconnect words (dispatch +
+    return): each device owns ``tokens / P`` rows routed to ``top_k``
+    experts each; experts are sharded ``E / P`` per device, and with the
+    balanced slot-major dispatch (models/moe.py's capacity argsort) every
+    expert receives an equal share of each device's routed rows.  A row
+    bound for a remote expert crosses the interconnect twice — d_model
+    words out to the expert's device, d_model back after the FFN — and a
+    fraction (P - 1) / P of every device's routed rows are remote:
+
+        2 * d_model * top_k * (tokens / P) * (P - 1)
+
+    Pinned word-for-word against ``schedule_sim.simulate_moe_all_to_all``
+    (the literal per-device, per-expert dispatch walk)."""
+    if devices <= 0 or tokens % devices:
+        raise ValueError(f"ep needs tokens divisible by the mesh: "
+                         f"tokens={tokens}, devices={devices}")
+    if n_experts % devices:
+        raise ValueError(f"ep needs experts divisible by the mesh: "
+                         f"n_experts={n_experts}, devices={devices}")
+    t_loc = tokens // devices
+    if (t_loc * top_k) % n_experts:
+        raise ValueError(
+            f"balanced dispatch needs local routed rows divisible by the "
+            f"experts: tokens/P * top_k = {t_loc * top_k}, "
+            f"n_experts={n_experts}")
+    return 2 * d_model * top_k * t_loc * (devices - 1)
+
+
 def conv_sharded_traffic(s: ConvShape, stack: int, h_block: int, *,
                          devices: int, strategy: str = "batch",
                          batch: int = 1) -> Traffic:

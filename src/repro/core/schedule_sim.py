@@ -278,6 +278,63 @@ def simulate_fc_psum(*, m: int, n: int, k: int, devices: int, block_m: int,
                    main_stores=devices * t.main_stores, intercluster=inter)
 
 
+def simulate_tp_matmul(*, m: int, n: int, k: int, devices: int, block_m: int,
+                       block_n: int, block_k: int) -> Traffic:
+    """Walk the tensor-parallel (megatron column-split) matmul device by
+    device: each device runs the blocked-matmul grid on its [k, n/P]
+    weight columns (simulate_matmul_blocks), then ring-all-gathers its
+    private [m, n/P] activation shard — P - 1 hops per device, each
+    moving the m * n/P shard.  == ccr.tp_matmul_traffic (the gather's
+    total (P-1) * m * n words match the tree form exactly)."""
+    if devices <= 0 or n % devices:  # as ccr.tp_matmul_traffic
+        raise ValueError(
+            f"tp needs N divisible by the mesh: n={n}, devices={devices}")
+    n_loc = n // devices
+    loads = stores = macs = inter = 0
+    for _dev in range(devices):
+        t = simulate_matmul_blocks(m, n_loc, k, block_m, block_n, block_k)
+        loads += t.main_loads
+        stores += t.main_stores
+        macs += t.macs
+        for _step in range(devices - 1):
+            inter += m * n_loc  # ppermute its shard around the ring
+    return Traffic(macs=macs, main_loads=loads, main_stores=stores,
+                   intercluster=inter)
+
+
+def simulate_moe_all_to_all(*, tokens: int, d_model: int, top_k: int,
+                            n_experts: int, devices: int) -> int:
+    """Walk the expert-parallel dispatch literally: for every device, for
+    every routed row (tokens/P rows * top_k routes, spread evenly over
+    the experts by the balanced slot-major dispatch), find the expert's
+    owner device (experts are contiguously sharded E/P per device, as in
+    models/moe.py's ``e_offset = axis_index * n_local``); a remote row
+    crosses the interconnect twice (d_model out, d_model back).
+    == ccr.moe_all_to_all_words."""
+    if devices <= 0 or tokens % devices:
+        raise ValueError(f"ep needs tokens divisible by the mesh: "
+                         f"tokens={tokens}, devices={devices}")
+    if n_experts % devices:
+        raise ValueError(f"ep needs experts divisible by the mesh: "
+                         f"n_experts={n_experts}, devices={devices}")
+    t_loc = tokens // devices
+    if (t_loc * top_k) % n_experts:
+        raise ValueError(
+            f"balanced dispatch needs local routed rows divisible by the "
+            f"experts: tokens/P * top_k = {t_loc * top_k}, "
+            f"n_experts={n_experts}")
+    rows_per_expert = t_loc * top_k // n_experts
+    e_local = n_experts // devices
+    inter = 0
+    for p in range(devices):
+        for e in range(n_experts):
+            owner = e // e_local
+            if owner != p:
+                for _row in range(rows_per_expert):
+                    inter += 2 * d_model  # dispatch out + FFN result back
+    return inter
+
+
 def simulate_sharded_conv_strip(s: ConvShape, stack: int, h_block: int, *,
                                 devices: int, strategy: str = "batch",
                                 batch: int = 1) -> Traffic:

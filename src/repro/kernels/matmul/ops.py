@@ -79,7 +79,11 @@ def _sharded_impl(x, w, *, schedule, mesh, out_dtype, interpret,
         reduction lowered to the collective);
       * "ring": Alg 3's ring reuse (core/ring.py) — the resident X shard
         permutes around the mesh axis while each device's full-K weight
-        columns stay put.
+        columns stay put;
+      * "batch" / "tp": the planned local layer per device — batch
+        shards M (X rows) with W replicated, tp (megatron column split)
+        shards N (W columns) with X replicated, the activation
+        all-gather charged by the planner riding on the output spec.
     """
     del block_m, block_n, block_k  # consumed by the planner
     *in_specs, out_spec = partition_specs(schedule)
@@ -101,7 +105,7 @@ def _sharded_impl(x, w, *, schedule, mesh, out_dtype, interpret,
         def fn(xl, wl):
             return ring_matmul_local(xl, wl, axis=axis).astype(out_dtype)
 
-    elif schedule.strategy == "batch":
+    elif schedule.strategy in ("batch", "tp"):
 
         def fn(xl, wl):
             from repro.core.fc_layer import fc_layer

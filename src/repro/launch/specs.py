@@ -131,13 +131,12 @@ def _batch_struct(cfg: ModelConfig, kind: str, seq: int, batch: int,
 def build_cell(arch: str, shape_name: str, ctx: ParallelCtx) -> Cell:
     cfg = get_config(arch)
     shp = get_shape(shape_name)
-    fam = get_family(cfg.family) if cfg.family != "cnn" else None
+    # Every family (cnn included) is registered, so params come through
+    # the registry uniformly — no family branching here.
+    fam = get_family(cfg.family)
     mesh = ctx.mesh
 
-    if cfg.family == "cnn":
-        defs = cnn.param_defs(cfg)
-    else:
-        defs = fam.param_defs(cfg)
+    defs = fam.param_defs(cfg)
     specs = param_specs(defs)
     counts = param_counts(cfg, defs)
 

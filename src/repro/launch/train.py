@@ -34,11 +34,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import TrainConfig
-from repro.configs.registry import get_config, smoke_config
-from repro.data.pipeline import ShardInfo, SyntheticImageSource, SyntheticSource
-from repro.models import cnn
+from repro.configs.registry import FAMILY_DEFAULT_ARCH, get_config, smoke_config
+from repro.data.pipeline import ShardInfo
 from repro.models.module import abstract_params, init_params, param_specs
-from repro.models.registry import batch_shard_specs, get_family
+from repro.models.registry import (
+    FAMILIES, batch_shard_specs, get_family, make_data_source,
+)
 from repro.optim import adamw
 from repro.runtime import train as tr
 from repro.runtime.chaos import ChaosConfig, ChaosMonkey
@@ -60,7 +61,14 @@ def parse_mesh(spec: str):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--family", default=None, choices=sorted(FAMILIES),
+                    help="train a model family's reference arch (reduced "
+                         "smoke config) instead of naming an --arch; the "
+                         "family-registry hooks provide params, data and "
+                         "loss, so e.g. '--family transformer "
+                         "--planned-kernels' trains the planned "
+                         "transformer wing exactly like '--family cnn'")
     ap.add_argument("--smoke", action="store_true", help="reduced config")
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--steps", type=int, default=100)
@@ -75,9 +83,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--grad-compression", default="none", choices=["none", "int8_ef"])
     ap.add_argument("--planned-kernels", action="store_true",
-                    help="cnn: run the planned Pallas forward AND backward "
-                         "kernels (dgrad/wgrad conv, dX/dW matmul) in the "
-                         "train step instead of the XLA reference path")
+                    help="run the family's planned Pallas forward AND "
+                         "backward kernels in the train step instead of "
+                         "the XLA reference path (cnn: fused conv + "
+                         "dgrad/wgrad + dX/dW matmul; transformer: every "
+                         "block GEMM + flash attention + dX/dW)")
     ap.add_argument("--autotune", default="off",
                     choices=["off", "cache-only", "tune"],
                     help="schedule resolution policy: cached measured-time "
@@ -109,7 +119,22 @@ def main() -> None:
         print(f"autotune: policy={args.autotune} "
               f"cache={at.get_cache().path} ({len(at.get_cache())} cells)")
 
+    if args.arch is None:
+        if args.family is None:
+            ap.error("one of --arch or --family is required")
+        args.arch = FAMILY_DEFAULT_ARCH[args.family]
+        args.smoke = True  # family mode trains the reduced reference config
+
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.family is not None:
+        if FAMILIES[args.family] is not FAMILIES[cfg.family]:
+            ap.error(f"--family {args.family} does not match arch "
+                     f"{args.arch} (family {cfg.family!r})")
+        # Address the family under the requested registry name (e.g.
+        # "transformer" aliases "dense") so every hook dispatch uses it.
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, family=args.family)
     tcfg = TrainConfig(
         param_dtype="float32", compute_dtype="float32" if args.smoke else "bfloat16",
         learning_rate=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
@@ -126,25 +151,19 @@ def main() -> None:
             "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)"
         )
 
-    # The cnn family (the paper's own domain) has no LM-style family
-    # module; its param_defs / forward live in models/cnn.py and the loss
-    # comes from runtime.train.make_loss_fn (planned Pallas fwd+bwd
-    # kernels under --planned-kernels).
-    defs = (cnn.param_defs(cfg) if cfg.family == "cnn"
-            else get_family(cfg.family).param_defs(cfg))
+    # Everything family-specific comes through the registry hooks
+    # (models/registry.py): params, data source, loss, batch sharding,
+    # planned schedules — the launcher never branches on the family name.
+    fam = get_family(cfg.family)
+    defs = fam.param_defs(cfg)
     aparams = abstract_params(defs, jnp.dtype(tcfg.param_dtype))
     n_params = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(aparams))
     print(f"params: {n_params/1e6:.1f}M | arch {cfg.name} "
           f"| {tcfg.compute_dtype} compute")
 
     # Data: one shard per data-parallel host group (single process here).
-    if cfg.family == "cnn":
-        source = SyntheticImageSource(cnn.IMG, cnn.IN_CH, cfg.vocab,
-                                      args.batch, ShardInfo(0, 1),
-                                      seed=tcfg.seed)
-    else:
-        source = SyntheticSource(cfg.vocab, args.seq, args.batch,
-                                 ShardInfo(0, 1), seed=tcfg.seed)
+    source = make_data_source(cfg, args.batch, args.seq, ShardInfo(0, 1),
+                              seed=tcfg.seed)
 
     def build(n_devices: int | None) -> tr.ElasticRun:
         """One incarnation of the run for a device count: mesh, sharded
@@ -194,17 +213,22 @@ def main() -> None:
                 state, start = restored, last + 1
                 print(f"resumed from step {last} ({args.ckpt})")
 
-        if cfg.family == "cnn" and use_sharding:
+        if use_sharding and hasattr(fam, "plan_training"):
             # Re-plan the full schedule set against THIS mesh: the
             # mesh-aware planners' model of the run (the ring/psum argmin
             # can flip at the new device count).  A degraded (recovery)
             # build resolves autotune cache-only — never measure while
             # recovering; a cache miss falls back to the modeled argmin.
+            # The hook signature is uniform across families (cnn ignores
+            # the token axes; the transformer sizes its logits cell off
+            # them) — docs/plan-layer.md.
             from repro.plan import validate_sharded_plan
             from repro.plan.autotune import recovery_policy
 
             tune = recovery_policy(args.autotune) if degraded else args.autotune
-            splan = cnn.plan_training(cfg, args.batch, mesh=ctx.plan_mesh(),
+            splan = fam.plan_training(cfg, args.batch, seq=args.seq,
+                                      loss_chunks=tcfg.loss_chunks,
+                                      mesh=ctx.plan_mesh(),
                                       shard_axis=dp_axes[-1], autotune=tune)
             validate_sharded_plan(splan, ctx.plan_mesh())
             hbm = sum(s.hbm_words for s in splan.values())

@@ -8,6 +8,7 @@ Config reuse: ``n_layers`` = conv stages, ``d_model`` = base channel width
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -65,6 +66,40 @@ def batch_shard_specs(dp) -> dict:
     emits for every conv stage (plan_forward(..., mesh=)) — so the
     launcher needs no family special-casing."""
     return {"images": P(dp, None, None, None), "labels": P(dp)}
+
+
+def data_source(cfg: ModelConfig, batch: int, shard, seed: int = 0):
+    """Family-registry hook (registry.make_data_source dispatches here):
+    this family trains on image/label batches, not token streams."""
+    from repro.data.pipeline import SyntheticImageSource
+
+    return SyntheticImageSource(IMG, IN_CH, cfg.vocab, batch, shard,
+                                seed=seed)
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg, parallel=None):
+    """Family-registry hook (runtime.train.make_loss_fn dispatches here):
+    image-classification cross-entropy over :func:`forward`.  Under
+    ``tcfg.planned_kernels`` the step runs the full planned set — fused
+    forward kernels plus the planned dgrad/wgrad/dX/dW backward kernels,
+    every Schedule pinned by :func:`plan_training` (cached per shape)."""
+    del parallel  # batch sharding rides on batch_shard_specs instead
+    dt = jnp.dtype(tcfg.compute_dtype)
+
+    def loss_fn(params, batch):
+        imgs = batch["images"].astype(dt)
+        if tcfg.planned_kernels:
+            out = forward(cfg, params, imgs, use_kernels=True,
+                          schedules=plan_training(cfg, imgs.shape[0],
+                                                  in_bytes=imgs.dtype.itemsize))
+        else:
+            out = forward(cfg, params, imgs, use_kernels=False)
+        out = out.astype(jnp.float32)
+        lse = jax.nn.logsumexp(out, -1)
+        tgt = jnp.take_along_axis(out, batch["labels"][:, None], -1)[:, 0]
+        return (lse - tgt).mean()
+
+    return loss_fn
 
 
 def _bwd_for(sched: dict, stage: str) -> dict | None:
@@ -154,7 +189,8 @@ def plan_forward(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
 
 def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
                   machine=None, mesh=None, shard_axis: str = "data",
-                  autotune=None, conv_algorithm=None) -> dict:
+                  autotune=None, conv_algorithm=None, seq=None,
+                  loss_chunks: int = 1) -> dict:
     """:func:`plan_forward` plus every backward kernel ``jax.grad`` runs:
     "<stage>.dgrad"/"<stage>.wgrad" for conv stages (the fused-epilogue
     backward — a "<stage>.recompute" entry appears only on ragged
@@ -165,7 +201,11 @@ def plan_training(cfg: ModelConfig, batch: int, *, in_bytes: int = 4,
     all-reduce (Alg 4's tree reduction) as ``ici_words`` — the modeled
     cost of data-parallel training, split HBM vs interconnect.  The
     backward stages resolve through the same ``autotune=`` policy.
+    ``seq``/``loss_chunks`` belong to the uniform family-hook signature
+    (token families size their logits cell with them); the image family
+    has no sequence axis or chunked logits head and ignores both.
     """
+    del seq, loss_chunks  # image batches: no token axes
     from repro.core import conv_layer as cl
     from repro.core import fc_layer as fl
 

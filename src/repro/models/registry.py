@@ -1,11 +1,24 @@
 """Model-family registry: family name -> module implementing
 param_defs / forward / logits / init_cache / layer_meta.
 
-The cnn family (the paper's own domain) is registered too: it implements
-the core protocol subset it needs (param_defs / forward) plus the
-family-registry hooks the launcher dispatches on — currently
-``batch_shard_specs`` (how the family's batch pytree shards over the data
-axes), the first step of making cnn fully first-class (ROADMAP)."""
+Beyond that core protocol, the launcher and the train runtime dispatch
+on *hooks* the family module may provide — no family branching at the
+call sites (docs/plan-layer.md spells out the contract):
+
+* ``batch_shard_specs(dp)`` — how the family's batch pytree shards over
+  the data axes (:func:`batch_shard_specs`; LM token default);
+* ``data_source(cfg, batch, shard, seed=)`` — the family's synthetic
+  data source (:func:`make_data_source`; token-stream default);
+* ``make_loss_fn(cfg, tcfg, parallel)`` — the family's training loss,
+  including its planned-kernel path (``runtime.train.make_loss_fn``
+  dispatches; generic forward + chunked-CE default);
+* ``plan_training(cfg, batch, *, seq=, loss_chunks=, mesh=, ...)`` — the
+  family's full planned schedule set (the launcher's sharded-plan
+  re-plan keys off its presence).
+
+The cnn family (the paper's own domain) and the dense ``transformer``
+family provide all four; ``transformer`` is also registered under its
+own name so ``--family transformer`` addresses it directly."""
 
 from __future__ import annotations
 
@@ -15,6 +28,7 @@ from repro.models import cnn, encdec, moe, rwkv6, transformer, zamba2
 
 FAMILIES = {
     "dense": transformer,
+    "transformer": transformer,  # the planned wing's first-class name
     "moe": moe,
     "rwkv6": rwkv6,
     "zamba2": zamba2,
@@ -58,3 +72,19 @@ def batch_shard_specs(cfg, dp) -> dict:
     if hook is not None:
         return hook(dp)
     return {k: P(dp, None) for k in ("tokens", "labels")}
+
+
+def make_data_source(cfg, batch: int, seq: int, shard, seed: int = 0):
+    """The family's synthetic data source.  Families provide a
+    ``data_source(cfg, batch, shard, seed=)`` hook (models/cnn.py does —
+    image/label batches); token families fall back to the LM default
+    (``SyntheticSource`` over ``cfg.vocab``, where ``seq`` applies).
+    launch/train.py dispatches here instead of branching on the family
+    name."""
+    fam = FAMILIES.get(cfg.family)
+    hook = getattr(fam, "data_source", None) if fam else None
+    if hook is not None:
+        return hook(cfg, batch, shard, seed=seed)
+    from repro.data.pipeline import SyntheticSource
+
+    return SyntheticSource(cfg.vocab, seq, batch, shard, seed=seed)

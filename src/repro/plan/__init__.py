@@ -21,8 +21,10 @@ from repro.plan.planners import (
     MatmulDwPlanner,
     MatmulDxPlanner,
     MatmulPlanner,
+    MoeFfnPlanner,
     Planner,
     ShardablePlanner,
+    TransformerBlockPlanner,
     conv_strip_words,
     conv_wgrad_words,
     planner_for,
@@ -64,6 +66,7 @@ __all__ = [
     "MatmulDxPlanner",
     "MatmulPlanner",
     "MeshSpec",
+    "MoeFfnPlanner",
     "PLANNERS",
     "PallasOp",
     "Planner",
@@ -71,6 +74,7 @@ __all__ = [
     "ShardCandidate",
     "ShardablePlanner",
     "ShardedSchedule",
+    "TransformerBlockPlanner",
     "conv_strip_words",
     "conv_wgrad_words",
     "default_interpret",

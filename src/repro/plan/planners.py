@@ -934,12 +934,19 @@ class MatmulPlanner(ShardablePlanner):
     MANTICORE (streams uncharged, lane 1) the same rule is exactly
     ``ccr.alg45_max_stack``: block_n <= 768 (sp) / 384 (dp) at batch 32.
 
-    On a mesh two multi-device dataflows compete: "psum" (Alg 4 — K
-    sharded, private partial outputs tree-reduced; ``ccr.fc_psum_traffic``)
-    and "ring" (Alg 3 — K-sharded X permuted around the ring while each
-    device keeps its full-K weight columns; ``ccr.ring_traffic``, every X
-    word loaded from main memory exactly once).  Fewest total modeled
-    words (HBM + ICI) wins; ``strategy=`` pins one.
+    On a mesh four multi-device dataflows compete: "batch" (data
+    parallelism over the rows — zero ici, but every device re-streams the
+    full weight), "psum" (Alg 4 — K sharded, private partial outputs
+    tree-reduced; ``ccr.fc_psum_traffic``), "ring" (Alg 3 — K-sharded X
+    permuted around the ring while each device keeps its full-K weight
+    columns; ``ccr.ring_traffic``, every X word loaded from main memory
+    exactly once) and "tp" (megatron-style tensor parallelism — W column
+    (N) sharded with X replicated, the private activation shards
+    all-gathered as ici words; ``ccr.tp_matmul_traffic``).  The tp-vs-
+    batch trade is weight words against activation words: at small m the
+    full-weight re-stream dominates and tp wins, at large m batch's zero
+    ici wins.  Fewest total modeled words (HBM + ICI) wins;
+    ``strategy=`` pins one.
     """
 
     op: ClassVar[str] = "matmul"
@@ -975,6 +982,11 @@ class MatmulPlanner(ShardablePlanner):
                 ici_words=ring.intercluster,
                 hbm_override=(ring.main_loads, ring.main_stores),
                 macs_override=ring.macs))
+        if group > 1 and n % group == 0:  # megatron column split
+            cands.append(ShardCandidate(
+                "tp", {"n": n // group},
+                ((None, None), (None, ax), (None, ax)),
+                ici_words=ccr.tree_reduce_words(group, m * n)))
         return cands or [ShardCandidate("single", {}, (rep2, rep2, rep2))]
 
     def plan_local(
@@ -1302,6 +1314,187 @@ class AttentionPlanner(ShardablePlanner):
         return out
 
 
+# ---------------------------------------------------------------------------
+# MoE expert FFN (the expert-parallel wing)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeFfnPlanner(ShardablePlanner):
+    """Plans the MoE expert-FFN block: E experts, each a two-GEMM FFN on
+    its capacity rows.
+
+    The capacity-factor dispatch of models/moe.py fixes each expert's row
+    count at ``cap = ceil(top_k * tokens / n_experts * capacity_factor)``
+    (the balanced slot-major argsort), so the local schedule is E
+    repetitions of two delegated :class:`MatmulPlanner` GEMMs — up
+    ``[cap, d_model] @ [d_model, d_ff]`` and down ``[cap, d_ff] @
+    [d_ff, d_model]`` — the compound-planner pattern again.
+
+    On a mesh two partitionings compete: "batch" (tokens sharded, experts
+    replicated — every device re-streams *all* E experts' weights on its
+    token shard, zero ici) and "ep" (expert parallelism — experts sharded
+    E/P per device, weights streamed once, the routed rows crossing the
+    interconnect twice as the all-to-all; ``ccr.moe_all_to_all_words``,
+    pinned against the executed dispatch walker).  The trade mirrors
+    tp-vs-batch: expert *weight* words against routed *activation* words.
+    """
+
+    op: ClassVar[str] = "moe_ffn"
+
+    @staticmethod
+    def expert_capacity(tokens: int, n_experts: int, top_k: int,
+                        capacity_factor: float) -> int:
+        """Rows per expert under the balanced capacity dispatch — the
+        models/moe.py formula verbatim."""
+        import math as _math
+        return max(1, _math.ceil(top_k * tokens / n_experts
+                                 * capacity_factor))
+
+    def _shard_candidates(self, group: int, *, tokens: int, n_experts: int,
+                          d_model: int, top_k: int = 2,
+                          **shape) -> list[ShardCandidate]:
+        del shape
+        ax = self.shard_axis
+        rep2, rep3 = (None, None), (None, None, None)
+        cands = []
+        if group > 1 and tokens % group == 0:
+            cands.append(ShardCandidate(
+                "batch", {"tokens": tokens // group},
+                ((ax, None), rep3, (ax, None))))
+        if (group > 1 and tokens % group == 0 and n_experts % group == 0
+                and (tokens // group * top_k) % n_experts == 0):
+            cands.append(ShardCandidate(
+                "ep", {"tokens": tokens // group,
+                       "n_experts": n_experts // group},
+                ((ax, None), (ax, None, None), (ax, None)),
+                ici_words=ccr.moe_all_to_all_words(
+                    tokens=tokens, d_model=d_model, top_k=top_k,
+                    n_experts=n_experts, devices=group)))
+        return cands or [ShardCandidate("single", {}, (rep2, rep3, rep2))]
+
+    def plan_local(
+        self, *, tokens: int, d_model: int, d_ff: int, n_experts: int,
+        top_k: int = 2, capacity_factor: float = 1.0, in_bytes: int = 4,
+        block_m: int | None = None, block_n: int | None = None,
+        block_k: int | None = None,
+    ) -> Schedule:
+        cap = self.expert_capacity(tokens, n_experts, top_k,
+                                   capacity_factor)
+        mm = MatmulPlanner(self.machine)
+        up = mm.plan_local(m=cap, n=d_ff, k=d_model, in_bytes=in_bytes,
+                           block_m=block_m, block_n=block_n,
+                           block_k=block_k)
+        down = mm.plan_local(m=cap, n=d_model, k=d_ff, in_bytes=in_bytes,
+                             block_m=block_m, block_n=block_n,
+                             block_k=block_k)
+        # The expert loop wraps both GEMMs back-to-back with one shared
+        # pipeline fill; the grid records the up GEMM's walk under the
+        # expert dimension (the down GEMM's steps ride the critical path).
+        grid = (n_experts,) + up.grid
+        steps = 1 + n_experts * ((ccr.grid_steps(up.grid) - 1)
+                                 + (ccr.grid_steps(down.grid) - 1))
+        return Schedule(
+            op=self.op,
+            grid=grid,
+            blocks=up.blocks,
+            halo=0,
+            macs=n_experts * (up.macs + down.macs),
+            loads=n_experts * (up.loads + down.loads),
+            stores=n_experts * (up.stores + down.stores),
+            vmem_bytes=max(up.vmem_bytes, down.vmem_bytes),
+            machine=self.machine.name,
+            critical_path_steps=steps,
+        )
+
+    def local_candidates(self, **shape) -> list[Schedule]:
+        """Halving ladder over block_n — the delegated GEMMs' Delta_O
+        output stack."""
+        return self._ladder_candidates("block_n", self.machine.lane, **shape)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (compound planner: the whole wing through delegation)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerBlockPlanner(ShardablePlanner):
+    """Plans a transformer block as a dict of delegated cells — the
+    compound-planner pattern of :class:`Im2colConvPlanner`, one level up.
+
+    Every matmul cell (qkv projection, attention output projection, the
+    gate+up and down MLP GEMMs, the tied logits head) delegates to
+    :class:`MatmulPlanner` on its ``[tokens, k] @ [k, n]`` shape; the
+    attention cell delegates to :class:`AttentionPlanner`; with
+    ``n_experts > 0`` the MLP cells are replaced by one
+    :class:`MoeFfnPlanner` cell.  Mesh, shard axis and a ``strategy=`` pin
+    pass straight through to the sub-planners, so on a mesh every cell is
+    its own ShardedSchedule argmin (tp vs batch vs psum/ring for the
+    GEMMs, ep vs batch for the MoE FFN) — the paper's joint
+    algorithm-and-partitioning choice, per cell.
+
+    ``plan()`` returns ``{cell_name: (Sharded)Schedule}`` keyed the way
+    ``models/transformer.py`` consumes them (qkv/attn/wo/mlp_up/mlp_down
+    [+ logits, or moe]), mirroring ``cnn.plan_forward``'s stage dict.
+    """
+
+    op: ClassVar[str] = "transformer_block"
+
+    def cell_planners(self, *, batch: int, seq: int, d_model: int,
+                       n_heads: int, d_ff: int, n_kv_heads: int | None = None,
+                       vocab: int = 0, n_experts: int = 0, top_k: int = 2,
+                       capacity_factor: float = 1.0, in_bytes: int = 4,
+                       causal: bool = True) -> dict[str, tuple]:
+        """(planner, shape-kwargs) per cell — the delegation table."""
+        hq = n_heads
+        hkv = n_kv_heads or n_heads
+        dh = d_model // hq
+        m = batch * seq
+        bind = dict(machine=self.machine, mesh=self.mesh,
+                    shard_axis=self.shard_axis, strategy=self.strategy)
+        mm = MatmulPlanner(**bind)
+        cells: dict[str, tuple] = {
+            "qkv": (mm, dict(m=m, n=(hq + 2 * hkv) * dh, k=d_model,
+                             in_bytes=in_bytes)),
+            "attn": (AttentionPlanner(**bind),
+                     dict(seq_q=seq, seq_kv=seq, head_dim=dh,
+                          n_q_heads=hq, n_kv_heads=hkv, batch=batch,
+                          in_bytes=in_bytes, causal=causal)),
+            "wo": (mm, dict(m=m, n=d_model, k=hq * dh, in_bytes=in_bytes)),
+        }
+        if n_experts:
+            cells["moe"] = (MoeFfnPlanner(**bind),
+                            dict(tokens=m, d_model=d_model, d_ff=d_ff,
+                                 n_experts=n_experts, top_k=top_k,
+                                 capacity_factor=capacity_factor,
+                                 in_bytes=in_bytes))
+        else:
+            # gate and up share one fused GEMM (models/layers.py computes
+            # both projections of the gated MLP from the same x stream).
+            cells["mlp_up"] = (mm, dict(m=m, n=2 * d_ff, k=d_model,
+                                        in_bytes=in_bytes))
+            cells["mlp_down"] = (mm, dict(m=m, n=d_model, k=d_ff,
+                                          in_bytes=in_bytes))
+        if vocab:
+            cells["logits"] = (mm, dict(m=m, n=vocab, k=d_model,
+                                        in_bytes=in_bytes))
+        return cells
+
+    def plan(self, **shape) -> dict:
+        return {name: planner.plan(**kw)
+                for name, (planner, kw)
+                in self.cell_planners(**shape).items()}
+
+    def candidates(self, **shape) -> dict:
+        """Per-cell candidate enumeration: ``{cell: [ranked candidates]}``
+        — each cell's own argmin search space (the autotuner tunes cells
+        independently, exactly as it does conv stages)."""
+        return {name: planner.candidates(**kw)
+                for name, (planner, kw)
+                in self.cell_planners(**shape).items()}
+
+
 PLANNERS: dict[str, type] = {
     ConvPlanner.op: ConvPlanner,
     Im2colConvPlanner.op: Im2colConvPlanner,
@@ -1311,6 +1504,8 @@ PLANNERS: dict[str, type] = {
     MatmulDxPlanner.op: MatmulDxPlanner,
     MatmulDwPlanner.op: MatmulDwPlanner,
     AttentionPlanner.op: AttentionPlanner,
+    MoeFfnPlanner.op: MoeFfnPlanner,
+    TransformerBlockPlanner.op: TransformerBlockPlanner,
 }
 
 

@@ -150,7 +150,7 @@ class ShardedSchedule:
     schedule: Schedule  # the per-device local schedule
     mesh: MeshSpec
     axis: str  # the partitioned mesh axis ("model", "data", ...)
-    strategy: str  # "single" | "batch" | "stack" | "psum" | "ring"
+    strategy: str  # "single" | "batch" | "stack" | "psum" | "ring" | "tp" | "ep"
     partition: Partition
     hbm_loads: int  # shard-group-total main-memory words loaded
     hbm_stores: int  # shard-group-total main-memory words stored
@@ -230,14 +230,41 @@ def partition_specs(sharded: ShardedSchedule):
     return tuple(P(*entry) for entry in sharded.partition)
 
 
+# Schedule-key stems per model family (the part before any ".dx"/".dw"
+# backward suffix).  A plan set must come from ONE family's plan_training:
+# mixing, say, a cnn "conv1" with a transformer "qkv" means two re-plans
+# were spliced together and neither family's forward will find its stages.
+_FAMILY_STEMS: dict[str, tuple[str, ...]] = {
+    "cnn": ("conv", "fc"),
+    "transformer": ("qkv", "attn", "wo", "mlp_up", "mlp_down", "logits",
+                    "moe"),
+}
+
+
+def _stem_family(key: str) -> str | None:
+    stem = key.split(".")[0]
+    for fam, prefixes in _FAMILY_STEMS.items():
+        if any(stem == p or (stem.startswith(p) and stem[len(p):].isdigit())
+               for p in prefixes):
+            return fam
+    return None
+
+
 def validate_sharded_plan(schedules: dict, mesh, machine: MachineModel | None = None) -> int:
     """Assert a plan set (e.g. ``cnn.plan_training(mesh=...)``) is valid
     for ``mesh`` — the recovery gate after an elastic re-mesh: every entry
     is a ShardedSchedule planned against exactly this MeshSpec, its
     partitioned axis exists, and (with ``machine``) its per-device working
-    set fits.  Raises ValueError naming the offending stage; returns the
-    number of schedules checked."""
+    set fits.  Schedule keys must all belong to one model family's stage
+    namespace (cnn conv*/fc* vs transformer qkv/attn/...): a mixed set is
+    two spliced re-plans, not a plan.  Raises ValueError naming the
+    offending stage; returns the number of schedules checked."""
     ms = mesh_spec(mesh)
+    families = {f for f in map(_stem_family, schedules) if f is not None}
+    if len(families) > 1:
+        raise ValueError(
+            f"mixed-family schedule keys {sorted(schedules)}: stages from "
+            f"{sorted(families)} cannot share one plan set")
     for name, s in schedules.items():
         if not isinstance(s, ShardedSchedule):
             raise ValueError(

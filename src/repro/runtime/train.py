@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.models import cnn
 from repro.models.registry import get_family
 from repro.optim import adamw
 from repro.optim.compression import compress_tree, init_error_buffers
@@ -39,9 +38,12 @@ jax.tree_util.register_dataclass(
 
 
 def chunked_ce(cfg: ModelConfig, fam, params, hidden, labels, n_chunks: int,
-               parallel=None):
+               parallel=None, schedules: dict | None = None):
     """Cross-entropy without materializing [B, S, vocab]: scan over token
-    chunks; labels < 0 are masked."""
+    chunks; labels < 0 are masked.  ``schedules`` (a planned-kernel
+    schedule set with a "logits" entry, e.g. ``transformer.plan_training``)
+    routes the per-chunk logits GEMM through the family's planned head —
+    the plan layer sized that cell at exactly this chunk M."""
     from repro.runtime.parallel import constrain
 
     B, S, d = hidden.shape
@@ -52,10 +54,11 @@ def chunked_ce(cfg: ModelConfig, fam, params, hidden, labels, n_chunks: int,
     ls = labels.reshape(B, n, S // n).transpose(1, 0, 2)
     hs = constrain(hs, parallel, (None, "dp", None, None))
     ls = constrain(ls, parallel, (None, "dp", None))
+    lkw = {"schedules": schedules} if schedules else {}
 
     def step(carry, xs):
         h, lab = xs
-        logits = fam.logits(cfg, params, h).astype(jnp.float32)
+        logits = fam.logits(cfg, params, h, **lkw).astype(jnp.float32)
         logits = constrain(logits, parallel, ("dp", None, "tp?"))
         lse = jax.nn.logsumexp(logits, -1)
         tgt = jnp.take_along_axis(logits, jnp.maximum(lab, 0)[..., None], -1)[..., 0]
@@ -68,30 +71,18 @@ def chunked_ce(cfg: ModelConfig, fam, params, hidden, labels, n_chunks: int,
 
 
 def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, parallel=None):
-    dt = jnp.dtype(tcfg.compute_dtype)
-
-    if cfg.family == "cnn":
-
-        def loss_fn(params, batch):
-            imgs = batch["images"].astype(dt)
-            if tcfg.planned_kernels:
-                # The full planned training step: fused forward kernels plus
-                # the planned dgrad/wgrad/dX/dW backward kernels, every
-                # Schedule pinned by plan_training (cached per shape).
-                logits = cnn.forward(
-                    cfg, params, imgs, use_kernels=True,
-                    schedules=cnn.plan_training(cfg, imgs.shape[0],
-                                                in_bytes=imgs.dtype.itemsize))
-            else:
-                logits = cnn.forward(cfg, params, imgs, use_kernels=False)
-            logits = logits.astype(jnp.float32)
-            lse = jax.nn.logsumexp(logits, -1)
-            tgt = jnp.take_along_axis(logits, batch["labels"][:, None], -1)[:, 0]
-            return (lse - tgt).mean()
-
-        return loss_fn
-
+    """The family registry owns the loss: a family providing a
+    ``make_loss_fn(cfg, tcfg, parallel)`` hook (cnn's image
+    cross-entropy with planned conv/FC kernels, the dense transformer's
+    planned-GEMM chunked CE) builds it here; every other token family
+    falls back to the generic forward + chunked-CE composition below —
+    no family branching at this call site."""
     fam = get_family(cfg.family)
+    hook = getattr(fam, "make_loss_fn", None)
+    if hook is not None:
+        return hook(cfg, tcfg, parallel)
+
+    dt = jnp.dtype(tcfg.compute_dtype)
 
     def loss_fn(params, batch):
         extra = {"frames": batch["frames"].astype(dt)} if "frames" in batch else {}

@@ -1,0 +1,317 @@
+"""The transformer/MoE wing through the plan layer (DESIGN.md Sec. 11).
+
+Three pillars, mirroring the conv/FC tests one wing over:
+
+* the two new ShardedSchedule strategies — tensor-parallel ("tp",
+  megatron column split) and expert-parallel ("ep", MoE all-to-all) —
+  with their ccr closed forms pinned word-for-word against *executed*
+  schedule_sim walkers (the house rule) and the paper's 16-cluster
+  quadrant picks pinned with absolute word counts;
+* the TransformerBlockPlanner's delegation (matmul cells ->
+  MatmulPlanner, attention -> AttentionPlanner, MoE -> MoeFfnPlanner)
+  and the planned transformer train step it feeds (planned forward +
+  planned dX/dW backward == the XLA reference, to float tolerance);
+* the family-registry protocol's error paths: unknown family, a
+  cache-less family reaching serve, mixed-family schedule keys.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ccr
+from repro.core import schedule_sim as sim
+from repro.core.machine import MANTICORE
+from repro.plan import (
+    MatmulPlanner, MeshSpec, MoeFfnPlanner, TransformerBlockPlanner,
+    validate_sharded_plan,
+)
+
+QUAD16 = MeshSpec((("cluster", 16),))  # the paper's 4x4 quadrant
+
+FC_SMALL = dict(m=16, n=4096, k=4096, in_bytes=4)
+FC6 = dict(m=32, n=4096, k=25088, in_bytes=4)  # VGG FC6 at batch 32
+MOE = dict(tokens=4096, d_model=512, d_ff=2048, n_experts=16, top_k=2,
+           in_bytes=4)
+
+
+def _cand(planner, strategy, **shape):
+    c = [c for c in planner.candidates(**shape) if c.strategy == strategy]
+    assert c, f"no {strategy!r} candidate for {shape}"
+    return c[0]
+
+
+class TestTpClosedFormVsWalker:
+    """House rule: ccr.tp_matmul_traffic == the executed per-device
+    block walker + literal ring all-gather, on every count."""
+
+    @pytest.mark.parametrize("shape", [FC_SMALL, FC6])
+    @pytest.mark.parametrize("devices", [4, 16])
+    def test_modeled_equals_simulated(self, shape, devices):
+        loc = MatmulPlanner(MANTICORE).plan(
+            m=shape["m"], n=shape["n"] // devices, k=shape["k"],
+            in_bytes=shape["in_bytes"])
+        blocks = dict(block_m=loc.block("block_m"),
+                      block_n=loc.block("block_n"),
+                      block_k=loc.block("block_k"))
+        t = ccr.tp_matmul_traffic(m=shape["m"], n=shape["n"], k=shape["k"],
+                                  devices=devices, **blocks)
+        w = sim.simulate_tp_matmul(m=shape["m"], n=shape["n"], k=shape["k"],
+                                   devices=devices, **blocks)
+        assert t == w  # macs, loads, stores AND intercluster
+
+    def test_indivisible_n_rejected(self):
+        with pytest.raises(ValueError):
+            ccr.tp_matmul_traffic(m=8, n=100, k=64, devices=16,
+                                  block_m=8, block_n=128, block_k=64)
+        with pytest.raises(ValueError):
+            sim.simulate_tp_matmul(m=8, n=100, k=64, devices=16,
+                                   block_m=8, block_n=128, block_k=64)
+
+
+class TestEpClosedFormVsWalker:
+    """House rule for the MoE all-to-all: the closed form equals the
+    executed per-(device, expert, row) dispatch walker."""
+
+    @pytest.mark.parametrize("devices", [4, 8, 16])
+    def test_modeled_equals_simulated(self, devices):
+        kw = dict(tokens=4096, d_model=512, top_k=2, n_experts=16,
+                  devices=devices)
+        assert ccr.moe_all_to_all_words(**kw) == sim.simulate_moe_all_to_all(**kw)
+
+    def test_quadrant_words(self):
+        # tokens/P = 256 rows, each routed to top_k=2 experts; 15/16 of the
+        # slots live off-device and cross the wires twice (there and back):
+        # 2 * 512 * 2 * 256 * 15 = 7864320 words.
+        kw = dict(tokens=4096, d_model=512, top_k=2, n_experts=16, devices=16)
+        assert ccr.moe_all_to_all_words(**kw) == 7864320
+        assert sim.simulate_moe_all_to_all(**kw) == 7864320
+
+    def test_guards(self):
+        for bad in (dict(tokens=4095, d_model=8, top_k=2, n_experts=16,
+                         devices=16),        # tokens % devices
+                    dict(tokens=4096, d_model=8, top_k=2, n_experts=12,
+                         devices=16),        # n_experts % devices
+                    dict(tokens=64, d_model=8, top_k=3, n_experts=16,
+                         devices=16)):       # slots % n_experts
+            with pytest.raises(ValueError):
+                ccr.moe_all_to_all_words(**bad)
+            with pytest.raises(ValueError):
+                sim.simulate_moe_all_to_all(**bad)
+
+
+class TestQuadrantPicks:
+    """The paper's 16-cluster quadrant: absolute modeled word counts and
+    the planner's argmin, pinned."""
+
+    def test_tp_vs_batch_small_m(self):
+        """At small M the megatron trade is stark: batch re-streams the
+        full [K, N] weight per device (P * K * N dominates), tp streams
+        it once and pays only the (P-1)-step M*N/P activation ring."""
+        mm = MatmulPlanner(MANTICORE, QUAD16, "cluster")
+        tp = _cand(mm, "tp", **FC_SMALL)
+        batch = _cand(mm, "batch", **FC_SMALL)
+        assert tp.modeled_words == 18874368
+        assert (tp.hbm_words, tp.ici_words) == (17891328, 983040)
+        assert batch.modeled_words == 268632064
+        assert batch.ici_words == 0
+        assert tp.modeled_words < batch.modeled_words
+        # tp's ici charge IS the pinned tree/ring all-gather closed form.
+        assert tp.ici_words == ccr.tree_reduce_words(16, 16 * 4096)
+
+    def test_tp_partition(self):
+        tp = _cand(MatmulPlanner(MANTICORE, QUAD16, "cluster"), "tp",
+                   **FC_SMALL)
+        # x replicated; w and out column-sharded over the quadrant.
+        assert tp.partition == ((None, None), (None, "cluster"),
+                                (None, "cluster"))
+        # The local schedule is the per-device [m, n/P, k] plan.
+        assert tp.schedule == MatmulPlanner(MANTICORE).plan(
+            m=16, n=4096 // 16, k=4096, in_bytes=4)
+
+    def test_fc6_ring_still_wins(self):
+        """Adding tp must not flip FC6's recorded ring pick: ring reuses
+        the resident X shard (lower HBM) and its larger ici bill still
+        beats tp's weight-restream savings at this K."""
+        mm = MatmulPlanner(MANTICORE, QUAD16, "cluster")
+        ranked = {c.strategy: c.modeled_words for c in mm.candidates(**FC6)}
+        assert ranked["ring"] == 115736576
+        assert ranked["tp"] == 117702656
+        assert ranked["psum"] == 161611776
+        assert ranked["batch"] == 1645903872
+        assert mm.plan(**FC6).strategy == "ring"
+
+    def test_ep_vs_batch(self):
+        """MoE on the quadrant: ep streams each expert's FFN weights once
+        (E/P experts resident per device) and pays the all-to-all; batch
+        re-streams all E experts' weights on every device's token shard."""
+        mo = MoeFfnPlanner(MANTICORE, QUAD16, "cluster")
+        ep = _cand(mo, "ep", **MOE)
+        batch = _cand(mo, "batch", **MOE)
+        assert ep.modeled_words == 428212224
+        assert (ep.hbm_words, ep.ici_words) == (420347904, 7864320)
+        assert batch.modeled_words == 622854144
+        assert mo.plan(**MOE).strategy == "ep"
+        # tokens AND experts shard together; the all-to-all rides as ici.
+        assert ep.partition == (("cluster", None), ("cluster", None, None),
+                                ("cluster", None))
+
+    def test_block_planner_quadrant_picks(self):
+        """The whole block's per-cell joint algorithm-and-partitioning
+        argmin on the quadrant, pinned with its word counts."""
+        tb = TransformerBlockPlanner(MANTICORE, QUAD16, "cluster")
+        plans = tb.plan(batch=4, seq=128, d_model=256, n_heads=8,
+                        d_ff=1024, vocab=1024, in_bytes=4)
+        picks = {name: (getattr(s, "strategy", None), s.modeled_words)
+                 for name, s in plans.items()}
+        assert picks == {
+            "qkv": ("ring", 2686976),
+            "attn": ("single", 8388608),
+            "wo": ("batch", 1310720),
+            "mlp_up": ("ring", 3670016),
+            "mlp_down": ("batch", 4849664),
+            "logits": ("ring", 2883584),
+        }
+
+
+class TestBlockPlannerDelegation:
+    """The compound planner delegates exactly as Im2colConvPlanner does
+    its GEMM core: each cell is its sub-planner's own plan."""
+
+    SHAPE = dict(batch=2, seq=64, d_model=128, n_heads=4, d_ff=256,
+                 in_bytes=4)
+
+    def test_cells_match_delegated_planners(self):
+        tb = TransformerBlockPlanner(MANTICORE)
+        plans = tb.plan(**self.SHAPE)
+        assert set(plans) == {"qkv", "attn", "wo", "mlp_up", "mlp_down"}
+        mm = MatmulPlanner(MANTICORE)
+        m = 2 * 64
+        assert plans["qkv"] == mm.plan(m=m, n=3 * 128, k=128, in_bytes=4)
+        assert plans["mlp_up"] == mm.plan(m=m, n=2 * 256, k=128, in_bytes=4)
+        assert plans["attn"].op == "flash_attention"
+
+    def test_moe_replaces_mlp_cells(self):
+        tb = TransformerBlockPlanner(MANTICORE)
+        plans = tb.plan(**self.SHAPE, n_experts=8, top_k=2)
+        assert "moe" in plans and "mlp_up" not in plans
+        assert plans["moe"].op == "moe_ffn"
+
+    def test_candidates_are_per_cell(self):
+        tb = TransformerBlockPlanner(MANTICORE, QUAD16, "cluster")
+        cands = tb.candidates(**self.SHAPE)
+        assert set(cands) == {"qkv", "attn", "wo", "mlp_up", "mlp_down"}
+        strategies = {c.strategy for c in cands["qkv"]}
+        assert {"tp", "batch"} <= strategies
+
+
+class TestPlannedTransformerTraining:
+    """The planned train step: plan_training's schedule set drives the
+    fused-GEMM forward + planned dX/dW backward, numerically equal to the
+    XLA reference path."""
+
+    @staticmethod
+    def _cfg():
+        from repro.configs.registry import smoke_config
+
+        cfg = smoke_config("qwen1.5-0.5b")
+        return dataclasses.replace(
+            cfg, family="transformer", n_layers=2, d_model=64, vocab=128,
+            d_ff=128, n_heads=4, n_kv_heads=4, head_dim=16)
+
+    def test_plan_training_keys(self):
+        from repro.models import transformer as tf
+
+        cfg = self._cfg()
+        sched = tf.plan_training(cfg, 2, 32, loss_chunks=2)
+        cells = {"qkv", "attn", "wo", "mlp_up", "mlp_down", "logits"}
+        assert set(sched) == cells | {
+            f"{c}.{g}" for c in cells - {"attn"} for g in ("dx", "dw")}
+        # The logits cell is planned at chunked_ce's chunk M (B * S/n),
+        # not the full B*S token count.
+        from repro.core.machine import TPU_V5E
+
+        chunk_m = 2 * (32 // 2)
+        assert sched["logits"] == MatmulPlanner(TPU_V5E).plan(
+            m=chunk_m, n=cfg.vocab, k=cfg.d_model, in_bytes=4)
+
+    def test_planned_step_matches_xla(self):
+        from repro.configs.base import TrainConfig
+        from repro.models import transformer as tf
+        from repro.models.module import init_params
+        from repro.runtime import train as tr
+
+        cfg = self._cfg()
+        tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                           planned_kernels=True, loss_chunks=2,
+                           total_steps=2)
+        params = init_params(tf.param_defs(cfg), jax.random.PRNGKey(0),
+                             jnp.float32)
+        B, S = 2, 32
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                         cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                         cfg.vocab),
+        }
+        lp, gp = jax.value_and_grad(tr.make_loss_fn(cfg, tcfg))(params, batch)
+        lx, gx = jax.value_and_grad(tr.make_loss_fn(
+            cfg, dataclasses.replace(tcfg, planned_kernels=False)))(params,
+                                                                    batch)
+        assert abs(float(lp) - float(lx)) < 1e-4
+        err = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), gp, gx)
+        assert max(jax.tree.leaves(err)) < 1e-2
+
+    def test_planned_forward_rejects_per_layer_windows(self):
+        from repro.models import transformer as tf
+
+        cfg = dataclasses.replace(self._cfg(), local_window=16,
+                                  global_every=2)
+        params = jax.eval_shape(lambda: None)  # never reached
+        with pytest.raises(ValueError, match="global_every"):
+            tf._forward_planned(cfg, params,
+                                jnp.zeros((1, 8), jnp.int32), jnp.float32,
+                                None)
+
+
+class TestFamilyRegistryErrors:
+    def test_unknown_family_rejected(self):
+        from repro.models.registry import get_family
+
+        with pytest.raises(ValueError, match="unknown model family"):
+            get_family("no-such-family")
+
+    def test_launcher_rejects_unregistered_family(self, monkeypatch):
+        """--family is validated against the registry before anything
+        runs (argparse choices come straight from FAMILIES)."""
+        import sys
+
+        from repro.launch import train as lt
+
+        monkeypatch.setattr(sys, "argv",
+                            ["train", "--family", "no-such-family"])
+        with pytest.raises(SystemExit):
+            lt.main()
+
+    def test_cacheless_family_cannot_serve(self):
+        from repro.configs.registry import smoke_config
+        from repro.models.registry import init_cache_slots
+
+        cfg = smoke_config("cnn-vgg11")
+        with pytest.raises(ValueError, match="init_cache"):
+            init_cache_slots(cfg, 4, 128, jnp.bfloat16)
+
+    def test_mixed_family_plan_rejected(self):
+        from repro.models import transformer as tf
+
+        cfg = TestPlannedTransformerTraining._cfg()
+        splan = tf.plan_training(cfg, 2, 32, mesh=QUAD16,
+                                 shard_axis="cluster")
+        validate_sharded_plan(splan, QUAD16)  # pure-transformer: fine
+        conv = MatmulPlanner(MANTICORE, QUAD16, "cluster").plan(
+            m=32, n=64, k=64, in_bytes=4)
+        with pytest.raises(ValueError, match="mixed-family"):
+            validate_sharded_plan(dict(splan, **{"fc1": conv}), QUAD16)
